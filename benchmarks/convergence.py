@@ -1,0 +1,28 @@
+"""Figs. 3/17: utilization per autotuning round (Design D), 1K PEs."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import autotuner
+
+
+def run(n_pe: int = 1024, n_rounds: int = 10) -> list:
+    rows = []
+    print(f"\n== Fig. 17: utilization per autotuning round (D, {n_pe} PEs) ==")
+    for name in common.BENCH_SCALE:
+        t0 = time.time()
+        design = autotuner.designs_for(name)["D"]
+        rn = np.asarray(common.row_nnz_a(name), np.float64)
+        _, log = autotuner.run_autotuning(rn, n_pe, design,
+                                          n_rounds=n_rounds)
+        track = " ".join(f"{r.utilization:.2f}" for r in log)
+        conv_round = next((i for i, r in enumerate(log)
+                           if r.utilization >= 0.95 * log[-1].utilization),
+                          n_rounds)
+        print(f"{name:10s} {track}  (converged by round {conv_round})")
+        rows.append((f"convergence/{name}", (time.time() - t0) * 1e6,
+                     f"final={log[-1].utilization:.3f};round={conv_round}"))
+    return rows

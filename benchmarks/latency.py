@@ -1,0 +1,63 @@
+"""Tables III/IV: modeled AWB-GCN latency (cycles @ 330 MHz) vs a measured
+CPU software baseline (dense-JAX GCN standing in for PyG-CPU), plus the
+baseline accelerator without rebalancing."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import autotuner, csc as fmt, gcn
+
+FPGA_HZ = 330e6
+
+
+def _cpu_dense_ms(name: str, iters: int = 3) -> float:
+    """Measured software GCN forward (dense adjacency matmul, like a
+    no-sparse-support framework path) on this CPU."""
+    ds = common.dataset(name)
+    if ds.num_nodes > 40000:  # dense A would not fit; sparse software path
+        a = None
+    else:
+        a = jnp.asarray(np.asarray(fmt.coo_to_dense(ds.adj)))
+    x = jnp.asarray(ds.features)
+    cfg = gcn.GCNConfig(ds.num_features, ds.hidden, ds.num_classes)
+    params = gcn.init_params(cfg, jax.random.PRNGKey(0))
+
+    if a is not None:
+        f = jax.jit(lambda p, xx: a @ (jax.nn.relu(a @ (xx @ p["w0"]))
+                                       @ p["w1"]))
+    else:
+        f = jax.jit(lambda p, xx: gcn.forward(p, ds.adj, xx))
+    f(params, x).block_until_ready()
+    t0 = time.time()
+    for _ in range(iters):
+        out = f(params, x)
+    out.block_until_ready()
+    return (time.time() - t0) / iters * 1e3
+
+
+def run(n_pe: int = 4096) -> list:
+    rows = []
+    print(f"\n== Table III: latency model ({n_pe}-PE @330MHz) vs CPU ==")
+    print(f"{'dataset':10s} {'CPU ms':>10s} {'base ms':>10s} {'AWB ms':>10s}"
+          f" {'AWB/base':>9s} {'CPU/AWB':>9s}")
+    for name in common.BENCH_SCALE:
+        t0 = time.time()
+        designs = autotuner.designs_for(name)
+        base = common.pipeline_model(name, designs["baseline"], n_pe)
+        awb = common.pipeline_model(name, designs["D"], n_pe)
+        base_ms = base["latency_cycles"] / FPGA_HZ * 1e3
+        awb_ms = awb["latency_cycles"] / FPGA_HZ * 1e3
+        cpu_ms = _cpu_dense_ms(name)
+        print(f"{name:10s} {cpu_ms:10.2f} {base_ms:10.3f} {awb_ms:10.3f} "
+              f"{base_ms / awb_ms:8.2f}x {cpu_ms / awb_ms:8.0f}x")
+        rows.append((f"latency/{name}", (time.time() - t0) * 1e6,
+                     f"awb_ms={awb_ms:.3f};speedup_vs_base="
+                     f"{base_ms / awb_ms:.2f}x;vs_cpu={cpu_ms / awb_ms:.0f}x"))
+    print("(CPU column measures this container's dense-JAX GCN — the "
+          "PyG-CPU stand-in; scaled datasets noted in common.BENCH_SCALE)")
+    return rows

@@ -1,0 +1,59 @@
+"""§Roofline table: read the dry-run JSONs and print the per-cell 3-term
+roofline with dominant bottleneck and MODEL_FLOPS ratio."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from repro import configs as cfgs
+from repro.roofline import analysis as ra
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def _model_flops_global(rec) -> float:
+    seq, batch, kind = cfgs.SHAPES[rec["shape"]]
+    if kind == "decode":
+        tokens = batch  # one new token per sequence
+    else:
+        tokens = batch * seq
+    return ra.model_flops(rec.get("n_params", 0),
+                          rec.get("n_active_params", 0), tokens, kind)
+
+
+def run(mesh: str = "both") -> list:
+    if mesh == "both":
+        return _run_mesh("single") + _run_mesh("multi")
+    return _run_mesh(mesh)
+
+
+def _run_mesh(mesh: str) -> list:
+    rows = []
+    recs = []
+    for p in sorted(RESULTS.glob(f"*__{mesh}.json")) \
+            + sorted(RESULTS.glob(f"*__{mesh}__opt.json")):
+        recs.append(json.loads(p.read_text()))
+    oks = [r for r in recs if r.get("status") == "ok"]
+    print(f"\n== §Roofline: {len(oks)} ok cells ({mesh} mesh, "
+          f"{256 if mesh == 'single' else 512} chips) ==")
+    print(f"{'arch':22s} {'shape':16s} {'comp ms':>9s} {'memv2 ms':>9s} "
+          f"{'coll ms':>9s} {'dom':>10s} {'useful/HLO':>10s} "
+          f"{'mem GB':>7s}")
+    for r in oks:
+        t = r["roofline"]
+        mf = _model_flops_global(r)
+        hlo_global = r.get("flops_extrap", r.get("flops", 0)) * r["chips"]
+        ratio = mf / hlo_global if hlo_global else 0.0
+        shape = r["shape"] + ("+opt" if r.get("variant") == "opt" else "")
+        memv2 = t.get("memory_v2_s", t["memory_s"])
+        dom = max([("compute", t["compute_s"]), ("memory", memv2),
+                   ("collective", t["collective_s"])], key=lambda x: x[1])[0]
+        print(f"{r['arch']:22s} {shape:16s} "
+              f"{t['compute_s'] * 1e3:9.2f} {memv2 * 1e3:9.2f} "
+              f"{t['collective_s'] * 1e3:9.2f} {dom:>10s} "
+              f"{ratio:10.2f} {r.get('peak_bytes_est', 0) / 1e9:7.2f}")
+        rows.append((f"roofline/{r['arch']}/{shape}/{mesh}", 0.0,
+                     f"dom={dom};"
+                     f"fracv2={t.get('roofline_fraction_v2', 0):.3f}"))
+    return rows

@@ -1,0 +1,52 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only utilization,...]
+
+Prints human tables per benchmark, then the machine-readable
+``name,us_per_call,derived`` CSV block.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--pe", type=int, default=1024)
+    args = ap.parse_args()
+
+    from benchmarks import (convergence, latency, moe_imbalance, order_ops,
+                            roofline_table, scaling, schedule_tuning,
+                            schedule_util, utilization)
+
+    suites = {
+        "order_ops": order_ops.run,                    # Table II
+        "utilization": lambda: utilization.run(args.pe),  # Figs 14/15
+        "convergence": convergence.run,                # Figs 3/17
+        "scaling": scaling.run,                        # Fig 18
+        "latency": latency.run,                        # Tables III/IV
+        "schedule_util": schedule_util.run,            # TPU Fig-14 analogue
+        "schedule_tuning": schedule_tuning.run,        # kernel-param sweep
+        "moe_imbalance": moe_imbalance.run,            # beyond-paper (EP)
+        "roofline": roofline_table.run,                # §Roofline
+    }
+    only = [s for s in args.only.split(",") if s]
+    rows = []
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        try:
+            rows.extend(fn())
+        except Exception as e:  # keep the harness running
+            print(f"[{name}] FAILED: {type(e).__name__}: {e}")
+            rows.append((f"{name}/FAILED", 0.0, str(e)[:80]))
+
+    print("\n== CSV ==")
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

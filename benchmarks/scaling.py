@@ -1,0 +1,34 @@
+"""Fig. 18: PE scaling 512→4K — utilization and speedup vs 512-PE baseline
+for Baseline / Design B / Design D."""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+from repro.core import autotuner
+
+
+def run() -> list:
+    rows = []
+    pes = [512, 1024, 2048, 4096]
+    print("\n== Fig. 18: scalability (utilization | speedup vs 512 base) ==")
+    for name in common.BENCH_SCALE:
+        designs = autotuner.designs_for(name)
+        t0 = time.time()
+        base512 = common.pipeline_model(name, designs["baseline"], 512)
+        line = f"{name:10s}"
+        final = {}
+        for dn in ["baseline", "B", "D"]:
+            parts = []
+            for n_pe in pes:
+                m = common.pipeline_model(name, designs[dn], n_pe)
+                sp = base512["latency_cycles"] / m["latency_cycles"]
+                parts.append(f"{m['overall_util']:.2f}/{sp:.1f}x")
+                final[(dn, n_pe)] = sp
+            line += f"  {dn}: " + " ".join(parts)
+        print(line)
+        lin = final[("D", 4096)] / final[("D", 512)]
+        rows.append((f"scaling/{name}", (time.time() - t0) * 1e6,
+                     f"D_4k_speedup={final[('D', 4096)]:.1f}x;"
+                     f"scaling_512to4k={lin:.2f}x"))
+    return rows

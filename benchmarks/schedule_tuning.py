@@ -1,0 +1,54 @@
+"""Kernel-parameter hillclimb: sweep the AWB schedule's (nnz_per_step K,
+rows_per_window R) — the TPU analogue of the paper's PE-count/TQ-depth
+design-space exploration (Fig. 18). Reports slot utilization, issued
+steps, and the VMEM working set the kernel claims per step, and the best
+configuration per dataset.
+
+VMEM/step = K slots (val+idx) + R×ktile f32 accumulator + ktile gather
+row; the product of utilization × (1/steps) at a VMEM-feasible point is
+the figure of merit.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+from repro.core import schedule
+
+KTILE = 128
+VMEM_BUDGET = 8 * 2**20  # half of a v5e core's 16 MiB VMEM
+
+
+def vmem_per_step(k: int, r: int, ktile: int = KTILE) -> int:
+    slots = k * (4 + 4 + 4)           # val f32 + lrow i32 + lcol i32
+    acc = r * ktile * 4               # window accumulator f32
+    gather = ktile * 4
+    return slots + acc + gather
+
+
+def run() -> list:
+    rows = []
+    print("\n== AWB schedule (K, R) hillclimb per dataset ==")
+    for name in common.BENCH_SCALE:
+        ds = common.dataset(name)
+        t0 = time.time()
+        best = None
+        trail = []
+        for k in (64, 128, 256, 512):
+            for r in (16, 32, 64, 128):
+                if vmem_per_step(k, r) > VMEM_BUDGET:
+                    continue
+                s = schedule.build_balanced_schedule(ds.adj, k, r)
+                # figure of merit: issued MACs (lower = better); ties break
+                # toward higher utilization
+                fom = s.issued_slots
+                trail.append((k, r, s.utilization, s.n_steps))
+                if best is None or fom < best[0]:
+                    best = (fom, k, r, s.utilization, s.n_steps)
+        _, k, r, util, steps = best
+        print(f"{name:10s} best K={k:4d} R={r:4d} util={util:.1%} "
+              f"steps={steps:6d} vmem/step={vmem_per_step(k, r) / 2**20:.2f}"
+              f"MiB  ({time.time() - t0:.1f}s, {len(trail)} points)")
+        rows.append((f"schedule_tuning/{name}", (time.time() - t0) * 1e6,
+                     f"K={k};R={r};util={util:.3f}"))
+    return rows

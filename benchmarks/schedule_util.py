@@ -1,0 +1,35 @@
+"""TPU-side Fig. 14 analogue: issued-slot utilization of the static baseline
+vs AWB schedule per dataset, plus device-level balance (the shard_map
+story)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import profiler, schedule
+
+
+def run() -> list:
+    rows = []
+    print("\n== TPU schedules: slot utilization + device balance ==")
+    print(f"{'dataset':10s} {'naive':>8s} {'AWB':>8s} {'steps↓':>8s} "
+          f"{'dev-imb naive':>14s} {'dev-imb AWB':>12s} {'evil':>6s}")
+    for name in common.BENCH_SCALE:
+        t0 = time.time()
+        ds = common.dataset(name)
+        nv = schedule.build_naive_schedule(ds.adj, 256, 64)
+        bal = schedule.build_balanced_schedule(ds.adj, 256, 64)
+        n_dev = max(4, min(256, bal.n_steps // 8))
+        dev_naive = profiler.naive_device_loads(ds.adj, n_dev)
+        dev_bal = profiler.device_loads(bal, n_dev)
+        imb_n = dev_naive.max() / max(dev_naive.mean(), 1e-9)
+        imb_b = dev_bal.max() / max(dev_bal.mean(), 1e-9)
+        print(f"{name:10s} {nv.utilization:8.1%} {bal.utilization:8.1%} "
+              f"{nv.n_steps / bal.n_steps:7.2f}x {imb_n:13.2f}x "
+              f"{imb_b:11.3f}x {bal.n_evil_chunks:6d}  (n_dev={n_dev})")
+        rows.append((f"schedule/{name}", (time.time() - t0) * 1e6,
+                     f"awb_util={bal.utilization:.3f};"
+                     f"steps_ratio={nv.n_steps / bal.n_steps:.2f}"))
+    return rows

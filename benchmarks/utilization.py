@@ -1,0 +1,40 @@
+"""Figs. 14/15: end-to-end utilization + per-kernel cycle breakdown for the
+five designs (Baseline/A/B/C/D) over the five datasets, 1K PEs."""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+from repro.core import autotuner
+
+
+def run(n_pe: int = 1024) -> list:
+    rows = []
+    print(f"\n== Fig. 14: overall utilization & latency, {n_pe} PEs ==")
+    print(f"{'dataset':10s}" + "".join(f" {d:>10s}" for d in
+                                       ["baseline", "A", "B", "C", "D"])
+          + "   speedup(D/baseline)")
+    for name in common.BENCH_SCALE:
+        designs = autotuner.designs_for(name)
+        utils, lats = {}, {}
+        t0 = time.time()
+        for dn, cfg in designs.items():
+            m = common.pipeline_model(name, cfg, n_pe)
+            utils[dn] = m["overall_util"]
+            lats[dn] = m["latency_cycles"]
+        sp = lats["baseline"] / lats["D"]
+        print(f"{name:10s}" + "".join(f" {utils[d]:10.2%}" for d in utils)
+              + f"   {sp:.2f}x")
+        rows.append((f"utilization/{name}", (time.time() - t0) * 1e6,
+                     f"util_D={utils['D']:.3f};speedup={sp:.2f}x"))
+
+    print("\n== Fig. 15: per-SpMM-kernel cycles, baseline vs Design D ==")
+    for name in common.BENCH_SCALE:
+        designs = autotuner.designs_for(name)
+        base = common.pipeline_model(name, designs["baseline"], n_pe)
+        dd = common.pipeline_model(name, designs["D"], n_pe)
+        parts = " | ".join(
+            f"{b['kernel']}: {b['cycles']:.0f}->{d['cycles']:.0f}"
+            for b, d in zip(base["kernels"], dd["kernels"]))
+        print(f"{name:10s} {parts}")
+    return rows

@@ -1,0 +1,60 @@
+"""Quickstart: AWB-GCN's workload rebalancing on a power-law graph.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a synthetic Cora-statistics graph, profiles its power-law imbalance,
+converges the per-round autotuner (paper §IV / Fig. 17), builds the static
+baseline vs AWB-balanced schedules, and runs the Pallas SpMM kernel
+(interpret mode on CPU) against the pure-jnp oracle.
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import autotuner, profiler, schedule, spmm
+from repro.graphs import synth
+from repro.kernels import spmm_pallas
+
+def main():
+    ds = synth.make_dataset("cora", scale=2)
+    prof = profiler.profile_matrix(ds.adj, "cora/2")
+    print(f"graph: {prof.shape[0]} nodes, {prof.nnz} nnz, "
+          f"density {prof.density:.2%}")
+    print(f"row nnz: mean {prof.row_nnz_mean:.1f}, p99 {prof.row_nnz_p99:.0f},"
+          f" max {prof.row_nnz_max} | gini {prof.gini:.2f} | "
+          f"{prof.evil_rows} evil rows hold {prof.evil_share:.0%} of work")
+
+    # --- the paper's iterative autotuner (Fig. 17) -----------------------
+    row_nnz = np.asarray(
+        np.bincount(np.asarray(ds.adj.row), minlength=ds.num_nodes),
+        np.float64)
+    print("\nautotuning utilization per round (1024 PEs):")
+    for name, cfg in autotuner.designs_for("cora").items():
+        util, log = autotuner.converged_utilization(row_nnz, 1024, cfg)
+        trail = " ".join(f"{r.utilization:.2f}" for r in log[:6])
+        print(f"  design {name:8s}: {trail} -> {util:.2f}")
+
+    # --- static schedules: baseline vs AWB (TPU realization) -------------
+    naive = schedule.build_naive_schedule(ds.adj, 128, 64)
+    awb = schedule.build_balanced_schedule(ds.adj, 128, 64)
+    print(f"\nschedule steps: naive {naive.n_steps} (util "
+          f"{naive.utilization:.1%}) vs AWB {awb.n_steps} "
+          f"(util {awb.utilization:.1%}) -> "
+          f"{naive.n_steps / awb.n_steps:.2f}x fewer issued slots")
+
+    # --- run the Pallas kernel (interpret mode = CPU validation) ---------
+    rng = np.random.default_rng(0)
+    b = jnp.asarray(rng.standard_normal((ds.num_nodes, 16)).astype(np.float32))
+    gold = np.asarray(spmm.spmm_coo(ds.adj, b))
+    t0 = time.time()
+    out = np.asarray(spmm_pallas.spmm_balanced(awb, b, ktile=16))
+    err = np.abs(out - gold).max()
+    print(f"\npallas AWB SpMM: max err vs oracle {err:.2e} "
+          f"({time.time() - t0:.1f}s interpret mode)")
+    assert err < 1e-4
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""End-to-end driver (the paper's workload is inference): serve batched GCN
+inference requests with the AWB engine.
+
+    PYTHONPATH=src python examples/serve_gcn.py
+
+Trains a 2-layer GCN briefly on a synthetic Pubmed-statistics graph, builds
+the converged AWB schedule ONCE (the paper's "converge then reuse"), then
+serves a stream of inference requests (feature perturbations — e.g. fresh
+node features arriving on a fixed graph) and reports throughput and
+utilization vs the static baseline schedule.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gcn, schedule, spmm
+from repro.graphs import synth
+
+
+def main():
+    ds = synth.make_dataset("pubmed", scale=4)
+    cfg = gcn.GCNConfig(ds.num_features, ds.hidden, ds.num_classes)
+    params = gcn.init_params(cfg, jax.random.PRNGKey(0))
+    x = jnp.asarray(ds.features)
+    labels = jnp.asarray(ds.labels)
+
+    # brief training (inference weights)
+    val_grad = jax.jit(jax.value_and_grad(
+        lambda p: gcn.loss_fn(p, ds.adj, x, labels)))
+    for step in range(60):
+        loss, g = val_grad(params)
+        params = jax.tree.map(lambda p, gg: p - 0.5 * gg, params, g)
+    acc = float(gcn.accuracy(params, ds.adj, x, labels))
+    print(f"trained GCN: loss {float(loss):.3f}, fit-acc {acc:.2%} "
+          f"(chance {1 / ds.num_classes:.2%})")
+
+    # converged AWB schedule, built once, reused for every request & layer
+    awb = schedule.build_balanced_schedule(ds.adj, 64, 32)
+    naive = schedule.build_naive_schedule(ds.adj, 64, 32)
+    print(f"AWB util {awb.utilization:.1%} vs baseline "
+          f"{naive.utilization:.1%} "
+          f"({naive.n_steps / awb.n_steps:.2f}x fewer issued steps)")
+
+    infer = jax.jit(lambda p, feats: gcn.forward_awb(p, ds.adj, feats, awb))
+    # serve a stream of requests: fresh feature matrices on the fixed graph
+    n_requests = 20
+    rng = np.random.default_rng(1)
+    t0 = time.time()
+    for _ in range(n_requests):
+        req = x * jnp.asarray(
+            rng.random(x.shape, np.float32) < 0.9, jnp.float32)
+        logits = infer(params, req)
+    logits.block_until_ready()
+    dt = time.time() - t0
+    ref = gcn.forward(params, ds.adj, x)
+    got = infer(params, x)
+    err = float(jnp.abs(ref - got).max())
+    print(f"served {n_requests} requests in {dt:.2f}s "
+          f"({n_requests / dt:.1f} req/s on CPU), engine-vs-ref err {err:.1e}")
+    assert err < 1e-3
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Architecture registry: the 10 assigned archs + the paper's GCN datasets.
+
+``get_config(name)`` returns the exact published configuration;
+``get_reduced_config(name)`` shrinks every dimension for CPU smoke tests
+while preserving the segment structure (same family, same code paths).
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of a shape cell — weak-type-correct, shardable, no allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import (EncoderConfig, ModelConfig, MoEConfig,
+                                      init_cache)
+
+_ARCH_MODULES: Dict[str, str] = {
+    "rwkv6-3b": "rwkv6_3b",
+    "qwen2-72b": "qwen2_72b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "qwen2-0.5b": "qwen2_05b",
+    "starcoder2-3b": "starcoder2_3b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "whisper-tiny": "whisper_tiny",
+    "granite-moe-3b-a800m": "granite_moe_3b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b",
+    "pixtral-12b": "pixtral_12b",
+}
+
+GCN_DATASETS = ("cora", "citeseer", "pubmed", "nell", "reddit")
+
+# shape cells: name -> (seq_len, global_batch, kind)
+SHAPES = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+def list_archs():
+    return list(_ARCH_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+    return mod.CONFIG
+
+
+def cell_supported(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    """Assignment skip rules (documented in DESIGN.md §6)."""
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return False, "long_500k needs sub-quadratic attention"
+    return True, ""
+
+
+def get_reduced_config(name: str) -> ModelConfig:
+    """Same family/code paths, tiny dims — for CPU smoke tests."""
+    cfg = get_config(name)
+    segments = tuple((unit, min(rep, 2)) for unit, rep in cfg.segments)
+    n_layers = sum(len(u) * r for u, r in segments)
+    kv = min(cfg.n_kv_heads, 2)
+    heads = max(4 // 1, kv * 2)
+    moe = None
+    if cfg.moe is not None:
+        moe = MoEConfig(n_experts=8, top_k=2, d_expert=32,
+                        capacity_factor=cfg.moe.capacity_factor)
+    enc = None
+    if cfg.encoder is not None:
+        enc = EncoderConfig(n_layers=2, max_source=16)
+    return dataclasses.replace(
+        cfg, n_layers=n_layers, d_model=64, n_heads=heads, n_kv_heads=kv,
+        d_head=16, d_ff=96, vocab=128, segments=segments, moe=moe,
+        encoder=enc, window=(8 if cfg.window else None),
+        d_rnn=(64 if cfg.d_rnn else 0), remat=False)
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every input of (arch × shape)."""
+    seq, batch, kind = SHAPES[shape]
+    tok = lambda b, s: jax.ShapeDtypeStruct((b, s), jnp.int32)  # noqa: E731
+    specs: dict = {}
+    if kind == "train":
+        specs["tokens"] = tok(batch, seq)
+        specs["labels"] = tok(batch, seq)
+    elif kind == "prefill":
+        specs["tokens"] = tok(batch, seq)
+    else:  # decode: one new token against a seq-length cache
+        specs["token"] = jax.ShapeDtypeStruct((batch,), jnp.int32)
+        specs["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+        specs["cache"] = jax.eval_shape(
+            lambda: init_cache(cfg, batch, seq, jnp.bfloat16))
+    if cfg.encoder is not None and kind != "decode":
+        specs["source_embed"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder.max_source, cfg.d_model), jnp.bfloat16)
+    return specs

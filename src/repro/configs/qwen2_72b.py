@@ -1,0 +1,22 @@
+"""qwen2-72b — dense GQA transformer with QKV bias.
+[arXiv:2407.10671; hf] 80L d_model=8192 64H (kv=8) d_ff=29568 vocab=152064."""
+from repro.models.transformer import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-72b",
+    family="dense",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=29568,
+    vocab=152064,
+    segments=((("attn",), 80),),
+    qkv_bias=True,
+    rope=True,
+    rope_theta=1e6,
+    norm="rmsnorm",
+    activation="silu",
+    glu=True,
+)

@@ -1,0 +1,9 @@
+"""AWB-GCN core: the paper's contribution as composable JAX modules."""
+from repro.core import csc  # noqa: F401
+from repro.core import spmm  # noqa: F401
+from repro.core.schedule import (  # noqa: F401
+    Schedule,
+    build_balanced_schedule,
+    build_naive_schedule,
+    execute_schedule_jnp,
+)

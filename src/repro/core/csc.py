@@ -1,0 +1,227 @@
+"""Sparse matrix formats for AWB-GCN, in pure JAX.
+
+JAX only ships BCOO; AWB-GCN's column-wise-product SpMM wants CSC (the paper
+streams dense B and reuses sparse A per output column), the balanced Pallas
+kernel wants a flat nnz-sorted COO ("packed" format), and the PE simulator
+wants per-row nnz histograms (CSR-ish). We implement all of them as small
+NamedTuples of jnp arrays with static shapes so they jit/shard cleanly.
+
+Conventions
+-----------
+* All index arrays are int32.
+* Padding entries use column/row index ``PAD_IDX == -1`` and value 0.0 so a
+  padded SpMM contributes nothing (guarded gathers clamp the index).
+* Shapes are static: ``nnz`` is the *padded* nnz capacity.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PAD_IDX = -1
+
+
+class COO(NamedTuple):
+    """Coordinate format, row-major sorted unless stated otherwise."""
+
+    row: jax.Array  # [nnz] int32
+    col: jax.Array  # [nnz] int32
+    val: jax.Array  # [nnz] float
+    shape: Tuple[int, int]
+
+    @property
+    def nnz(self) -> int:
+        return self.row.shape[0]
+
+
+class CSR(NamedTuple):
+    indptr: jax.Array  # [m+1] int32
+    indices: jax.Array  # [nnz] int32 column ids
+    data: jax.Array  # [nnz]
+    shape: Tuple[int, int]
+
+    @property
+    def nnz(self) -> int:
+        return self.indices.shape[0]
+
+
+class CSC(NamedTuple):
+    """The paper's format for A: non-zeros contiguous per column."""
+
+    indptr: jax.Array  # [n+1] int32
+    indices: jax.Array  # [nnz] int32 row ids
+    data: jax.Array  # [nnz]
+    shape: Tuple[int, int]
+
+    @property
+    def nnz(self) -> int:
+        return self.indices.shape[0]
+
+
+class ELL(NamedTuple):
+    """ELLPACK: fixed non-zeros per row, padded. Used by dense-ish operands."""
+
+    indices: jax.Array  # [m, k] int32 column ids, PAD_IDX for padding
+    data: jax.Array  # [m, k]
+    shape: Tuple[int, int]
+
+
+# ---------------------------------------------------------------------------
+# Construction from dense / scipy-style triplets (host-side, numpy)
+# ---------------------------------------------------------------------------
+
+def coo_from_dense(a: np.ndarray) -> COO:
+    r, c = np.nonzero(a)
+    order = np.lexsort((c, r))
+    r, c = r[order], c[order]
+    return COO(
+        jnp.asarray(r, jnp.int32),
+        jnp.asarray(c, jnp.int32),
+        jnp.asarray(a[r, c]),
+        a.shape,
+    )
+
+
+def coo_from_arrays(row: np.ndarray, col: np.ndarray, val: np.ndarray,
+                    shape: Tuple[int, int]) -> COO:
+    order = np.lexsort((col, row))
+    return COO(
+        jnp.asarray(row[order], jnp.int32),
+        jnp.asarray(col[order], jnp.int32),
+        jnp.asarray(val[order]),
+        shape,
+    )
+
+
+def _ptr_from_sorted(ids: np.ndarray, dim: int) -> np.ndarray:
+    counts = np.bincount(ids, minlength=dim)
+    return np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
+
+
+def csr_from_coo(a: COO) -> CSR:
+    row = np.asarray(a.row)
+    col = np.asarray(a.col)
+    val = np.asarray(a.val)
+    order = np.lexsort((col, row))
+    return CSR(
+        jnp.asarray(_ptr_from_sorted(row[order], a.shape[0])),
+        jnp.asarray(col[order], jnp.int32),
+        jnp.asarray(val[order]),
+        a.shape,
+    )
+
+
+def csc_from_coo(a: COO) -> CSC:
+    row = np.asarray(a.row)
+    col = np.asarray(a.col)
+    val = np.asarray(a.val)
+    order = np.lexsort((row, col))
+    return CSC(
+        jnp.asarray(_ptr_from_sorted(col[order], a.shape[1])),
+        jnp.asarray(row[order], jnp.int32),
+        jnp.asarray(val[order]),
+        a.shape,
+    )
+
+
+def csc_from_dense(a: np.ndarray) -> CSC:
+    return csc_from_coo(coo_from_dense(a))
+
+
+def csr_from_dense(a: np.ndarray) -> CSR:
+    return csr_from_coo(coo_from_dense(a))
+
+
+def ell_from_dense(a: np.ndarray, width: int | None = None) -> ELL:
+    m, _ = a.shape
+    per_row = (a != 0).sum(axis=1)
+    k = int(per_row.max()) if width is None else width
+    idx = np.full((m, k), PAD_IDX, np.int32)
+    dat = np.zeros((m, k), a.dtype)
+    for i in range(m):
+        cols = np.nonzero(a[i])[0][:k]
+        idx[i, : len(cols)] = cols
+        dat[i, : len(cols)] = a[i, cols]
+    return ELL(jnp.asarray(idx), jnp.asarray(dat), a.shape)
+
+
+# ---------------------------------------------------------------------------
+# Conversions back to dense (jit-able; used by oracles/tests)
+# ---------------------------------------------------------------------------
+
+def coo_to_dense(a: COO) -> jax.Array:
+    m, n = a.shape
+    valid = a.row != PAD_IDX
+    r = jnp.where(valid, a.row, 0)
+    c = jnp.where(valid, a.col, 0)
+    v = jnp.where(valid, a.val, 0.0)
+    return jnp.zeros((m, n), a.val.dtype).at[r, c].add(v)
+
+
+def csr_to_coo(a: CSR) -> COO:
+    m, _ = a.shape
+    row = jnp.asarray(
+        np.repeat(np.arange(m, dtype=np.int32), np.diff(np.asarray(a.indptr)))
+    )
+    return COO(row, a.indices, a.data, a.shape)
+
+
+def csc_to_coo(a: CSC) -> COO:
+    _, n = a.shape
+    col = jnp.asarray(
+        np.repeat(np.arange(n, dtype=np.int32), np.diff(np.asarray(a.indptr)))
+    )
+    return COO(a.indices, col, a.data, a.shape)
+
+
+def csc_to_dense(a: CSC) -> jax.Array:
+    return coo_to_dense(csc_to_coo(a))
+
+
+def csr_to_dense(a: CSR) -> jax.Array:
+    return coo_to_dense(csr_to_coo(a))
+
+
+def ell_to_dense(a: ELL) -> jax.Array:
+    m, n = a.shape
+    valid = a.indices != PAD_IDX
+    c = jnp.where(valid, a.indices, 0)
+    v = jnp.where(valid, a.data, 0.0)
+    r = jnp.broadcast_to(jnp.arange(m, dtype=jnp.int32)[:, None], a.indices.shape)
+    return jnp.zeros((m, n), a.data.dtype).at[r, c].add(v)
+
+
+# ---------------------------------------------------------------------------
+# Padding (static-shape friendliness for jit / pallas)
+# ---------------------------------------------------------------------------
+
+def pad_coo(a: COO, capacity: int) -> COO:
+    """Pad nnz up to `capacity` with inert entries."""
+    nnz = a.nnz
+    if capacity < nnz:
+        raise ValueError(f"capacity {capacity} < nnz {nnz}")
+    pad = capacity - nnz
+    return COO(
+        jnp.concatenate([a.row, jnp.full((pad,), PAD_IDX, jnp.int32)]),
+        jnp.concatenate([a.col, jnp.full((pad,), PAD_IDX, jnp.int32)]),
+        jnp.concatenate([a.val, jnp.zeros((pad,), a.val.dtype)]),
+        a.shape,
+    )
+
+
+def row_nnz(a: COO, num_rows: int | None = None) -> jax.Array:
+    """Non-zeros per row (the workload histogram the paper's profiler tracks)."""
+    m = a.shape[0] if num_rows is None else num_rows
+    valid = a.row != PAD_IDX
+    r = jnp.where(valid, a.row, 0)
+    return jnp.zeros((m,), jnp.int32).at[r].add(valid.astype(jnp.int32))
+
+
+def col_nnz(a: COO, num_cols: int | None = None) -> jax.Array:
+    n = a.shape[1] if num_cols is None else num_cols
+    valid = a.col != PAD_IDX
+    c = jnp.where(valid, a.col, 0)
+    return jnp.zeros((n,), jnp.int32).at[c].add(valid.astype(jnp.int32))

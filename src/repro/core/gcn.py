@@ -1,0 +1,87 @@
+"""GCN model (Kipf & Welling) on the AWB SpMM engine.
+
+Two-layer spectral GCN: ``Z = softmax( Ã · ReLU( Ã · X · W1 ) · W2 )`` with
+the paper's A×(X×W) execution order (§III.A) on every layer. The sparse
+A·(XW) product runs through a ``Schedule`` (converged AWB configuration);
+X·W runs dense on the MXU (TDQ-1 decision, DESIGN.md §2).
+
+Inference is the paper's workload; training (cross-entropy + Adam) is
+provided so the end-to-end train example and loss-decrease tests have a
+real substrate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import csc as fmt
+from repro.core import spmm
+from repro.core.schedule import Schedule, build_balanced_schedule, execute_schedule_jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class GCNConfig:
+    num_features: int
+    hidden: int
+    num_classes: int
+    n_layers: int = 2
+
+
+def init_params(cfg: GCNConfig, key: jax.Array) -> dict:
+    dims = [cfg.num_features] + [cfg.hidden] * (cfg.n_layers - 1) + [cfg.num_classes]
+    params = {}
+    for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:])):
+        key, sub = jax.random.split(key)
+        # Glorot as in Kipf & Welling
+        lim = float(np.sqrt(6.0 / (din + dout)))
+        params[f"w{i}"] = jax.random.uniform(sub, (din, dout), jnp.float32,
+                                             -lim, lim)
+    return params
+
+
+def forward(params: dict, a: fmt.COO, x: jax.Array,
+            spmm_fn: Optional[Callable] = None) -> jax.Array:
+    """Logits. ``spmm_fn(b) -> A @ b`` defaults to the COO reference;
+    pass a schedule- or pallas-backed closure to run the AWB engine."""
+    if spmm_fn is None:
+        spmm_fn = functools.partial(spmm.spmm_coo, a)
+    h = x
+    n_layers = len(params)
+    for i in range(n_layers):
+        h = spmm_fn(spmm.spmm_dense(h, params[f"w{i}"]))  # A × (X × W)
+        if i < n_layers - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def make_schedule_spmm(sched: Schedule) -> Callable:
+    return functools.partial(execute_schedule_jnp, sched)
+
+
+def forward_awb(params: dict, a: fmt.COO, x: jax.Array,
+                sched: Optional[Schedule] = None) -> jax.Array:
+    """Forward pass through the converged AWB schedule."""
+    if sched is None:
+        sched = build_balanced_schedule(a)
+    return forward(params, a, x, spmm_fn=make_schedule_spmm(sched))
+
+
+def loss_fn(params: dict, a: fmt.COO, x: jax.Array, labels: jax.Array,
+            mask: Optional[jax.Array] = None,
+            spmm_fn: Optional[Callable] = None) -> jax.Array:
+    logits = forward(params, a, x, spmm_fn)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def accuracy(params: dict, a: fmt.COO, x: jax.Array,
+             labels: jax.Array) -> jax.Array:
+    return (forward(params, a, x).argmax(-1) == labels).mean()

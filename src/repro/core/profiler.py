@@ -1,0 +1,88 @@
+"""Workload profiling — the software analogue of AWB-GCN's online monitors.
+
+The FPGA profiles via per-TQ pending-task counters and per-PE idle-cycle
+counters. Here the same quantities are derived from the sparse operands and
+a (possibly converged) schedule, and are exported to benchmarks, the device-
+level balancer, and EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import csc as fmt
+from repro.core.schedule import Schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadProfile:
+    name: str
+    shape: tuple
+    nnz: int
+    density: float
+    row_nnz_mean: float
+    row_nnz_max: int
+    row_nnz_p99: float
+    gini: float              # inequality of the per-row workload
+    evil_rows: int           # rows heavier than `evil_threshold`
+    evil_share: float        # fraction of nnz they hold
+
+
+def gini_coefficient(x: np.ndarray) -> float:
+    """Gini index of a non-negative workload vector (0=balanced, →1=evil)."""
+    x = np.sort(x.astype(np.float64))
+    n = x.shape[0]
+    if n == 0 or x.sum() == 0:
+        return 0.0
+    cum = np.cumsum(x)
+    return float((n + 1 - 2 * (cum / cum[-1]).sum()) / n)
+
+
+def profile_matrix(a: fmt.COO, name: str = "",
+                   evil_threshold: int = 256) -> WorkloadProfile:
+    m, n = a.shape
+    rn = np.asarray(fmt.row_nnz(a))
+    nnz = int(rn.sum())
+    evil = rn > evil_threshold
+    return WorkloadProfile(
+        name=name,
+        shape=(m, n),
+        nnz=nnz,
+        density=nnz / max(1, m * n),
+        row_nnz_mean=float(rn.mean()),
+        row_nnz_max=int(rn.max()),
+        row_nnz_p99=float(np.percentile(rn, 99)),
+        gini=gini_coefficient(rn),
+        evil_rows=int(evil.sum()),
+        evil_share=float(rn[evil].sum()) / max(1, nnz),
+    )
+
+
+def schedule_report(s: Schedule) -> dict:
+    return {
+        "n_steps": s.n_steps,
+        "issued_slots": s.issued_slots,
+        "nnz": s.nnz,
+        "utilization": s.utilization,
+        "evil_chunks": s.n_evil_chunks,
+        "nnz_per_step": s.nnz_per_step,
+        "rows_per_window": s.rows_per_window,
+    }
+
+
+def device_loads(s: Schedule, n_devices: int) -> np.ndarray:
+    """Steps per device under the schedule's contiguous split (steps are
+    equal work, so this is the device-level load vector)."""
+    ranges = s.device_step_ranges(n_devices)
+    return (ranges[:, 1] - ranges[:, 0]).astype(np.float64)
+
+
+def naive_device_loads(a: fmt.COO, n_devices: int) -> np.ndarray:
+    """nnz per device under uniform row sharding — the straggler profile a
+    power-law graph induces without AWB."""
+    m = a.shape[0]
+    rn = np.asarray(fmt.row_nnz(a)).astype(np.float64)
+    rows_per_dev = -(-m // n_devices)
+    dev = np.arange(m) // rows_per_dev
+    return np.bincount(dev, weights=rn, minlength=n_devices)

@@ -1,0 +1,322 @@
+"""Balanced SpMM schedules — the TPU realization of AWB-GCN's autotuner.
+
+A ``Schedule`` is the static artifact the FPGA autotuner *converges to*: a
+partition of the sparse operand's non-zeros into fixed-size **steps** such
+that
+
+  * every step carries exactly ``nnz_per_step`` non-zero slots,
+  * each step's output rows fall in one **window** of ``rows_per_window``
+    output slots (the Pallas kernel accumulates a whole window in VMEM and
+    addresses it as output block ``window_id`` — block-aligned by
+    construction),
+  * rows heavier than ``evil_threshold`` ("evil rows", §IV.C) are chunked
+    across steps; every chunk gets a private slot in trailing windows and a
+    scatter-add epilogue merges chunks into their owner rows (the Labor-PE
+    adder tree). The same epilogue maps window slots back to matrix rows, so
+    regular and evil output handling are unified,
+  * optionally, each step's dense-operand rows fall in one column block of
+    ``cols_per_block`` (paper Fig. 9 matrix blocking / TDQ-1). For
+    ultra-sparse operands the default is a single block spanning all columns
+    (the TDQ-2 path).
+
+Because adjacency matrices are constant across rounds and layers (§II.A),
+the schedule is built once per graph and reused — exactly the paper's
+"converge, then reuse the ideal configuration".
+
+Utilization semantics on TPU: grid steps execute sequentially on a core, so
+imbalance does not idle "PEs" — it inflates *issued slots* (padding).
+``utilization = nnz / issued_slots`` is therefore the exact analogue of the
+paper's PE utilization: wasted slots are wasted MXU/VPU cycles.
+
+Builders:
+  * ``build_balanced_schedule`` — AWB: first-fit row windows holding
+    ≤ nnz_per_step non-zeros (distribution smoothing + remote switching,
+    converged) + evil-row chunking (row remapping).
+  * ``build_naive_schedule`` — the paper's baseline (§III.B): uniform static
+    row blocks, every block padded to the step count of the heaviest block
+    (what a static-grid kernel without runtime rebalancing must issue).
+
+Kernel contract (relied on by ``kernels/spmm_pallas.py``):
+  * steps of one window are contiguous in step order, so the kernel's VMEM
+    accumulator is zeroed on window entry and written back once per window;
+  * padding slots have ``val == 0`` and in-range local indices (0), so they
+    accumulate nothing;
+  * ``row_map[slot] == -1`` marks padding slots of the permuted output.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+from repro.core import csc as fmt
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Static balanced execution plan for one sparse operand."""
+
+    # per-step scalars (scalar-prefetch operands of the Pallas kernel)
+    win_id: np.ndarray        # [n_steps] int32 output window of the step
+    col_block: np.ndarray     # [n_steps] int32 dense-operand block id
+    # packed nnz slots, length n_steps * nnz_per_step
+    val: np.ndarray           # [S] float32 (0.0 in padding slots)
+    local_row: np.ndarray     # [S] int32 in [0, rows_per_window)
+    local_col: np.ndarray     # [S] int32 in [0, cols_per_block)
+    # permuted-output → matrix-row map, length n_windows * rows_per_window;
+    # -1 for unused slots. Multiple slots may map to one row (evil chunks);
+    # the scatter-add epilogue is the paper's adder tree.
+    row_map: np.ndarray       # [n_windows * rows_per_window] int32
+    # geometry
+    shape: Tuple[int, int]    # (m, n) of the sparse operand
+    nnz_per_step: int
+    rows_per_window: int
+    cols_per_block: int
+    nnz: int                  # true non-zero count
+    n_evil_chunks: int
+
+    @property
+    def n_steps(self) -> int:
+        return int(self.win_id.shape[0])
+
+    @property
+    def n_windows(self) -> int:
+        return int(self.row_map.shape[0]) // self.rows_per_window
+
+    @property
+    def issued_slots(self) -> int:
+        return self.n_steps * self.nnz_per_step
+
+    @property
+    def utilization(self) -> float:
+        """Fraction of issued compute slots carrying real work — the TPU
+        analogue of the paper's PE utilization."""
+        return self.nnz / max(1, self.issued_slots)
+
+    def device_step_ranges(self, n_devices: int) -> np.ndarray:
+        """Split steps contiguously across devices; since steps are
+        equal-work, equal step counts == balanced devices."""
+        edges = np.linspace(0, self.n_steps, n_devices + 1).round().astype(np.int64)
+        return np.stack([edges[:-1], edges[1:]], axis=1)
+
+
+def _group_layout(keys: np.ndarray, k: int, uniform: bool):
+    """Chunk sorted groups into ≤k-slot steps.
+
+    ``keys`` must already be sorted. Returns (step_of_elem, pos_in_step,
+    head_elem_of_step, n_steps). ``uniform`` pads every group to the step
+    count of the heaviest group (static-baseline issue model).
+    """
+    ne = keys.shape[0]
+    if ne == 0:
+        return (np.zeros(0, np.int64), np.zeros(0, np.int64),
+                np.zeros(0, np.int64), 0)
+    new_group = np.empty(ne, bool)
+    new_group[0] = True
+    new_group[1:] = keys[1:] != keys[:-1]
+    group_idx = np.cumsum(new_group) - 1
+    group_start = np.maximum.accumulate(np.where(new_group, np.arange(ne), 0))
+    pos_in_group = np.arange(ne) - group_start
+    chunk_in_group = pos_in_group // k
+    pos_in_chunk = pos_in_group % k
+    n_groups = int(group_idx[-1]) + 1
+    group_sizes = np.bincount(group_idx, minlength=n_groups)
+    group_chunks = -(-group_sizes // k)
+    if uniform:
+        per_group = int(group_chunks.max())
+        step_of_elem = group_idx * per_group + chunk_in_group
+        n_steps = n_groups * per_group
+        head_of_step = np.repeat(np.nonzero(new_group)[0], per_group)
+    else:
+        chunk_offset = np.concatenate([[0], np.cumsum(group_chunks)[:-1]])
+        step_of_elem = chunk_offset[group_idx] + chunk_in_group
+        n_steps = int(group_chunks.sum())
+        head_of_step = np.nonzero(pos_in_chunk == 0)[0]
+    return step_of_elem, pos_in_chunk, head_of_step, n_steps
+
+
+def _emit(row, col, val, shape, k, r, cb, window_of_row, window_start,
+          evil_mask_row, uniform: bool) -> Schedule:
+    """Pack non-zeros into steps obeying (window, col_block) purity.
+    Regular steps first (sorted by (window, col_block)), then evil chunks."""
+    m, n = shape
+    n_colblocks = max(1, -(-n // cb))
+    colblk = col // cb
+    is_evil = evil_mask_row[row]
+    n_reg_windows = int(window_start.shape[0])
+
+    # ---- regular rows ------------------------------------------------------
+    reg = np.nonzero(~is_evil)[0]
+    rwin = window_of_row[row[reg]]
+    reg_key = rwin * n_colblocks + colblk[reg]
+    order = np.lexsort((col[reg], row[reg], reg_key))
+    reg = reg[order]
+    r_step, r_pos, r_head, n_reg_steps = _group_layout(reg_key[order], k,
+                                                       uniform)
+
+    # ---- evil rows: group by (row, colblock) --------------------------------
+    ev = np.nonzero(is_evil)[0]
+    ev_key = row[ev] * n_colblocks + colblk[ev]
+    order = np.lexsort((col[ev], ev_key))
+    ev = ev[order]
+    e_step, e_pos, e_head, n_evil_steps = _group_layout(ev_key[order], k,
+                                                        False)
+    n_evil_chunks = n_evil_steps  # one chunk == one step == one output slot
+
+    n_steps = max(1, n_reg_steps + n_evil_steps)
+    n_evil_windows = -(-max(1, n_evil_chunks) // r) if n_evil_chunks else 0
+    n_windows = max(1, n_reg_windows + n_evil_windows)
+
+    sval = np.zeros(n_steps * k, np.float32)
+    srow = np.zeros(n_steps * k, np.int32)
+    scol = np.zeros(n_steps * k, np.int32)
+    step_win = np.zeros(n_steps, np.int32)
+    step_cb = np.zeros(n_steps, np.int32)
+    row_map = np.full(n_windows * r, -1, np.int32)
+
+    if reg.size:
+        slots = r_step * k + r_pos
+        sval[slots] = val[reg]
+        w = window_of_row[row[reg]]
+        srow[slots] = (row[reg] - window_start[w]).astype(np.int32)
+        scol[slots] = (col[reg] - colblk[reg] * cb).astype(np.int32)
+        head = reg[r_head]
+        step_win[:n_reg_steps] = window_of_row[row[head]]
+        step_cb[:n_reg_steps] = colblk[head]
+
+    # row_map for regular windows: slot (w, j) -> window_start[w] + j while
+    # within the window's row range (and not an evil row, whose value comes
+    # only from chunks)
+    win_end = np.concatenate([window_start[1:], [m]]) if n_reg_windows else \
+        np.zeros(0, np.int64)
+    for w in range(n_reg_windows):
+        cnt = int(min(win_end[w] - window_start[w], r))
+        rows = np.arange(window_start[w], window_start[w] + cnt)
+        vals_map = np.where(evil_mask_row[rows], -1, rows).astype(np.int32)
+        row_map[w * r: w * r + cnt] = vals_map
+
+    if ev.size:
+        slots = (n_reg_steps + e_step) * k + e_pos
+        sval[slots] = val[ev]
+        srow[slots] = (e_step % r).astype(np.int32)  # chunk slot in window
+        scol[slots] = (col[ev] - colblk[ev] * cb).astype(np.int32)
+        step_win[n_reg_steps:] = (n_reg_windows + e_step[e_head] // r
+                                  ).astype(np.int32)
+        step_cb[n_reg_steps:] = colblk[ev[e_head]]
+        # chunk c sits at padded slot n_reg_windows*r + c, owned by its row
+        chunk_slot = n_reg_windows * r + np.arange(n_evil_chunks)
+        row_map[chunk_slot] = row[ev[e_head]].astype(np.int32)
+
+    return Schedule(
+        win_id=step_win, col_block=step_cb, val=sval, local_row=srow,
+        local_col=scol, row_map=row_map, shape=shape, nnz_per_step=k,
+        rows_per_window=r, cols_per_block=cb, nnz=int(row.shape[0]),
+        n_evil_chunks=int(n_evil_chunks),
+    )
+
+
+def _clean_coo(a: fmt.COO):
+    row = np.asarray(a.row, np.int64)
+    col = np.asarray(a.col, np.int64)
+    val = np.asarray(a.val, np.float32)
+    keep = row != fmt.PAD_IDX
+    return row[keep], col[keep], val[keep]
+
+
+def build_balanced_schedule(a: fmt.COO, nnz_per_step: int = 256,
+                            rows_per_window: int = 64,
+                            cols_per_block: int | None = None,
+                            evil_threshold: int | None = None) -> Schedule:
+    """AWB schedule: first-fit contiguous row windows holding ≤ nnz_per_step
+    non-zeros and ≤ rows_per_window rows (distribution smoothing + remote
+    switching, converged), evil rows chunked across steps (row remapping).
+
+    ``cols_per_block=None`` (default) disables column blocking — right for
+    ultra-sparse operands where blocking fragments steps (TDQ-2). Pass a
+    block size to enable Fig.-9-style blocking (TDQ-1).
+    """
+    m, n = a.shape
+    row, col, val = _clean_coo(a)
+    k, r = nnz_per_step, rows_per_window
+    cb = n if cols_per_block is None else cols_per_block
+    evil_t = evil_threshold if evil_threshold is not None else k
+
+    per_row = np.bincount(row, minlength=m)
+    evil_mask = per_row > evil_t
+
+    # First-fit contiguous row windows over regular-row nnz: close a window
+    # when adding the next row would exceed k nnz, or at r rows.
+    reg_nnz = np.where(evil_mask, 0, per_row).astype(np.int64)
+    cum = np.cumsum(reg_nnz)
+    window_of_row = np.zeros(m, np.int64)
+    window_start = [0]
+    base, w = 0, 0
+    while base < m:
+        target = (cum[base - 1] if base else 0) + k
+        hi = int(np.searchsorted(cum, target, side="right"))
+        hi = min(max(hi, base + 1), base + r, m)
+        window_of_row[base:hi] = w
+        if hi < m:
+            window_start.append(hi)
+        base = hi
+        w += 1
+    window_start = np.asarray(window_start, np.int64)
+
+    return _emit(row, col, val, (m, n), k, r, cb, window_of_row,
+                 window_start, evil_mask, uniform=False)
+
+
+def build_naive_schedule(a: fmt.COO, nnz_per_step: int = 256,
+                         rows_per_window: int = 64,
+                         cols_per_block: int | None = None) -> Schedule:
+    """Paper baseline (§III.B): uniform static row partition, no rebalancing.
+    Every row block issues the step count of the *heaviest* block — the
+    static-grid cost of workload imbalance (idle PEs ≡ padded slots)."""
+    m, n = a.shape
+    row, col, val = _clean_coo(a)
+    r = rows_per_window
+    cb = n if cols_per_block is None else cols_per_block
+    window_of_row = np.arange(m, dtype=np.int64) // r
+    window_start = np.arange(0, max(m, 1), r, dtype=np.int64)
+    evil_mask = np.zeros(m, bool)  # baseline has no evil-row handling
+    return _emit(row, col, val, (m, n), nnz_per_step, r, cb, window_of_row,
+                 window_start, evil_mask, uniform=True)
+
+
+def scatter_epilogue(sched: Schedule, out_perm) -> "jax.Array":  # noqa: F821
+    """Map the kernel's permuted-window output back to matrix rows.
+    Evil chunks scatter-add into their owner rows — the adder tree."""
+    import jax.numpy as jnp
+
+    m = sched.shape[0]
+    rm = jnp.asarray(sched.row_map)
+    valid = rm >= 0
+    tgt = jnp.where(valid, rm, 0)
+    contrib = jnp.where(valid[:, None], out_perm, 0)
+    return jnp.zeros((m, out_perm.shape[1]), out_perm.dtype).at[tgt].add(contrib)
+
+
+def execute_schedule_jnp(sched: Schedule, b) -> "jax.Array":  # noqa: F821
+    """Pure-jnp executor of a Schedule — the oracle the Pallas kernel is
+    tested against, and itself tested against ``spmm.spmm_coo``."""
+    import jax.numpy as jnp
+
+    m, n = sched.shape
+    k = sched.nnz_per_step
+    r = sched.rows_per_window
+    kdim = b.shape[1]
+    n_steps = sched.n_steps
+
+    val = jnp.asarray(sched.val)
+    lrow = jnp.asarray(sched.local_row).reshape(n_steps, k)
+    lcol = jnp.asarray(sched.local_col).reshape(n_steps, k)
+    win = jnp.asarray(sched.win_id)
+    cblk = jnp.asarray(sched.col_block)
+
+    gcol = jnp.minimum(cblk[:, None] * sched.cols_per_block + lcol, n - 1)
+    slot = (win[:, None] * r + lrow).reshape(-1)
+    gathered = b[gcol.reshape(-1)] * val[:, None]
+    out_perm = jnp.zeros((sched.n_windows * r, kdim), b.dtype)
+    out_perm = out_perm.at[slot].add(gathered)
+    return scatter_epilogue(sched, out_perm)

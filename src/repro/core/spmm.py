@@ -1,0 +1,82 @@
+"""Column-wise-product SpMM (the paper's §III.B execution order), pure JAX.
+
+Given sparse S (m×n) and dense B (n×k):  C = S @ B, computed as
+``C[:, j] = sum_c S[:, c] * B[c, j]`` — i.e. every non-zero (r, c, v) of S
+contributes ``v * B[c, :]`` to row r of C. In JAX this is a gather of B rows
+by the non-zeros' column indices followed by a segment-sum over their row
+indices. These functions are the *reference* implementations (oracles for the
+Pallas kernel) and the production fallback on non-TPU backends.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import csc as fmt
+
+
+def spmm_coo(a: fmt.COO, b: jax.Array) -> jax.Array:
+    """C = A @ B via column-wise product. Handles PAD_IDX entries."""
+    m, n = a.shape
+    valid = a.row != fmt.PAD_IDX
+    col = jnp.where(valid, a.col, 0)
+    row = jnp.where(valid, a.row, 0)
+    val = jnp.where(valid, a.val, 0).astype(b.dtype)
+    gathered = b[col] * val[:, None]  # [nnz, k] — the broadcast of Eq. (4)
+    return jax.ops.segment_sum(gathered, row, num_segments=m)
+
+
+def spmm_csc(a: fmt.CSC, b: jax.Array) -> jax.Array:
+    return spmm_coo(fmt.csc_to_coo(a), b)
+
+
+def spmm_dense(a_dense: jax.Array, b: jax.Array) -> jax.Array:
+    """TDQ-1 path: on the MXU, computing the zeros beats skipping them for
+    sparsity < ~99%; used for X·W where X is 'generally sparse'."""
+    return a_dense @ b
+
+
+def spmm_coo_blocked(a: fmt.COO, b: jax.Array, t: int = 4) -> jax.Array:
+    """Matrix-blocking variant (paper Fig. 9): process B in t-column panels so
+    each block of A is reused t times before eviction. Numerically identical;
+    exists so tests can assert the blocked order is safe and benchmarks can
+    model the bandwidth win."""
+    m, n = a.shape
+    k = b.shape[1]
+    pad_k = (-k) % t
+    bp = jnp.pad(b, ((0, 0), (0, pad_k)))
+    panels = bp.reshape(n, (k + pad_k) // t, t).transpose(1, 0, 2)
+
+    def one_panel(panel):  # [n, t]
+        return spmm_coo(a, panel)
+
+    out = jax.lax.map(one_panel, panels)  # [k/t, m, t]
+    out = out.transpose(1, 0, 2).reshape(m, k + pad_k)
+    return out[:, :k]
+
+
+def gcn_layer_ref(a: fmt.COO, x: jax.Array, w: jax.Array,
+                  activation=jax.nn.relu) -> jax.Array:
+    """σ(A·(X·W)) with the paper's A×(X×W) ordering (§III.A, Table II)."""
+    xw = spmm_dense(x, w)
+    axw = spmm_coo(a, xw)
+    return activation(axw) if activation is not None else axw
+
+
+def flops_axw_orders(a_nnz: int, x_shape, w_shape, x_density: float = 1.0):
+    """Operation counts for (A×X)×W vs A×(X×W) — reproduces Table II.
+
+    Counts multiply ops on non-zeros only (the paper counts 'operations').
+    """
+    n_nodes, n_feat = x_shape
+    _, n_hid = w_shape
+    # (A×X)×W: A (nnz_a) times each of n_feat X columns -> dense (n,n_feat),
+    # then dense (n,n_feat)x(n_feat,n_hid)
+    ax = a_nnz * n_feat
+    axw = n_nodes * n_feat * n_hid
+    order1 = ax + axw
+    # A×(X×W): sparse X (density) times W, then A times dense (n,n_hid)
+    xw = int(n_nodes * n_feat * x_density) * n_hid
+    a_xw = a_nnz * n_hid
+    order2 = xw + a_xw
+    return order1, order2

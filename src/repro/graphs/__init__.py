@@ -1,0 +1,6 @@
+from repro.graphs.synth import (  # noqa: F401
+    DATASET_STATS,
+    GraphDataset,
+    make_dataset,
+    power_law_adjacency,
+)

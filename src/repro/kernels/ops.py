@@ -1,0 +1,72 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Backend selection: on a real TPU the Pallas path compiles natively
+(``interpret=False``); everywhere else (this CPU container, the multi-pod
+dry-run on host devices) the framework uses either the interpret-mode kernel
+(tests) or the mathematically identical XLA path (``*_xla``) that the model
+code lowers for the dry-run. ``default_backend()`` picks automatically.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import csc as fmt
+from repro.core import spmm as spmm_ref_mod
+from repro.core.schedule import Schedule, execute_schedule_jnp
+from repro.kernels import flash_attention as _fa
+from repro.kernels import spmm_pallas as _sp
+from repro.kernels import ref as _ref
+
+
+def default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+# ---------------------------------------------------------------------------
+# SpMM
+# ---------------------------------------------------------------------------
+
+def spmm(sched: Schedule, b: jax.Array, *, backend: str | None = None,
+         ktile: int = 128) -> jax.Array:
+    """C = A @ B through the converged AWB schedule."""
+    backend = backend or default_backend()
+    if backend == "pallas":
+        return _sp.spmm_balanced(sched, b, ktile=ktile, interpret=False)
+    if backend == "pallas_interpret":
+        return _sp.spmm_balanced(sched, b, ktile=ktile, interpret=True)
+    return execute_schedule_jnp(sched, b)
+
+
+def spmm_coo(a: fmt.COO, b: jax.Array) -> jax.Array:
+    """Schedule-free reference path."""
+    return spmm_ref_mod.spmm_coo(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int | None = None,
+              scale: float | None = None, backend: str | None = None,
+              block_q: int = 128, block_k: int = 128,
+              chunk: int | None = None) -> jax.Array:
+    """Multi-head attention, q [B,Sq,H,D], kv [B,Sk,Hkv,D] (GQA).
+    ``chunk`` selects the flash-style chunked XLA path (§Perf)."""
+    backend = backend or default_backend()
+    if chunk is not None and backend not in ("pallas", "pallas_interpret"):
+        return _ref.attention_chunked(q, k, v, causal=causal, window=window,
+                                      scale=scale, block_k=chunk)
+    if backend == "pallas":
+        return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                                   scale=scale, block_q=block_q,
+                                   block_k=block_k, interpret=False)
+    if backend == "pallas_interpret":
+        return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                                   scale=scale, block_q=block_q,
+                                   block_k=block_k, interpret=True)
+    return _ref.attention_ref(q, k, v, causal=causal, window=window,
+                              scale=scale)

@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import csc as fmt
+from repro.core import spmm
+from repro.core.schedule import Schedule, execute_schedule_jnp
+
+
+def spmm_ref(a: fmt.COO, b: jax.Array) -> jax.Array:
+    """Dense-equivalent SpMM oracle."""
+    return spmm.spmm_coo(a, b)
+
+
+def spmm_schedule_ref(sched: Schedule, b: jax.Array) -> jax.Array:
+    """Schedule-exact oracle (same padding/epilogue semantics as kernel)."""
+    return execute_schedule_jnp(sched, b)
+
+
+def attention_chunked(q: jax.Array, k: jax.Array, v: jax.Array,
+                      causal: bool = True, scale: float | None = None,
+                      window: int | None = None,
+                      block_k: int = 2048) -> jax.Array:
+    """Flash-style chunked attention in plain XLA: online softmax over KV
+    blocks, never materializing the S×S score matrix. Statically unrolled
+    (python loop) so cost analysis counts every block, and fully-masked
+    causal blocks are skipped at trace time. Numerically ≡ attention_ref.
+
+    The §Perf memory-term optimization for prefill/train cells on archs
+    whose attention the CPU dry-run would otherwise lower unfused; on real
+    TPU the Pallas flash kernel replaces it."""
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    if scale is None:
+        scale = d ** -0.5
+    groups = h // hkv
+    k = jnp.repeat(k, groups, axis=2)
+    v = jnp.repeat(v, groups, axis=2)
+    qf = q.astype(jnp.float32) * scale
+    q_off = sk - sq
+
+    m = jnp.full((b, h, sq, 1), -1e30, jnp.float32)
+    l = jnp.zeros((b, h, sq, 1), jnp.float32)
+    acc = jnp.zeros((b, h, sq, d), jnp.float32)
+    qpos = jnp.arange(sq)[:, None] + q_off
+    for start in range(0, sk, block_k):
+        end = min(start + block_k, sk)
+        if causal and start > sq - 1 + q_off:
+            continue  # block entirely in the future
+        if window is not None and end - 1 <= q_off - window:
+            continue  # block entirely outside every query's window
+        kb = k[:, start:end].astype(jnp.float32)
+        vb = v[:, start:end].astype(jnp.float32)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb)
+        kpos = jnp.arange(start, end)[None, :]
+        mask = jnp.ones((sq, end - start), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l = corr * l + p.sum(-1, keepdims=True)
+        acc = corr * acc + jnp.einsum("bhqk,bkhd->bhqd", p, vb)
+        m = m_new
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True, scale: float | None = None,
+                  window: int | None = None) -> jax.Array:
+    """Reference multi-head attention with optional causal mask and local
+    window. Shapes: q [B, Sq, H, D], k/v [B, Sk, Hkv, D]; GQA broadcast when
+    H != Hkv."""
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    if scale is None:
+        scale = d ** -0.5
+    groups = h // hkv
+    k = jnp.repeat(k, groups, axis=2)
+    v = jnp.repeat(v, groups, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)

@@ -1,0 +1,378 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh)
+cell on the production meshes, record memory/cost/collective analysis.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init). Do not set that flag globally — smoke tests and
+benches see 1 device.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all   # every cell
+
+Outputs one JSON per cell under results/dryrun/ (cached; --force to redo)
+plus a summary table. ``roofline`` totals use the scan-extrapolation of
+EXPERIMENTS.md §Roofline: total = full_program + Σ_seg (repeat−1) × unit.
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro import configs as cfgs  # noqa: E402
+from repro.launch import steps  # noqa: E402
+from repro.launch.mesh import dp_axes, make_production_mesh  # noqa: E402
+from repro.models import transformer as tr  # noqa: E402
+from repro.roofline import analysis as ra  # noqa: E402
+from repro.sharding import partition  # noqa: E402
+from repro.sharding.hints import hints  # noqa: E402
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _mem_record(compiled) -> dict:
+    m = compiled.memory_analysis()
+    return {
+        "argument_bytes": m.argument_size_in_bytes,
+        "output_bytes": m.output_size_in_bytes,
+        "temp_bytes": m.temp_size_in_bytes,
+        "alias_bytes": m.alias_size_in_bytes,
+        "peak_bytes_est": m.argument_size_in_bytes
+        + m.output_size_in_bytes + m.temp_size_in_bytes
+        - m.alias_size_in_bytes,
+    }
+
+
+def _cost_record(compiled) -> dict:
+    c = compiled.cost_analysis()
+    return {"flops": float(c.get("flops", 0.0)),
+            "bytes": float(c.get("bytes accessed", 0.0))}
+
+
+def _analyze(lowered, compiled) -> dict:
+    rec = {**_mem_record(compiled), **_cost_record(compiled)}
+    txt = compiled.as_text()
+    rec["collectives"] = ra.collective_bytes_from_hlo(txt)
+    rec["hbm_bytes_model"] = ra.tpu_hbm_bytes_from_hlo(txt)
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# Full-program lowering per cell
+# ---------------------------------------------------------------------------
+
+def lower_full(cfg, shape: str, mesh, opt: bool = False) -> dict:
+    seq, batch, kind = cfgs.SHAPES[shape]
+    specs = cfgs.input_specs(cfg, shape)
+    t0 = time.time()
+    if kind == "train":
+        fn, (param_specs, opt_specs) = steps.make_train_step(cfg, mesh,
+                                                             specs)
+        lowered = fn.lower(param_specs, opt_specs, specs)
+    elif kind == "prefill":
+        fn, (param_specs,) = steps.make_prefill_step(cfg, mesh, specs,
+                                                     max_seq=seq)
+        lowered = fn.lower(param_specs, specs)
+    else:  # decode
+        fn, (param_specs, cache_specs) = steps.make_decode_step(
+            cfg, mesh, batch=batch, max_seq=seq, seq_shard_kv=opt)
+        lowered = fn.lower(param_specs, cache_specs, specs["token"],
+                           specs["pos"])
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    rec = _analyze(lowered, compiled)
+    rec.update({"lower_s": t_lower, "compile_s": t_compile})
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# Per-unit lowering (scan-body extrapolation for §Roofline)
+# ---------------------------------------------------------------------------
+
+def _unit_param_specs(cfg, unit):
+    return jax.eval_shape(
+        lambda k: tr._init_unit(cfg, unit, k),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def lower_unit(cfg, unit, mesh, kind: str, batch: int, seq: int,
+               opt: bool = False) -> dict:
+    """Lower one segment unit standalone with matching shardings."""
+    dp, dp_size = partition._dp_of(mesh)
+    if batch % dp_size != 0:
+        dp = None  # long_500k: B=1 cannot shard over data
+    pspec_tree = partition.param_pspecs(
+        cfg, _unit_param_specs(cfg, unit), mesh)
+    p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+    p_specs = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16),
+        _unit_param_specs(cfg, unit))
+    x_sh = NamedSharding(mesh, P(dp, None, None))
+    if kind != "train" and all(kd == "enc" for kd in unit):
+        # encoder layers have no cache; lower plain forward
+        def f(p, x):
+            with hints(mesh, dp, "model"):
+                y, _ = tr._unit_fwd(cfg, unit, p, x, None, None)
+            return y
+        x_spec = jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                      jnp.bfloat16)
+        lowered = jax.jit(f, in_shardings=(p_sh, x_sh)).lower(
+            p_specs, x_spec)
+        return _analyze(lowered, lowered.compile())
+    needs_enc = "xattn" in unit
+    enc_spec = (jax.ShapeDtypeStruct(
+        (batch, cfg.encoder.max_source, cfg.d_model), jnp.bfloat16)
+        if needs_enc else None)
+    enc_sh = x_sh if needs_enc else None
+
+    if kind == "train":
+        def fwd(p, x, enc):
+            with hints(mesh, dp, "model"):
+                y, aux = tr._unit_fwd(cfg, unit, p, x, enc, None)
+            return y.astype(jnp.float32).sum() + aux
+        if cfg.remat:
+            fwd = jax.checkpoint(fwd)
+        f = lambda p, x, enc: jax.grad(  # noqa: E731
+            fwd, argnums=(0, 1))(p, x, enc)
+        x_spec = jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                      jnp.bfloat16)
+        lowered = jax.jit(f, in_shardings=(p_sh, x_sh, enc_sh)).lower(
+            p_specs, x_spec, enc_spec)
+    elif kind == "prefill":
+        def f(p, c, x, enc):
+            y = x
+            out_c = {}
+            with hints(mesh, dp, "model"):
+                for i, kd in enumerate(unit):
+                    y, cc = tr._layer_prefill(cfg, kd, p[f"l{i}"], y,
+                                              c[f"l{i}"], enc, None)
+                    out_c[f"l{i}"] = cc
+            return y, out_c
+        c_specs = jax.eval_shape(
+            lambda: {f"l{i}": tr._init_layer_cache(cfg, kd, batch, seq,
+                                                   jnp.bfloat16)
+                     for i, kd in enumerate(unit)})
+        c_sh = jax.tree.map(
+            lambda s: NamedSharding(mesh, s),
+            partition.cache_pspecs(cfg, c_specs, mesh, stacked=False),
+            is_leaf=lambda x: isinstance(x, P))
+        x_spec = jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                      jnp.bfloat16)
+        lowered = jax.jit(f, in_shardings=(p_sh, c_sh, x_sh, enc_sh)).lower(
+            p_specs, c_specs, x_spec, enc_spec)
+    else:  # decode
+        def f(p, c, x, pos):
+            y = x
+            out_c = {}
+            with hints(mesh, dp, "model", kv_seq_shard=opt):
+                for i, kd in enumerate(unit):
+                    y, cc = tr._layer_decode(cfg, kd, p[f"l{i}"], y,
+                                             c[f"l{i}"], pos, None)
+                    out_c[f"l{i}"] = cc
+            return y, out_c
+        c_specs = jax.eval_shape(
+            lambda: {f"l{i}": tr._init_layer_cache(cfg, kd, batch, seq,
+                                                   jnp.bfloat16)
+                     for i, kd in enumerate(unit)})
+        c_sh = jax.tree.map(
+            lambda s: NamedSharding(mesh, s),
+            partition.cache_pspecs(cfg, c_specs, mesh, stacked=False,
+                                   seq_shard=opt),
+            is_leaf=lambda x: isinstance(x, P))
+        x_spec = jax.ShapeDtypeStruct((batch, 1, cfg.d_model), jnp.bfloat16)
+        pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+        lowered = jax.jit(f, in_shardings=(p_sh, c_sh, x_sh, None)).lower(
+            p_specs, c_specs, x_spec, pos_spec)
+    compiled = lowered.compile()
+    return _analyze(lowered, compiled)
+
+
+def extrapolated_totals(cfg, shape: str, mesh, full_rec: dict,
+                        opt: bool = False) -> dict:
+    """total = full_program + Σ_seg (repeat−1) × unit (+ encoder layers)."""
+    seq, batch, kind = cfgs.SHAPES[shape]
+    eff_batch = batch if kind != "decode" else batch  # x batch dim
+    eff_seq = seq if kind != "decode" else seq        # cache length
+    flops = full_rec["flops"]
+    bytes_ = full_rec["bytes"]
+    hbm = full_rec.get("hbm_bytes_model", 0.0)
+    wire = full_rec["collectives"].get("wire_bytes_total", 0.0)
+    units = []
+    for unit, repeat in cfg.segments:
+        if repeat <= 1:
+            units.append(None)
+            continue
+        u = lower_unit(cfg, unit, mesh, kind, eff_batch, eff_seq, opt=opt)
+        units.append(u)
+        flops += (repeat - 1) * u["flops"]
+        bytes_ += (repeat - 1) * u["bytes"]
+        hbm += (repeat - 1) * u.get("hbm_bytes_model", 0.0)
+        wire += (repeat - 1) * u["collectives"].get("wire_bytes_total", 0.0)
+    if cfg.encoder is not None and kind != "decode" \
+            and cfg.encoder.n_layers > 1:
+        u = lower_unit(cfg, ("enc",), mesh, "train" if kind == "train"
+                       else "prefill", eff_batch, cfg.encoder.max_source)
+        flops += (cfg.encoder.n_layers - 1) * u["flops"]
+        bytes_ += (cfg.encoder.n_layers - 1) * u["bytes"]
+        hbm += (cfg.encoder.n_layers - 1) * u.get("hbm_bytes_model", 0.0)
+        wire += (cfg.encoder.n_layers - 1) * u["collectives"].get(
+            "wire_bytes_total", 0.0)
+    return {"flops_extrap": flops, "bytes_extrap": bytes_,
+            "hbm_extrap": hbm, "wire_extrap": wire}
+
+
+# ---------------------------------------------------------------------------
+# GCN cells (the paper's own workload on the production mesh)
+# ---------------------------------------------------------------------------
+
+def lower_gcn(dataset: str, mesh) -> dict:
+    from repro.graphs.synth import DATASET_STATS
+
+    nodes, feats, classes, hidden, dens_a, _, _, _ = DATASET_STATS[dataset]
+    nnz = max(nodes, int(dens_a * nodes * nodes)) + nodes
+    k, r = 256, 64
+    n_steps = int(nnz / k * 1.08) + 2
+    fn, specs = steps.make_gcn_step(mesh, nodes, feats, hidden, classes,
+                                    n_steps, k, r)
+    t0 = time.time()
+    lowered = fn.lower(*specs)
+    compiled = lowered.compile()
+    rec = _analyze(lowered, compiled)
+    rec["compile_s"] = time.time() - t0
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape: str, mesh_kind: str, force: bool = False,
+             extrapolate: bool = True, variant: str = "base") -> dict:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    suffix = "" if variant == "base" else f"__{variant}"
+    out_path = RESULTS / f"{arch}__{shape}__{mesh_kind}{suffix}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    opt = variant == "opt"
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.size
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+           "chips": n_chips, "status": "ok", "variant": variant}
+    try:
+        if arch.startswith("gcn-"):
+            full = lower_gcn(arch[4:], mesh)
+            rec.update(full)
+            rec["flops_extrap"] = full["flops"]
+            rec["bytes_extrap"] = full["bytes"]
+            rec["wire_extrap"] = full["collectives"]["wire_bytes_total"]
+        else:
+            cfg = cfgs.get_config(arch)
+            if opt:
+                cfg = dataclasses.replace(cfg, attn_chunk=1024,
+                                          moe_groups=16, sp_carry=True)
+            ok, why = cfgs.cell_supported(cfg, shape)
+            if not ok:
+                rec.update({"status": "skipped", "reason": why})
+                out_path.write_text(json.dumps(rec, indent=1))
+                return rec
+            full = lower_full(cfg, shape, mesh, opt=opt)
+            rec.update(full)
+            if extrapolate:
+                rec.update(extrapolated_totals(cfg, shape, mesh, full,
+                                               opt=opt))
+            rec["n_params"] = tr.count_params(cfg)
+            rec["n_active_params"] = tr.active_params(cfg)
+        # roofline terms from the extrapolated per-device numbers
+        terms = ra.roofline_terms(
+            rec.get("flops_extrap", rec.get("flops", 0.0)),
+            rec.get("bytes_extrap", rec.get("bytes", 0.0)),
+            rec.get("wire_extrap", 0.0))
+        hbm = rec.get("hbm_extrap", rec.get("hbm_bytes_model", 0.0))
+        terms["memory_v2_s"] = hbm / ra.HW.hbm_bw
+        terms["bound_v2_s"] = max(terms["compute_s"], terms["memory_v2_s"],
+                                  terms["collective_s"])
+        terms["roofline_fraction_v2"] = (terms["compute_s"]
+                                         / terms["bound_v2_s"]
+                                         if terms["bound_v2_s"] else 0.0)
+        rec["roofline"] = terms
+    except Exception as e:  # record failures — they are findings
+        rec.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--gcn", action="store_true", help="include GCN cells")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-extrap", action="store_true")
+    ap.add_argument("--variant", default="base", choices=["base", "opt"])
+    args = ap.parse_args()
+
+    archs = (cfgs.list_archs() if args.arch == "all" or args.all
+             else args.arch.split(","))
+    if args.gcn:
+        archs = archs + [f"gcn-{d}" for d in cfgs.GCN_DATASETS]
+    shapes = (list(cfgs.SHAPES) if args.shape == "all" or args.all
+              else args.shape.split(","))
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    rows = []
+    for arch in archs:
+        for shape in shapes:
+            if arch.startswith("gcn-") and shape != "train_4k":
+                continue  # GCN cells are shape-free; run once
+            for mk in meshes:
+                t0 = time.time()
+                rec = run_cell(arch, shape, mk, force=args.force,
+                               extrapolate=not args.no_extrap,
+                               variant=args.variant)
+                dt = time.time() - t0
+                status = rec["status"]
+                if status == "ok":
+                    r = rec["roofline"]
+                    mem = rec.get("peak_bytes_est", 0) / 1e9
+                    print(f"{arch:22s} {shape:12s} {mk:6s} ok "
+                          f"mem={mem:6.2f}GB/dev "
+                          f"compute={r['compute_s']*1e3:8.2f}ms "
+                          f"memory={r['memory_s']*1e3:8.2f}ms "
+                          f"coll={r['collective_s']*1e3:8.2f}ms "
+                          f"dom={r['dominant']:10s} ({dt:.0f}s)",
+                          flush=True)
+                elif status == "skipped":
+                    print(f"{arch:22s} {shape:12s} {mk:6s} SKIP "
+                          f"({rec['reason']})", flush=True)
+                else:
+                    print(f"{arch:22s} {shape:12s} {mk:6s} ERROR "
+                          f"{rec['error'][:120]}", flush=True)
+                rows.append(rec)
+    n_ok = sum(r["status"] == "ok" for r in rows)
+    n_skip = sum(r["status"] == "skipped" for r in rows)
+    n_err = sum(r["status"] == "error" for r in rows)
+    print(f"\n{n_ok} ok, {n_skip} skipped, {n_err} errors "
+          f"of {len(rows)} cells")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

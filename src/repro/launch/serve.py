@@ -1,0 +1,63 @@
+"""Serving driver: batched greedy generation on whatever devices exist.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
+        --prompts "1 2 3;4 5" --max-new 8
+
+Loads a checkpoint if given (``--ckpt-dir``), otherwise serves random
+weights (useful for throughput measurement); the decode path is the same
+``decode_step`` the multi-pod dry-run lowers for decode_32k / long_500k.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as cfgs
+from repro.models import transformer as tr
+from repro.serving.engine import ServeEngine
+from repro.training.checkpoint import CheckpointManager
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--prompts", default="1 2 3;7 8")
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args(argv)
+
+    cfg = (cfgs.get_reduced_config(args.arch) if args.reduced
+           else cfgs.get_config(args.arch))
+    params = tr.init_params(cfg, jax.random.PRNGKey(0))
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir)
+        # train.py checkpoints store (params, opt_state); restore params only
+        import jax as _jax
+        opt_template = None
+        try:
+            from repro.training import optimizer as opt_mod
+            opt_template = opt_mod.adamw_init(params)
+            (params, _), meta = mgr.restore((params, opt_template))
+        except Exception:
+            (params,), meta = mgr.restore((params,))
+        print(f"restored step {meta['step']}")
+    prompts = [[int(t) for t in p.split()] for p in args.prompts.split(";")]
+
+    eng = ServeEngine(cfg, params, max_seq=args.max_seq)
+    t0 = time.time()
+    outs = eng.generate(prompts, max_new_tokens=args.max_new)
+    dt = time.time() - t0
+    n_tok = sum(args.max_new for _ in prompts)
+    for i, o in enumerate(outs):
+        print(f"[{i}] {o}")
+    print(f"{n_tok} tokens in {dt:.2f}s ({n_tok / dt:.1f} tok/s)")
+    return outs
+
+
+if __name__ == "__main__":
+    main()

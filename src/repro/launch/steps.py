@@ -1,0 +1,221 @@
+"""Train / prefill / decode step factories with production shardings.
+
+``make_*`` return a jitted function plus the ShapeDtypeStruct input specs —
+the same objects serve real execution (CPU/TPU) and the multi-pod dry-run
+(``.lower().compile()`` with no allocation).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro import configs as cfgs
+from repro.models import transformer as tr
+from repro.sharding import partition
+from repro.sharding.hints import hints
+from repro.training import optimizer as opt_mod
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _to_dtype_specs(tree, dtype):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), tree)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Memory-lean CE: logsumexp + label gather — never materializes an
+    fp32 log-softmax of the (huge, vocab-sharded) logits."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    lab = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return (lse - lab.astype(jnp.float32)).mean()
+
+
+def model_shardings(cfg: tr.ModelConfig, mesh):
+    """(param_specs_bf16, param_shardings) for the working (bf16) params."""
+    specs = tr.param_specs(cfg)
+    pspecs = partition.param_pspecs(cfg, specs, mesh)
+    return _to_dtype_specs(specs, jnp.bfloat16), _named(mesh, pspecs)
+
+
+def make_train_step(cfg: tr.ModelConfig, mesh, batch_specs,
+                    opt_cfg: Optional[opt_mod.AdamWConfig] = None,
+                    aux_weight: float = 0.01,
+                    donate: bool = True):
+    """Returns (train_step, (param_specs, opt_specs)) —
+    args = (params, opt_state, batch)."""
+    opt_cfg = opt_cfg or opt_mod.AdamWConfig()
+    from repro.launch.mesh import dp_axes
+
+    dp = dp_axes(mesh)
+    dp = dp[0] if len(dp) == 1 else dp
+
+    def loss_fn(params, batch):
+        logits, aux = tr.model_forward(cfg, params, batch)
+        logits = jax.lax.with_sharding_constraint(
+            logits, NamedSharding(mesh, P(dp, None, "model")))
+        return cross_entropy(logits, batch["labels"]) + aux_weight * aux
+
+    def train_step(params, opt_state, batch):
+        with hints(mesh, dp, "model"):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            params, opt_state, metrics = opt_mod.adamw_update(
+                opt_cfg, grads, opt_state)
+        return params, opt_state, dict(metrics, loss=loss)
+
+    param_specs, param_sh = model_shardings(cfg, mesh)
+    opt_specs = jax.eval_shape(opt_mod.adamw_init, param_specs)
+    pspecs = partition.param_pspecs(cfg, tr.param_specs(cfg), mesh)
+    opt_sh = _named(mesh, partition.opt_state_pspecs(pspecs))
+    batch_sh = _named(mesh, partition.batch_pspecs(batch_specs, mesh))
+
+    fn = jax.jit(
+        train_step,
+        in_shardings=(param_sh, opt_sh, batch_sh),
+        out_shardings=(param_sh, opt_sh, None),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return fn, (param_specs, opt_specs)
+
+
+def make_prefill_step(cfg: tr.ModelConfig, mesh, batch_specs, max_seq: int):
+    from repro.launch.mesh import dp_axes
+
+    dp = dp_axes(mesh)
+    dp = dp[0] if len(dp) == 1 else dp
+
+    def prefill_step(params, batch):
+        with hints(mesh, dp, "model"):
+            logits, cache = tr.prefill(cfg, params, batch, max_seq=max_seq)
+        return logits, cache
+
+    param_specs, param_sh = model_shardings(cfg, mesh)
+    batch_sh = _named(mesh, partition.batch_pspecs(batch_specs, mesh))
+    cache_specs = jax.eval_shape(
+        lambda: tr.init_cache(cfg, batch_specs["tokens"].shape[0], max_seq,
+                              jnp.bfloat16))
+    cache_sh = _named(mesh, partition.cache_pspecs(cfg, cache_specs, mesh))
+    fn = jax.jit(prefill_step, in_shardings=(param_sh, batch_sh),
+                 out_shardings=(None, cache_sh))
+    return fn, (param_specs,)
+
+
+def make_decode_step(cfg: tr.ModelConfig, mesh, batch: int, max_seq: int,
+                     donate: bool = True, seq_shard_kv: bool = False):
+    """serve_step: one new token against a seq-length KV cache.
+    ``seq_shard_kv`` enables distributed flash-decoding (§Perf cell B)."""
+    from repro.launch.mesh import dp_axes
+
+    dp = dp_axes(mesh)
+    dp = dp[0] if len(dp) == 1 else dp
+
+    def decode(params, cache, token, pos):
+        with hints(mesh, dp, "model", kv_seq_shard=seq_shard_kv):
+            return tr.decode_step(cfg, params, cache, token, pos)
+
+    param_specs, param_sh = model_shardings(cfg, mesh)
+    cache_specs = jax.eval_shape(
+        lambda: tr.init_cache(cfg, batch, max_seq, jnp.bfloat16))
+    cache_sh = _named(mesh, partition.cache_pspecs(
+        cfg, cache_specs, mesh, seq_shard=seq_shard_kv))
+    _, dp_size = partition._dp_of(mesh)
+    tok_sh = NamedSharding(mesh, P(dp if batch % dp_size == 0 else None))
+    pos_sh = NamedSharding(mesh, P())
+
+    fn = jax.jit(
+        decode,
+        in_shardings=(param_sh, cache_sh, tok_sh, pos_sh),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(1,) if donate else (),
+    )
+    return fn, (param_specs, cache_specs)
+
+
+# ---------------------------------------------------------------------------
+# GCN (the paper's own workload) on the production mesh
+# ---------------------------------------------------------------------------
+
+def make_gcn_step(mesh, n_nodes: int, n_feat: int, hidden: int,
+                  n_classes: int, n_steps: int, nnz_per_step: int,
+                  rows_per_window: int):
+    """Sharded 2-layer GCN inference through an AWB schedule: schedule steps
+    (equal work) shard over the data axis — the device-level realization of
+    the paper's balanced PE partition; features/hidden shard over model.
+
+    Returns (fn, arg_specs): args = (x, w1, w2, val, lrow, lcol, win, cblk,
+    row_map). Lowering only needs shapes, so the dry-run can size ``n_steps``
+    from dataset stats without materializing the graph.
+    """
+    from repro.launch.mesh import dp_axes
+
+    dp = dp_axes(mesh)
+    dp_size = partition._dp_of(mesh)[1]
+    model_size = mesh.shape["model"]
+    dp = dp[0] if len(dp) == 1 else dp
+    r = rows_per_window
+    k = nnz_per_step
+
+    def pad_to(x, m):
+        return -(-x // m) * m
+
+    # pad spec dims to mesh-divisible sizes (production pads the arrays)
+    n_feat = pad_to(n_feat, model_size)
+    hidden = pad_to(hidden, model_size)
+    n_steps = pad_to(n_steps, dp_size)
+
+    def spmm(val, lrow, lcol, win, b, row_map):
+        # balanced steps over dp; each step's gather+scatter is local, the
+        # scatter-add across devices is the reduce the paper's ACC buffers do
+        gcol = jnp.minimum(lcol, b.shape[0] - 1)
+        slot = win[:, None] * r + lrow
+        gathered = b[gcol.reshape(-1)] * val.reshape(-1)[:, None]
+        gathered = jax.lax.with_sharding_constraint(
+            gathered.reshape(val.shape[0], k, -1),
+            NamedSharding(mesh, P(dp, None, "model")))
+        n_windows = row_map.shape[0] // r
+        out_perm = jnp.zeros((n_windows * r, b.shape[1]), b.dtype)
+        out_perm = out_perm.at[slot.reshape(-1)].add(
+            gathered.reshape(-1, b.shape[1]))
+        valid = row_map >= 0
+        tgt = jnp.where(valid, row_map, 0)
+        out = jnp.zeros((n_nodes, b.shape[1]), b.dtype)
+        return out.at[tgt].add(jnp.where(valid[:, None], out_perm, 0))
+
+    def gcn_infer(x, w1, w2, val, lrow, lcol, win, cblk, row_map):
+        h = jax.nn.relu(spmm(val, lrow, lcol, win, x @ w1, row_map))
+        return spmm(val, lrow, lcol, win, h @ w2, row_map)
+
+    f32 = jnp.float32
+    i32 = jnp.int32
+    specs = (
+        jax.ShapeDtypeStruct((n_nodes, n_feat), f32),       # x
+        jax.ShapeDtypeStruct((n_feat, hidden), f32),        # w1
+        jax.ShapeDtypeStruct((hidden, n_classes), f32),     # w2
+        jax.ShapeDtypeStruct((n_steps, k), f32),            # val
+        jax.ShapeDtypeStruct((n_steps, k), i32),            # lrow (slot-local)
+        jax.ShapeDtypeStruct((n_steps, k), i32),            # lcol (global col)
+        jax.ShapeDtypeStruct((n_steps,), i32),              # win
+        jax.ShapeDtypeStruct((n_steps,), i32),              # cblk
+        jax.ShapeDtypeStruct((n_steps * r,), i32),          # row_map (≥)
+    )
+    sh = (
+        NamedSharding(mesh, P(None, "model")),
+        NamedSharding(mesh, P("model", None)),
+        NamedSharding(mesh, P(None, None)),
+        NamedSharding(mesh, P(dp, None)),
+        NamedSharding(mesh, P(dp, None)),
+        NamedSharding(mesh, P(dp, None)),
+        NamedSharding(mesh, P(dp)),
+        NamedSharding(mesh, P(dp)),
+        NamedSharding(mesh, P(None)),
+    )
+    fn = jax.jit(gcn_infer, in_shardings=sh)
+    return fn, specs

@@ -1,0 +1,101 @@
+"""Training driver: runs on whatever devices exist (CPU here, a pod in
+production) with the same step factory the dry-run lowers.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+        --reduced --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+
+Fault tolerance: atomic keep-k checkpoints (params, optimizer, data cursor)
+every ``--ckpt-every`` steps; rerunning the same command resumes from the
+newest complete checkpoint (kill it mid-run to test).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as cfgs
+from repro.data.tokens import TokenPipeline
+from repro.launch import steps
+from repro.launch.mesh import make_local_mesh
+from repro.models import transformer as tr
+from repro.training import optimizer as opt_mod
+from repro.training.checkpoint import CheckpointManager
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = (cfgs.get_reduced_config(args.arch) if args.reduced
+           else cfgs.get_config(args.arch))
+    mesh = make_local_mesh(args.model_axis)
+    opt_cfg = opt_mod.AdamWConfig(lr=args.lr, warmup_steps=10,
+                                  total_steps=max(args.steps, 11))
+
+    pipe = TokenPipeline(cfg.vocab, args.batch, args.seq, seed=args.seed)
+    batch_specs = jax.eval_shape(lambda: pipe.next_batch())
+    if cfg.encoder is not None:
+        batch_specs["source_embed"] = jax.ShapeDtypeStruct(
+            (args.batch, cfg.encoder.max_source, cfg.d_model), jnp.float32)
+    train_step, (param_specs, opt_specs) = steps.make_train_step(
+        cfg, mesh, batch_specs, opt_cfg=opt_cfg)
+
+    key = jax.random.PRNGKey(args.seed)
+    params_f32 = tr.init_params(cfg, key)
+    params = jax.tree.map(lambda x: x.astype(jnp.bfloat16), params_f32)
+    opt_state = opt_mod.adamw_init(params_f32)
+    del params_f32
+
+    mgr = None
+    start_step = 0
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir, keep=2)
+        if mgr.latest_step() is not None:
+            (params, opt_state), meta = mgr.restore((params, opt_state))
+            pipe.restore_state(meta["extra"]["pipeline"])
+            start_step = meta["step"]
+            print(f"resumed from step {start_step}")
+
+    losses = []
+    t0 = time.time()
+    for step in range(start_step, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
+        if cfg.encoder is not None:
+            batch["source_embed"] = jnp.zeros(
+                (args.batch, cfg.encoder.max_source, cfg.d_model),
+                jnp.float32)
+        params, opt_state, metrics = train_step(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            dt = time.time() - t0
+            print(f"step {step:5d} loss {losses[-1]:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"lr {float(metrics['lr']):.2e} ({dt:.1f}s)", flush=True)
+        if mgr and (step + 1) % args.ckpt_every == 0:
+            mgr.save(step + 1, (params, opt_state),
+                     extra={"pipeline": pipe.checkpoint_state()})
+    if mgr:
+        mgr.save(args.steps, (params, opt_state),
+                 extra={"pipeline": pipe.checkpoint_state()})
+    print(f"first-loss {losses[0] if start_step == 0 else float('nan'):.4f} "
+          f"last-loss {losses[-1]:.4f}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

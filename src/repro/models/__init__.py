@@ -1,0 +1,13 @@
+"""LM substrate: the assigned architectures as composable JAX modules."""
+from repro.models.transformer import (  # noqa: F401
+    ModelConfig,
+    MoEConfig,
+    EncoderConfig,
+    init_params,
+    model_forward,
+    init_cache,
+    prefill,
+    decode_step,
+    param_specs,
+    count_params,
+)

@@ -1,0 +1,175 @@
+"""GQA attention layer: RoPE, optional QKV bias, QK-norm, local window,
+KV cache for prefill/decode. Backend-switchable core (XLA / Pallas flash)."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import common
+from repro.sharding.hints import constrain, get_flag
+
+
+class AttnDims(NamedTuple):
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    qkv_bias: bool
+    qk_norm: bool
+    rope: bool
+    rope_theta: float
+    window: Optional[int]
+    chunk: Optional[int] = None  # flash-style chunked XLA path (§Perf)
+
+
+def init_attn_params(key: jax.Array, dims: AttnDims) -> dict:
+    d, h, hkv, dh = dims.d_model, dims.n_heads, dims.n_kv_heads, dims.d_head
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": common.dense_init(ks[0], (d, h * dh)),
+        "wk": common.dense_init(ks[1], (d, hkv * dh)),
+        "wv": common.dense_init(ks[2], (d, hkv * dh)),
+        "wo": common.dense_init(ks[3], (h * dh, d)),
+    }
+    if dims.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), jnp.float32)
+        p["bk"] = jnp.zeros((hkv * dh,), jnp.float32)
+        p["bv"] = jnp.zeros((hkv * dh,), jnp.float32)
+    if dims.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), jnp.float32)
+        p["k_norm"] = jnp.ones((dh,), jnp.float32)
+    return p
+
+
+def _project_qkv(p: dict, dims: AttnDims, x: jax.Array, positions: jax.Array,
+                 rope: bool = True):
+    b, s, _ = x.shape
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if dims.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(b, s, dims.n_heads, dims.d_head)
+    k = k.reshape(b, s, dims.n_kv_heads, dims.d_head)
+    v = v.reshape(b, s, dims.n_kv_heads, dims.d_head)
+    if dims.qk_norm:
+        q = common.rmsnorm(q, p["q_norm"])
+        k = common.rmsnorm(k, p["k_norm"])
+    if dims.rope and rope:
+        q = common.apply_rope(q, positions, dims.rope_theta)
+        k = common.apply_rope(k, positions, dims.rope_theta)
+    # canonical Megatron sharding: q heads over TP, kv replicated (GQA kv
+    # counts rarely divide the model axis; scores inherit q's head sharding).
+    # Decode with a sequence-sharded cache (distributed flash-decoding,
+    # §Perf cell B) keeps q replicated so scores shard over the cache seq.
+    if s == 1 and get_flag("kv_seq_shard"):
+        q = constrain(q, ("dp", None, None, None))
+    else:
+        q = constrain(q, ("dp", None, "tp", None))
+    k = constrain(k, ("dp", None, None, None))
+    v = constrain(v, ("dp", None, None, None))
+    return q, k, v
+
+
+def attn_forward(p: dict, dims: AttnDims, x: jax.Array,
+                 positions: Optional[jax.Array] = None,
+                 causal: bool = True, backend: Optional[str] = None,
+                 cross_kv: Optional[tuple] = None) -> jax.Array:
+    """Full-sequence attention (training / encoder). x: [B, S, d].
+    Cross-attention (cross_kv given) is position-free: no RoPE on q."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _project_qkv(p, dims, x, positions, rope=cross_kv is None)
+    if cross_kv is not None:
+        k, v = cross_kv
+        causal = False
+    out = ops.attention(q, k, v, causal=causal, window=dims.window,
+                        backend=backend, chunk=dims.chunk)
+    out = constrain(out, ("dp", None, "tp", None))
+    out = out.reshape(b, s, dims.n_heads * dims.d_head)
+    return constrain(out @ p["wo"].astype(x.dtype), ("dp", None, None))
+
+
+def cache_len(dims: AttnDims, max_seq: int) -> int:
+    """Local-window layers keep a ring buffer of ``window`` entries — this
+    is what makes hybrid archs (recurrentgemma) long_500k-capable."""
+    return min(max_seq, dims.window) if dims.window else max_seq
+
+
+def init_kv_cache(dims: AttnDims, batch: int, max_seq: int,
+                  dtype=jnp.bfloat16) -> dict:
+    shape = (batch, cache_len(dims, max_seq), dims.n_kv_heads, dims.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attn_prefill(p: dict, dims: AttnDims, x: jax.Array, cache: dict,
+                 backend: Optional[str] = None) -> tuple:
+    """Prefill: attend causally over x, write K/V into the cache (ring
+    layout for windowed layers: position s lives in slot s % W)."""
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _project_qkv(p, dims, x, positions)
+    w = cache["k"].shape[1]
+    if s <= w:
+        cache = {
+            "k": jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
+        }
+    else:  # keep the last w positions at slots (s % w) — static scatter
+        idx = (jnp.arange(s - w, s) % w)
+        cache = {
+            "k": cache["k"].at[:, idx].set(k[:, -w:].astype(cache["k"].dtype)),
+            "v": cache["v"].at[:, idx].set(v[:, -w:].astype(cache["v"].dtype)),
+        }
+    out = ops.attention(q, k, v, causal=True, window=dims.window,
+                        backend=backend, chunk=dims.chunk)
+    out = out.reshape(b, s, dims.n_heads * dims.d_head)
+    return out @ p["wo"].astype(x.dtype), cache
+
+
+def attn_decode(p: dict, dims: AttnDims, x: jax.Array, cache: dict,
+                pos: jax.Array) -> tuple:
+    """One-token decode. x: [B, 1, d]; ``pos`` scalar position. Attends over
+    the static-length cache with position masking (the decode_32k lowering:
+    full-cache attention every step). Windowed layers use the ring slot
+    ``pos % W``; softmax is permutation-invariant so slot order is free."""
+    b, _, _ = x.shape
+    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    q, k, v = _project_qkv(p, dims, x, positions)
+    s_max = cache["k"].shape[1]
+    slot = pos % s_max if dims.window else pos
+    cache = {
+        "k": jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0)),
+    }
+    kk, vv = cache["k"], cache["v"]
+    groups = dims.n_heads // dims.n_kv_heads
+    seq_sharded = bool(get_flag("kv_seq_shard")) and dims.window is None
+    kk = jnp.repeat(kk, groups, axis=2).astype(jnp.float32)
+    vv = jnp.repeat(vv, groups, axis=2).astype(jnp.float32)
+    if seq_sharded:  # distributed flash-decoding: scores shard over seq
+        kk = constrain(kk, ("dp", "tp", None, None))
+        vv = constrain(vv, ("dp", "tp", None, None))
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kk)
+    logits = logits * (dims.d_head ** -0.5)
+    if seq_sharded:
+        logits = constrain(logits, ("dp", None, None, "tp"))
+    kpos = jnp.arange(s_max)
+    # ring buffer: every written slot is within the window by construction;
+    # `kpos <= pos` masks not-yet-written slots during warmup
+    valid = kpos <= pos
+    logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv).astype(x.dtype)
+    out = out.reshape(b, 1, dims.n_heads * dims.d_head)
+    return out @ p["wo"].astype(x.dtype), cache

@@ -1,0 +1,32 @@
+"""Dense MLP: GLU-gated (SwiGLU/GeGLU) or plain two-layer."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.sharding.hints import constrain
+
+
+def init_mlp_params(key: jax.Array, d_model: int, d_ff: int,
+                    glu: bool) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": common.dense_init(ks[0], (d_model, d_ff)),
+        "w_out": common.dense_init(ks[1], (d_ff, d_model)),
+    }
+    if glu:
+        p["w_gate"] = common.dense_init(ks[2], (d_model, d_ff))
+    return p
+
+
+def mlp_forward(p: dict, x: jax.Array, activation: str, glu: bool
+                ) -> jax.Array:
+    act = common.activation_fn(activation)
+    h = constrain(x @ p["w_in"].astype(x.dtype), ("dp", None, "tp"))
+    if glu:
+        h = act(constrain(x @ p["w_gate"].astype(x.dtype),
+                          ("dp", None, "tp"))) * h
+    else:
+        h = act(h)
+    return constrain(h @ p["w_out"].astype(x.dtype), ("dp", None, None))

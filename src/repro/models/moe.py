@@ -1,0 +1,193 @@
+"""Mixture-of-Experts FFN with AWB-balanced dispatch.
+
+Top-k routing with capacity-bounded sort-free dispatch (one-hot cumsum
+position ranking + scatter into per-expert buffers), expert compute as
+stacked einsums (EP: the expert dimension shards over the ``model`` mesh
+axis), and gather-combine.
+
+AWB integration (DESIGN.md §5): router histograms are power-law — a few
+"evil" experts absorb most tokens. ``core.moe_balance`` converts a profiled
+(EMA) load into an ``ExpertPlacement`` with hot-expert *replicas*; the
+dispatch below accepts the placement as two traced tables and routes token i
+of expert e to replica ``i % r_e`` — chunking an evil expert across devices
+exactly like evil-row remapping chunks a row across PEs. The combine step's
+weighted sum is the adder tree. With ``placement=None`` dispatch degenerates
+to the standard static layout (the paper's baseline).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.sharding.hints import constrain
+
+
+class MoEDims(NamedTuple):
+    d_model: int
+    d_ff: int          # per-expert hidden
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    activation: str = "silu"
+    glu: bool = True
+    n_slots: int = 0   # 0 => n_experts (no replication headroom)
+    n_groups: int = 1  # EP dispatch groups (§Perf: set to the dp shard
+    # count so ranking/capacity/buffers are group-local — GSPMD then keeps
+    # dispatch on-shard instead of all-reducing a global capacity buffer)
+
+
+class PlacementTables(NamedTuple):
+    """Traced AWB placement: slot_of[e, r] = slot hosting replica r of e
+    (padded by repeating replica 0); n_replicas[e] ≥ 1. Slots shard over the
+    model axis; slot s holds expert expert_of[s]."""
+
+    slot_of: jax.Array     # [E, max_rep] int32
+    n_replicas: jax.Array  # [E] int32
+    expert_of: jax.Array   # [n_slots] int32
+
+
+def identity_placement(dims: MoEDims) -> PlacementTables:
+    e = dims.n_experts
+    return PlacementTables(
+        slot_of=jnp.arange(e, dtype=jnp.int32)[:, None],
+        n_replicas=jnp.ones((e,), jnp.int32),
+        expert_of=jnp.arange(dims.n_slots or e, dtype=jnp.int32),
+    )
+
+
+def tables_from_placement(placement) -> PlacementTables:
+    """Convert a ``core.moe_balance.ExpertPlacement`` to traced tables."""
+    import numpy as np
+
+    slots = np.asarray(placement.slots).reshape(-1)         # [n_slots]
+    rrank = np.asarray(placement.replica_rank).reshape(-1)
+    reps = np.asarray(placement.replica_count)
+    e = reps.shape[0]
+    max_rep = int(reps.max())
+    slot_of = np.zeros((e, max_rep), np.int32)
+    for s, (eid, r) in enumerate(zip(slots, rrank)):
+        if eid >= 0:
+            slot_of[eid, r] = s
+    for eid in range(e):  # pad unused replica slots with replica 0
+        slot_of[eid, reps[eid]:] = slot_of[eid, 0]
+    return PlacementTables(jnp.asarray(slot_of), jnp.asarray(reps),
+                           jnp.asarray(slots.astype(np.int32)))
+
+
+def init_moe_params(key: jax.Array, dims: MoEDims) -> dict:
+    e = dims.n_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": common.dense_init(ks[0], (dims.d_model, e)),
+        "w_in": jax.vmap(lambda k: common.dense_init(
+            k, (dims.d_model, dims.d_ff)))(jax.random.split(ks[1], e)),
+        "w_out": jax.vmap(lambda k: common.dense_init(
+            k, (dims.d_ff, dims.d_model)))(jax.random.split(ks[2], e)),
+    }
+    if dims.glu:
+        p["w_gate"] = jax.vmap(lambda k: common.dense_init(
+            k, (dims.d_model, dims.d_ff)))(jax.random.split(ks[3], e))
+    return p
+
+
+def moe_forward(p: dict, dims: MoEDims, x: jax.Array,
+                placement: Optional[PlacementTables] = None,
+                capacity_override: Optional[int] = None,
+                ) -> tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] -> (out, aux_loss). Capacity-dropped tokens pass through
+    the residual (standard Switch behaviour). ``capacity_override`` forces a
+    per-slot capacity (decode uses T*K: dropless)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = dims.n_experts, dims.top_k
+    n_slots = dims.n_slots or e
+    g = dims.n_groups if t % max(dims.n_groups, 1) == 0 else 1
+    tg = t // g
+    xt = x.reshape(g, tg, d)
+    act = common.activation_fn(dims.activation)
+
+    logits = (xt @ p["router"].astype(xt.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                         # [G,Tg,E]
+    gate_w, expert_ids = jax.lax.top_k(probs, k)                    # [G,Tg,K]
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (Switch): E * sum_e f_e * p_e (global)
+    me = probs.mean(axis=(0, 1))
+    ce = jnp.zeros((e,), jnp.float32).at[expert_ids.reshape(-1)].add(
+        1.0 / (t * k))
+    aux = e * jnp.sum(me * ce)
+
+    flat_e = expert_ids.reshape(g, tg * k)                          # [G,TKg]
+
+    def rank_within(group_ids):
+        """Arrival rank of each element within its (expert|slot) bucket,
+        independently per dispatch group — sort-based, O(TK log TK),
+        group-local so GSPMD keeps it on-shard."""
+        order = jnp.argsort(group_ids, axis=-1, stable=True)
+        sorted_g = jnp.take_along_axis(group_ids, order, axis=-1)
+        seg_start = jax.vmap(
+            lambda sg: jnp.searchsorted(sg, sg, side="left"))(sorted_g)
+        pos_sorted = jnp.arange(group_ids.shape[-1])[None] - seg_start
+        return jnp.zeros_like(pos_sorted).at[
+            jnp.arange(g)[:, None], order].set(pos_sorted)
+
+    pos_in_expert = rank_within(flat_e)                             # [G,TKg]
+
+    if placement is None:
+        placement = identity_placement(dims)
+    # evil-expert chunking: replica r = arrival_rank % n_replicas
+    reps = placement.n_replicas[flat_e]
+    replica = pos_in_expert % reps
+    max_rep = placement.slot_of.shape[1]
+    flat_slot = placement.slot_of[flat_e, jnp.minimum(replica, max_rep - 1)]
+    # rank within the *slot* (recount after replica assignment)
+    pos_in_slot = rank_within(flat_slot)
+
+    cap = capacity_override or max(1, int(
+        dims.capacity_factor * tg * k / n_slots))
+    keep = pos_in_slot < cap
+    pos_c = jnp.minimum(pos_in_slot, cap - 1)
+
+    # dispatch: buffers [G, n_slots, cap_g, d] — scatter stays group-local
+    # (slots unsharded), then an explicit reshard moves slot shards to
+    # their owner devices: the EP all-to-all (§Perf cell C; a scatter
+    # straight into a tp-sharded dim makes GSPMD all-gather the updates
+    # instead — 8× more wire)
+    gi = jnp.broadcast_to(jnp.arange(g)[:, None], flat_slot.shape)
+    buf = jnp.zeros((g, n_slots, cap, d), x.dtype)
+    src = jnp.repeat(xt, k, axis=1) * keep[..., None].astype(x.dtype)
+    if g > 1:
+        buf = constrain(buf.at[gi, flat_slot, pos_c].add(src),
+                        ("dp", None, None, None))
+        buf = constrain(buf, ("dp", "tp", None, None))  # all-to-all
+    else:  # baseline (paper-faithful global dispatch): direct EP scatter
+        buf = constrain(buf.at[gi, flat_slot, pos_c].add(src),
+                        (None, "tp", None, None))
+
+    # expert compute with slot-gathered weights (replicas share weights);
+    # the gather is static per placement and shards over the model axis
+    w_in = p["w_in"][placement.expert_of].astype(x.dtype)
+    w_out = p["w_out"][placement.expert_of].astype(x.dtype)
+    h = constrain(jnp.einsum("gscd,sdf->gscf", buf, w_in),
+                  ("dp", "tp", None, None))
+    if dims.glu:
+        w_gate = p["w_gate"][placement.expert_of].astype(x.dtype)
+        h = act(constrain(jnp.einsum("gscd,sdf->gscf", buf, w_gate),
+                          ("dp", "tp", None, None))) * h
+    else:
+        h = act(h)
+    out_buf = constrain(jnp.einsum("gscf,sfd->gscd", h, w_out),
+                        ("dp", "tp", None, None))                   # [G,S,C,d]
+    if g > 1:
+        out_buf = constrain(out_buf, ("dp", None, None, None))  # a2a back
+
+    # combine (the adder tree): weighted gather back to tokens
+    gathered = out_buf[gi, flat_slot, pos_c]                        # [G,TKg,d]
+    gathered = gathered * (gate_w.reshape(g, tg * k)[..., None]
+                           .astype(x.dtype)
+                           * keep[..., None].astype(x.dtype))
+    out = gathered.reshape(g, tg, k, d).sum(axis=2)
+    return out.reshape(b, s, d), aux

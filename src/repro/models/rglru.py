@@ -1,0 +1,99 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block: x -> (linear gate branch: GeLU) ⊙ (linear -> causal depthwise conv1d
+width 4 -> RG-LRU) -> linear out.
+
+RG-LRU per channel:
+    r_t = σ(W_a x_t + b_a)        (recurrence gate)
+    i_t = σ(W_x x_t + b_x)        (input gate)
+    a_t = a^(c·r_t),  a = σ(Λ)    (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t²) · (i_t ⊙ x_t)
+
+Runs as ``lax.scan`` over time; O(1) state per token (long_500k-capable).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.sharding.hints import constrain
+
+_C = 8.0
+CONV_WIDTH = 4
+
+
+class RGLRUDims(NamedTuple):
+    d_model: int
+    d_rnn: int
+
+
+def init_rglru_params(key: jax.Array, dims: RGLRUDims) -> dict:
+    d, dr = dims.d_model, dims.d_rnn
+    ks = jax.random.split(key, 6)
+    # Λ init so that a = σ(Λ)^c spreads over (0.9, 0.999)
+    lam = jax.random.uniform(ks[0], (dr,), jnp.float32, 2.0, 6.0)
+    return {
+        "w_x": common.dense_init(ks[1], (d, dr)),
+        "w_gate_branch": common.dense_init(ks[2], (d, dr)),
+        "conv_w": common.dense_init(ks[3], (CONV_WIDTH, dr), 0.1),
+        "conv_b": jnp.zeros((dr,), jnp.float32),
+        "lam": lam,
+        "w_a": common.dense_init(ks[4], (dr, dr)),
+        "b_a": jnp.zeros((dr,), jnp.float32),
+        "w_i": common.dense_init(ks[5], (dr, dr)),
+        "b_i": jnp.zeros((dr,), jnp.float32),
+        "w_out": common.dense_init(jax.random.fold_in(key, 7), (dr, d)),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 conv_state: jax.Array) -> tuple:
+    """Depthwise causal conv width 4. x: [B,S,dr]; conv_state: [B,3,dr]
+    (the previous 3 inputs). Returns (y, new_conv_state)."""
+    xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+            for i in range(CONV_WIDTH))
+    new_state = xp[:, -(CONV_WIDTH - 1):].astype(jnp.float32)
+    return y + b.astype(x.dtype), new_state
+
+
+def _lru_scan(xs: jax.Array, a_t: jax.Array, gated: jax.Array,
+              h0: jax.Array) -> tuple:
+    """h_t = a_t h_{t-1} + sqrt(1-a_t²) gated_t, scanned over S."""
+    def step(h, inp):
+        a, g = inp
+        h = a * h + jnp.sqrt(jnp.maximum(1.0 - a * a, 0.0)) * g
+        return h, h
+
+    h_last, hs = jax.lax.scan(
+        step, h0, (a_t.transpose(1, 0, 2), gated.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2), h_last
+
+
+def rglru_forward(p: dict, dims: RGLRUDims, x: jax.Array,
+                  state: dict) -> tuple:
+    """x: [B,S,d]; state {'h': [B,dr], 'conv': [B,3,dr]}."""
+    gate = jax.nn.gelu(constrain(x @ p["w_gate_branch"].astype(x.dtype),
+                                 ("dp", None, "tp")))
+    u = constrain(x @ p["w_x"].astype(x.dtype), ("dp", None, "tp"))
+    u, conv_state = _causal_conv(u, p["conv_w"], p["conv_b"], state["conv"])
+
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["w_a"] + p["b_a"])
+    i = jax.nn.sigmoid(uf @ p["w_i"] + p["b_i"])
+    log_a = -_C * r * jax.nn.softplus(p["lam"])   # log σ(Λ)^(c·r) (stable)
+    a_t = jnp.exp(log_a)
+    hs, h_last = _lru_scan(uf, a_t, i * uf, state["h"].astype(jnp.float32))
+
+    out = (hs.astype(x.dtype) * gate) @ p["w_out"].astype(x.dtype)
+    return out, {"h": h_last, "conv": conv_state}
+
+
+def init_rglru_state(dims: RGLRUDims, batch: int) -> dict:
+    return {
+        "h": jnp.zeros((batch, dims.d_rnn), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_WIDTH - 1, dims.d_rnn), jnp.float32),
+    }

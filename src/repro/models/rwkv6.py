@@ -1,0 +1,147 @@
+"""RWKV-6 "Finch" block: data-dependent-decay linear attention (arXiv:
+2404.05892). Attention-free: TimeMix (wkv recurrence) + ChannelMix.
+
+The wkv state recurrence runs as ``lax.scan`` over time for training and a
+single state update for decode (O(1) per token — this is why rwkv6 runs the
+``long_500k`` cell). The state math per head (d_k = d_v = head dim):
+
+    S_t = diag(w_t) S_{t-1} + k_tᵀ v_t
+    o_t = r_t (S_{t-1} + diag(u) k_tᵀ v_t)
+
+with w_t = exp(-exp(decay_t)) data-dependent per channel (DDLerp + LoRA).
+
+Accounting note (EXPERIMENTS.md §Roofline): the scanned wkv body is <1% of
+layer FLOPs (outer products, d_head² per token vs d·d_ff matmuls); the
+dominant compute is the dense projections, which the roofline extrapolation
+counts exactly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.sharding.hints import constrain
+
+
+class RWKVDims(NamedTuple):
+    d_model: int
+    n_heads: int
+    d_head: int
+    d_ff: int
+    lora_r: int = 32
+
+
+def init_rwkv_params(key: jax.Array, dims: RWKVDims) -> dict:
+    d, h, dh = dims.d_model, dims.n_heads, dims.d_head
+    ks = jax.random.split(key, 16)
+    p = {
+        # DDLerp mix coefficients (token-shift interpolation)
+        "mu_x": jnp.full((d,), 0.5, jnp.float32),
+        "mu": jnp.stack([jnp.full((d,), 0.5, jnp.float32)] * 5),  # r,k,v,w,g
+        "lora_a": common.dense_init(ks[0], (d, 5 * dims.lora_r), 0.01),
+        "lora_b": common.dense_init(ks[1], (5, dims.lora_r, d), 0.01),
+        # projections
+        "wr": common.dense_init(ks[2], (d, h * dh)),
+        "wk": common.dense_init(ks[3], (d, h * dh)),
+        "wv": common.dense_init(ks[4], (d, h * dh)),
+        "wg": common.dense_init(ks[5], (d, h * dh)),
+        "wo": common.dense_init(ks[6], (h * dh, d)),
+        # decay: w0 + lora
+        "w0": jnp.full((h * dh,), -5.0, jnp.float32),
+        "wa": common.dense_init(ks[7], (d, dims.lora_r), 0.01),
+        "wb": common.dense_init(ks[8], (dims.lora_r, h * dh), 0.01),
+        # per-channel bonus
+        "u": jnp.zeros((h, dh), jnp.float32),
+        "ln_x": jnp.ones((h * dh,), jnp.float32),  # group-norm on output
+        # channel mix
+        "cm_mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "cm_mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "cm_wk": common.dense_init(ks[9], (d, dims.d_ff)),
+        "cm_wv": common.dense_init(ks[10], (dims.d_ff, d)),
+        "cm_wr": common.dense_init(ks[11], (d, d)),
+    }
+    return p
+
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent token-shift mixing -> (xr, xk, xv, xw, xg)."""
+    delta = x_prev - x
+    xx = x + delta * p["mu_x"].astype(x.dtype)
+    lo = jnp.tanh(xx @ p["lora_a"].astype(x.dtype))        # [B,S,5r]
+    b, s, _ = x.shape
+    lo = lo.reshape(b, s, 5, -1)
+    mixes = p["mu"].astype(x.dtype) + jnp.einsum(
+        "bsfr,frd->bsfd", lo, p["lora_b"].astype(x.dtype))  # [B,S,5,d]
+    return [x + delta * mixes[:, :, i] for i in range(5)]
+
+
+def _wkv_scan(r, k, v, w, u, state):
+    """r,k,v: [B,S,H,dh]; w: [B,S,H,dh] decay in (0,1); state [B,H,dh,dh].
+    Returns (out [B,S,H,dh], new_state)."""
+    def step(s_prev, inp):
+        rt, kt, vt, wt = inp  # [B,H,dh]
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        out = jnp.einsum("bhk,bhkv->bhv", rt,
+                         s_prev + u[None, :, :, None] * kv)
+        s_new = wt[..., None] * s_prev + kv
+        return s_new, out
+
+    xs = (r.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3))
+    state, out = jax.lax.scan(step, state, xs)
+    return out.transpose(1, 0, 2, 3), state
+
+
+def rwkv_time_mix(p: dict, dims: RWKVDims, x: jax.Array,
+                  x_prev: jax.Array, state: jax.Array) -> tuple:
+    """x: [B,S,d]; x_prev: [B,1,d] last token of previous chunk;
+    state: [B,H,dh,dh]. Returns (out, new_x_prev, new_state)."""
+    b, s, d = x.shape
+    h, dh = dims.n_heads, dims.d_head
+    shifted = jnp.concatenate([x_prev.astype(x.dtype), x[:, :-1]], axis=1)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, shifted)
+
+    r = constrain((xr @ p["wr"].astype(x.dtype)).reshape(b, s, h, dh),
+                  ("dp", None, "tp", None))
+    k = constrain((xk @ p["wk"].astype(x.dtype)).reshape(b, s, h, dh),
+                  ("dp", None, "tp", None))
+    v = constrain((xv @ p["wv"].astype(x.dtype)).reshape(b, s, h, dh),
+                  ("dp", None, "tp", None))
+    g = jax.nn.silu(xg @ p["wg"].astype(x.dtype))
+    decay = p["w0"].astype(jnp.float32) + (
+        jnp.tanh(xw.astype(jnp.float32) @ p["wa"]) @ p["wb"])
+    w = jnp.exp(-jnp.exp(decay)).reshape(b, s, h, dh).astype(jnp.float32)
+
+    out, state = _wkv_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                           v.astype(jnp.float32), w,
+                           p["u"].astype(jnp.float32),
+                           state.astype(jnp.float32))
+    out = out.reshape(b, s, h * dh)
+    # per-head group norm
+    out = out.reshape(b, s, h, dh)
+    out = out * jax.lax.rsqrt(jnp.mean(out * out, -1, keepdims=True) + 1e-6)
+    out = out.reshape(b, s, h * dh) * p["ln_x"]
+    out = (out.astype(x.dtype) * g) @ p["wo"].astype(x.dtype)
+    return out, x[:, -1:], state
+
+
+def rwkv_channel_mix(p: dict, x: jax.Array, x_prev: jax.Array) -> tuple:
+    shifted = jnp.concatenate([x_prev.astype(x.dtype), x[:, :-1]], axis=1)
+    xk = x + (shifted - x) * p["cm_mu_k"].astype(x.dtype)
+    xr = x + (shifted - x) * p["cm_mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(constrain(
+        xk @ p["cm_wk"].astype(x.dtype), ("dp", None, "tp"))))
+    kv = constrain(k @ p["cm_wv"].astype(x.dtype), ("dp", None, None))
+    return jax.nn.sigmoid(xr @ p["cm_wr"].astype(x.dtype)) * kv, x[:, -1:]
+
+
+def init_rwkv_state(dims: RWKVDims, batch: int) -> dict:
+    return {
+        "tm_x": jnp.zeros((batch, 1, dims.d_model), jnp.float32),
+        "cm_x": jnp.zeros((batch, 1, dims.d_model), jnp.float32),
+        "wkv": jnp.zeros((batch, dims.n_heads, dims.d_head, dims.d_head),
+                         jnp.float32),
+    }

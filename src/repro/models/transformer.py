@@ -1,0 +1,519 @@
+"""Model assembly for the assigned architectures.
+
+A model is a stack of *segments*; each segment is a repeating *unit* of
+layers (e.g. RecurrentGemma's ``(rglru, rglru, attn) × 8``) scanned with
+stacked parameters, so 80-layer models lower as one while-loop body. Layer
+kinds:
+
+  ``attn``      global causal GQA attention + dense MLP
+  ``local``     windowed attention + dense MLP (hybrid archs)
+  ``attn_moe``  attention + MoE FFN (AWB-balanced dispatch)
+  ``rwkv``      RWKV-6 TimeMix + ChannelMix (attention-free)
+  ``rglru``     RG-LRU recurrent block + dense MLP
+  ``xattn``     decoder layer with cross-attention (enc-dec)
+  ``enc``       bidirectional encoder layer + dense MLP
+
+Three entry points per model: ``model_forward`` (training, full sequence),
+``prefill`` (build cache), ``decode_step`` (one token). Caches are stacked
+per segment so decode also scans.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.attention import (AttnDims, attn_decode, attn_forward,
+                                    attn_prefill, init_attn_params,
+                                    init_kv_cache)
+from repro.sharding.hints import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int
+    capacity_factor: float = 1.25
+    n_slots: int = 0  # 0 => n_experts; > n_experts enables AWB replication
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    n_layers: int
+    max_source: int = 1500  # whisper audio frames after conv stem
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    segments: Tuple[Tuple[Tuple[str, ...], int], ...]
+    d_head: int = 0              # 0 => d_model // n_heads
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope: bool = True
+    rope_theta: float = 1e4
+    activation: str = "silu"
+    glu: bool = True
+    norm: str = "rmsnorm"
+    moe: Optional[MoEConfig] = None
+    window: Optional[int] = None
+    encoder: Optional[EncoderConfig] = None
+    frontend: Optional[str] = None   # audio | vision (stub per assignment)
+    tie_embeddings: bool = False
+    remat: bool = True
+    d_rnn: int = 0               # 0 => d_model (rglru width)
+    # §Perf knobs (paper-exact configs leave these at defaults)
+    attn_chunk: Optional[int] = None   # flash-style chunked attention
+    moe_groups: int = 1                # EP dispatch groups (≈ dp shards)
+    sp_carry: bool = False             # shard the remat-saved residual
+    # stream over the model axis (Megatron-SP-style activation memory)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def rnn_width(self) -> int:
+        return self.d_rnn or self.d_model
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True when no layer needs unwindowed attention over the full
+        sequence (long_500k eligibility)."""
+        kinds = [k for unit, rep in self.segments for k in unit]
+        return all(k in ("rwkv", "rglru", "local") for k in kinds)
+
+    def attn_dims(self, window: Optional[int]) -> AttnDims:
+        return AttnDims(self.d_model, self.n_heads, self.n_kv_heads,
+                        self.head_dim, self.qkv_bias, self.qk_norm,
+                        self.rope, self.rope_theta, window,
+                        self.attn_chunk)
+
+    @property
+    def rwkv_dims(self) -> rwkv_mod.RWKVDims:
+        return rwkv_mod.RWKVDims(self.d_model, self.n_heads, self.head_dim,
+                                 self.d_ff)
+
+    @property
+    def rglru_dims(self) -> rglru_mod.RGLRUDims:
+        return rglru_mod.RGLRUDims(self.d_model, self.rnn_width)
+
+    @property
+    def moe_dims(self) -> moe_mod.MoEDims:
+        m = self.moe
+        return moe_mod.MoEDims(self.d_model, m.d_expert, m.n_experts,
+                               m.top_k, m.capacity_factor, self.activation,
+                               self.glu, m.n_slots, self.moe_groups)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def _init_layer(cfg: ModelConfig, kind: str, key: jax.Array) -> dict:
+    ks = jax.random.split(key, 6)
+    p = {"norm1": common.norm_params(cfg.norm, cfg.d_model)}
+    if kind in ("attn", "attn_moe", "local", "xattn", "enc"):
+        window = cfg.window if kind == "local" else None
+        p["attn"] = init_attn_params(ks[0], cfg.attn_dims(window))
+        p["norm2"] = common.norm_params(cfg.norm, cfg.d_model)
+        if kind == "xattn":
+            p["xnorm"] = common.norm_params(cfg.norm, cfg.d_model)
+            p["xattn"] = init_attn_params(ks[1], cfg.attn_dims(None))
+            p["norm3"] = common.norm_params(cfg.norm, cfg.d_model)
+        if kind == "attn_moe":
+            p["moe"] = moe_mod.init_moe_params(ks[2], cfg.moe_dims)
+        else:
+            p["mlp"] = mlp_mod.init_mlp_params(ks[2], cfg.d_model, cfg.d_ff,
+                                               cfg.glu)
+    elif kind == "rwkv":
+        p["rwkv"] = rwkv_mod.init_rwkv_params(ks[0], cfg.rwkv_dims)
+        p["norm2"] = common.norm_params(cfg.norm, cfg.d_model)
+    elif kind == "rglru":
+        p["rec"] = rglru_mod.init_rglru_params(ks[0], cfg.rglru_dims)
+        p["norm2"] = common.norm_params(cfg.norm, cfg.d_model)
+        p["mlp"] = mlp_mod.init_mlp_params(ks[1], cfg.d_model, cfg.d_ff,
+                                           cfg.glu)
+    else:
+        raise ValueError(f"unknown layer kind {kind}")
+    return p
+
+
+def _init_unit(cfg: ModelConfig, unit: Tuple[str, ...], key: jax.Array
+               ) -> dict:
+    ks = jax.random.split(key, len(unit))
+    return {f"l{i}": _init_layer(cfg, kind, ks[i])
+            for i, kind in enumerate(unit)}
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    ks = jax.random.split(key, len(cfg.segments) + 4)
+    params = {
+        "embed": jax.random.normal(ks[0], (cfg.vocab, cfg.d_model),
+                                   jnp.float32) * 0.02,
+        "final_norm": common.norm_params(cfg.norm, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = common.dense_init(ks[1], (cfg.d_model, cfg.vocab))
+    for si, (unit, repeat) in enumerate(cfg.segments):
+        seg_keys = jax.random.split(ks[2 + si], repeat)
+        params[f"seg{si}"] = jax.vmap(
+            lambda k, u=unit: _init_unit(cfg, u, k))(seg_keys)
+    if cfg.encoder is not None:
+        enc_unit = ("enc",)
+        seg_keys = jax.random.split(ks[-1], cfg.encoder.n_layers)
+        params["encoder"] = jax.vmap(
+            lambda k: _init_unit(cfg, enc_unit, k))(seg_keys)
+        params["enc_norm"] = common.norm_params(cfg.norm, cfg.d_model)
+    return params
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    """ShapeDtypeStructs of the parameter pytree (no allocation)."""
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def count_params(cfg: ModelConfig) -> int:
+    specs = param_specs(cfg)
+    import numpy as np
+    return int(sum(np.prod(s.shape) for s in jax.tree.leaves(specs)))
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE: top_k of n_experts)."""
+    total = count_params(cfg)
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    n_moe_layers = sum(rep * sum(1 for k in unit if k == "attn_moe")
+                      for unit, rep in cfg.segments)
+    per_expert = cfg.d_model * m.d_expert * (3 if cfg.glu else 2)
+    inactive = n_moe_layers * per_expert * (m.n_experts - m.top_k)
+    return total - inactive
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / full-sequence)
+# ---------------------------------------------------------------------------
+
+def _norm(cfg, p, x):
+    return common.apply_norm(cfg.norm, x, p)
+
+
+def _layer_fwd(cfg: ModelConfig, kind: str, p: dict, x: jax.Array,
+               enc_out: Optional[jax.Array], backend: Optional[str]
+               ) -> tuple[jax.Array, jax.Array]:
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "attn_moe", "local", "xattn", "enc"):
+        window = cfg.window if kind == "local" else None
+        causal = kind != "enc"
+        h = attn_forward(p["attn"], cfg.attn_dims(window), _norm(cfg, p["norm1"], x),
+                         causal=causal, backend=backend)
+        x = x + h
+        if kind == "xattn":
+            b, s_enc, _ = enc_out.shape
+            dims = cfg.attn_dims(None)
+            enc_n = enc_out
+            kproj = (enc_n @ p["xattn"]["wk"].astype(x.dtype)).reshape(
+                b, s_enc, dims.n_kv_heads, dims.d_head)
+            vproj = (enc_n @ p["xattn"]["wv"].astype(x.dtype)).reshape(
+                b, s_enc, dims.n_kv_heads, dims.d_head)
+            h = attn_forward(p["xattn"], dims, _norm(cfg, p["xnorm"], x),
+                             causal=False, backend=backend,
+                             cross_kv=(kproj, vproj))
+            x = x + h
+            mlp_norm = p["norm3"]
+        else:
+            mlp_norm = p["norm2"]
+        if kind == "attn_moe":
+            h, aux = moe_mod.moe_forward(p["moe"], cfg.moe_dims,
+                                         _norm(cfg, mlp_norm, x))
+        else:
+            h = mlp_mod.mlp_forward(p["mlp"], _norm(cfg, mlp_norm, x),
+                                    cfg.activation, cfg.glu)
+        x = x + h
+    elif kind == "rwkv":
+        b = x.shape[0]
+        st = rwkv_mod.init_rwkv_state(cfg.rwkv_dims, b)
+        h, _, _ = rwkv_mod.rwkv_time_mix(p["rwkv"], cfg.rwkv_dims,
+                                         _norm(cfg, p["norm1"], x),
+                                         st["tm_x"], st["wkv"])
+        x = x + h
+        h, _ = rwkv_mod.rwkv_channel_mix(p["rwkv"], _norm(cfg, p["norm2"], x),
+                                         st["cm_x"])
+        x = x + h
+    elif kind == "rglru":
+        b = x.shape[0]
+        st = rglru_mod.init_rglru_state(cfg.rglru_dims, b)
+        h, _ = rglru_mod.rglru_forward(p["rec"], cfg.rglru_dims,
+                                       _norm(cfg, p["norm1"], x), st)
+        x = x + h
+        h = mlp_mod.mlp_forward(p["mlp"], _norm(cfg, p["norm2"], x),
+                                cfg.activation, cfg.glu)
+        x = x + h
+    else:
+        raise ValueError(kind)
+    return x, aux
+
+
+def _unit_fwd(cfg: ModelConfig, unit: Tuple[str, ...], p: dict, x: jax.Array,
+              enc_out, backend) -> tuple[jax.Array, jax.Array]:
+    aux = jnp.zeros((), jnp.float32)
+    for i, kind in enumerate(unit):
+        x, a = _layer_fwd(cfg, kind, p[f"l{i}"], x, enc_out, backend)
+        aux = aux + a
+    if cfg.sp_carry:
+        # remat saves the scan carry; shard it over the model axis so the
+        # 80-layer activation stash is 1/TP the size (§Perf cell A)
+        x = constrain(x, ("dp", None, "tp"))
+    return x, aux
+
+
+def _run_segments(cfg: ModelConfig, params: dict, x: jax.Array,
+                  enc_out, backend) -> tuple[jax.Array, jax.Array]:
+    aux_total = jnp.zeros((), jnp.float32)
+    for si, (unit, repeat) in enumerate(cfg.segments):
+        fn = functools.partial(_unit_fwd, cfg, unit, enc_out=enc_out,
+                               backend=backend)
+
+        def body(carry, seg_p, fn=fn):
+            y, aux = fn(seg_p, carry)
+            return y, aux
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, auxs = jax.lax.scan(lambda c, sp: body(c, sp), x,
+                               params[f"seg{si}"])
+        aux_total = aux_total + auxs.sum()
+    return x, aux_total
+
+
+def _encode(cfg: ModelConfig, params: dict, source_embed: jax.Array,
+            backend) -> jax.Array:
+    def body(carry, seg_p):
+        y, _ = _unit_fwd(cfg, ("enc",), seg_p, carry, None, backend)
+        return y, None
+
+    x, _ = jax.lax.scan(body, source_embed, params["encoder"])
+    return _norm(cfg, params["enc_norm"], x)
+
+
+def _logits(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    x = _norm(cfg, params["final_norm"], x)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(x.dtype)
+    return x @ head
+
+
+def model_forward(cfg: ModelConfig, params: dict, batch: dict,
+                  backend: Optional[str] = None,
+                  compute_dtype=jnp.bfloat16) -> tuple[jax.Array, jax.Array]:
+    """batch: {'tokens': [B,S] int32, optional 'source_embed': [B,T,d]}.
+    Returns (logits [B,S,vocab], aux_loss)."""
+    tokens = batch["tokens"]
+    x = constrain(params["embed"].astype(compute_dtype)[tokens],
+                  ("dp", None, None))
+    enc_out = None
+    if cfg.encoder is not None:
+        enc_out = _encode(cfg, params,
+                          batch["source_embed"].astype(compute_dtype),
+                          backend)
+    x, aux = _run_segments(cfg, params, x, enc_out, backend)
+    return _logits(cfg, params, x), aux
+
+
+# ---------------------------------------------------------------------------
+# Cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _init_layer_cache(cfg: ModelConfig, kind: str, batch: int, max_seq: int,
+                      dtype) -> dict:
+    if kind in ("attn", "attn_moe", "local", "xattn", "enc"):
+        window = cfg.window if kind == "local" else None
+        seq = min(max_seq, cfg.window) if window else max_seq
+        c = init_kv_cache(cfg.attn_dims(window), batch, max_seq, dtype)
+        if kind == "xattn":
+            src = cfg.encoder.max_source
+            dims = cfg.attn_dims(None)
+            c["xk"] = jnp.zeros((batch, src, dims.n_kv_heads, dims.d_head),
+                                dtype)
+            c["xv"] = jnp.zeros((batch, src, dims.n_kv_heads, dims.d_head),
+                                dtype)
+        return c
+    if kind == "rwkv":
+        return rwkv_mod.init_rwkv_state(cfg.rwkv_dims, batch)
+    if kind == "rglru":
+        return rglru_mod.init_rglru_state(cfg.rglru_dims, batch)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> dict:
+    cache = {}
+    for si, (unit, repeat) in enumerate(cfg.segments):
+        def one(_, unit=unit):
+            return {f"l{i}": _init_layer_cache(cfg, kind, batch, max_seq,
+                                               dtype)
+                    for i, kind in enumerate(unit)}
+        cache[f"seg{si}"] = jax.vmap(one)(jnp.arange(repeat))
+    return cache
+
+
+def _layer_prefill(cfg, kind, p, x, cache, enc_out, backend):
+    if kind in ("attn", "attn_moe", "local", "xattn"):
+        window = cfg.window if kind == "local" else None
+        h, kv = attn_prefill(p["attn"], cfg.attn_dims(window),
+                             _norm(cfg, p["norm1"], x),
+                             {"k": cache["k"], "v": cache["v"]}, backend)
+        cache = dict(cache, **kv)
+        x = x + h
+        if kind == "xattn":
+            b, s_enc, _ = enc_out.shape
+            dims = cfg.attn_dims(None)
+            kproj = (enc_out @ p["xattn"]["wk"].astype(x.dtype)).reshape(
+                b, s_enc, dims.n_kv_heads, dims.d_head)
+            vproj = (enc_out @ p["xattn"]["wv"].astype(x.dtype)).reshape(
+                b, s_enc, dims.n_kv_heads, dims.d_head)
+            pad = cache["xk"].shape[1] - s_enc
+            cache["xk"] = jnp.pad(kproj, ((0, 0), (0, pad), (0, 0), (0, 0))
+                                  ).astype(cache["xk"].dtype)
+            cache["xv"] = jnp.pad(vproj, ((0, 0), (0, pad), (0, 0), (0, 0))
+                                  ).astype(cache["xv"].dtype)
+            h = attn_forward(p["xattn"], dims, _norm(cfg, p["xnorm"], x),
+                             causal=False, backend=backend,
+                             cross_kv=(kproj, vproj))
+            x = x + h
+            mlp_norm = p["norm3"]
+        else:
+            mlp_norm = p["norm2"]
+        if kind == "attn_moe":
+            h, _ = moe_mod.moe_forward(p["moe"], cfg.moe_dims,
+                                       _norm(cfg, mlp_norm, x))
+        else:
+            h = mlp_mod.mlp_forward(p["mlp"], _norm(cfg, mlp_norm, x),
+                                    cfg.activation, cfg.glu)
+        x = x + h
+    elif kind == "rwkv":
+        h, tm_x, wkv = rwkv_mod.rwkv_time_mix(
+            p["rwkv"], cfg.rwkv_dims, _norm(cfg, p["norm1"], x),
+            cache["tm_x"].astype(x.dtype), cache["wkv"])
+        x = x + h
+        h, cm_x = rwkv_mod.rwkv_channel_mix(
+            p["rwkv"], _norm(cfg, p["norm2"], x),
+            cache["cm_x"].astype(x.dtype))
+        x = x + h
+        cache = {"tm_x": tm_x.astype(jnp.float32),
+                 "cm_x": cm_x.astype(jnp.float32), "wkv": wkv}
+    elif kind == "rglru":
+        h, st = rglru_mod.rglru_forward(p["rec"], cfg.rglru_dims,
+                                        _norm(cfg, p["norm1"], x), cache)
+        x = x + h
+        h = mlp_mod.mlp_forward(p["mlp"], _norm(cfg, p["norm2"], x),
+                                cfg.activation, cfg.glu)
+        x = x + h
+        cache = st
+    else:
+        raise ValueError(kind)
+    return x, cache
+
+
+def _seq_apply(cfg: ModelConfig, params: dict, cache: dict, x: jax.Array,
+               enc_out, backend, layer_fn) -> tuple[jax.Array, dict]:
+    """Scan ``layer_fn`` over every segment, threading caches."""
+    new_cache = {}
+    for si, (unit, repeat) in enumerate(cfg.segments):
+        def body(carry, inp, unit=unit):
+            seg_p, seg_c = inp
+            y = carry
+            out_c = {}
+            for i, kind in enumerate(unit):
+                y, c = layer_fn(cfg, kind, seg_p[f"l{i}"], y, seg_c[f"l{i}"],
+                                enc_out, backend)
+                out_c[f"l{i}"] = c
+            return y, out_c
+
+        x, seg_cache = jax.lax.scan(body, x,
+                                    (params[f"seg{si}"], cache[f"seg{si}"]))
+        new_cache[f"seg{si}"] = seg_cache
+    return x, new_cache
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict,
+            max_seq: int, backend: Optional[str] = None,
+            compute_dtype=jnp.bfloat16) -> tuple[jax.Array, dict]:
+    """Run the prompt, return (logits at last position, cache)."""
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    x = params["embed"].astype(compute_dtype)[tokens]
+    enc_out = None
+    if cfg.encoder is not None:
+        enc_out = _encode(cfg, params,
+                          batch["source_embed"].astype(compute_dtype),
+                          backend)
+    cache = init_cache(cfg, b, max_seq, compute_dtype)
+    x, cache = _seq_apply(cfg, params, cache, x, enc_out, backend,
+                          _layer_prefill)
+    return _logits(cfg, params, x[:, -1:]), cache
+
+
+def _layer_decode(cfg, kind, p, x, cache, pos, backend):
+    if kind in ("attn", "attn_moe", "local", "xattn"):
+        window = cfg.window if kind == "local" else None
+        h, kv = attn_decode(p["attn"], cfg.attn_dims(window),
+                            _norm(cfg, p["norm1"], x),
+                            {"k": cache["k"], "v": cache["v"]}, pos)
+        cache = dict(cache, **kv)
+        x = x + h
+        if kind == "xattn":
+            dims = cfg.attn_dims(None)
+            h = attn_forward(p["xattn"], dims, _norm(cfg, p["xnorm"], x),
+                             causal=False, backend=backend,
+                             cross_kv=(cache["xk"].astype(x.dtype),
+                                       cache["xv"].astype(x.dtype)))
+            x = x + h
+            mlp_norm = p["norm3"]
+        else:
+            mlp_norm = p["norm2"]
+        if kind == "attn_moe":
+            b, s, _ = x.shape
+            h, _ = moe_mod.moe_forward(
+                p["moe"], cfg.moe_dims, _norm(cfg, mlp_norm, x),
+                capacity_override=b * s * cfg.moe.top_k)  # decode: dropless
+        else:
+            h = mlp_mod.mlp_forward(p["mlp"], _norm(cfg, mlp_norm, x),
+                                    cfg.activation, cfg.glu)
+        x = x + h
+        return x, cache
+    # recurrent kinds: decode == prefill with S=1
+    return _layer_prefill(cfg, kind, p, x, cache, None, backend)
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                token: jax.Array, pos: jax.Array,
+                backend: Optional[str] = None,
+                compute_dtype=jnp.bfloat16) -> tuple[jax.Array, dict]:
+    """token: [B] int32; pos: scalar int32. Returns (logits [B,1,V], cache)."""
+    x = params["embed"].astype(compute_dtype)[token][:, None]
+
+    def layer_fn(cfg_, kind, p, y, c, enc_out, be):
+        return _layer_decode(cfg_, kind, p, y, c, pos, be)
+
+    x, cache = _seq_apply(cfg, params, cache, x, None, backend, layer_fn)
+    return _logits(cfg, params, x), cache

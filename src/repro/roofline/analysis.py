@@ -1,0 +1,173 @@
+"""Roofline accounting from compiled dry-run artifacts (TPU v5e terms).
+
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+``compiled.cost_analysis()`` on an SPMD module reports *per-device* flops
+and bytes, so the per-chip division is already applied; the collective
+parser below also works on the per-device SPMD module.
+
+Wire-byte model per collective (ring algorithms, per participant):
+    all-reduce       2·(n-1)/n · bytes(out)
+    all-gather         (n-1)/n · bytes(out)
+    reduce-scatter     (n-1)   · bytes(out)      (operand = n·out)
+    all-to-all         (n-1)/n · bytes(out)
+    collective-permute            bytes(out)
+
+Scan caveat: XLA counts a while-loop body once. Stacks of layers lower as
+scans, so per-cell totals are extrapolated: lower each segment's unit
+standalone (same shardings) and add (repeat−1) × unit cost. EXPERIMENTS.md
+§Roofline carries an unrolled-vs-extrapolated validation on qwen2-0.5b.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+# TPU v5e, per chip
+@dataclasses.dataclass(frozen=True)
+class _HW:
+    peak_flops_bf16: float = 197e12   # FLOP/s
+    hbm_bw: float = 819e9             # B/s
+    ici_bw: float = 50e9              # B/s per link
+    hbm_bytes: float = 16e9
+
+
+HW = _HW()
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|([a-z0-9_]+\[[0-9,]*\][^ ]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9_]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:
+    """Per-device wire bytes by collective kind, plus raw output bytes."""
+    out: Dict[str, float] = {}
+    wire_total = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        tuple_shapes, single_shape, kind = m.groups()
+        nbytes = _shape_bytes(tuple_shapes or single_shape)
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            n = len(gm.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            n = int(gi.group(2)) if gi else 2
+        n = max(n, 2)
+        # XLA:CPU promotes bf16 all-reduces to f32 ("to_apply=%add..._promoted");
+        # TPU reduces bf16 natively, so count promoted ARs at their bf16 width
+        if kind == "all-reduce" and "promoted" in line:
+            nbytes //= 2
+        if kind == "all-reduce":
+            wire = 2 * (n - 1) / n * nbytes
+        elif kind == "all-gather":
+            wire = (n - 1) / n * nbytes
+        elif kind == "reduce-scatter":
+            wire = (n - 1) * nbytes
+        elif kind == "all-to-all":
+            wire = (n - 1) / n * nbytes
+        else:  # collective-permute
+            wire = nbytes
+        out[f"{kind}_bytes"] = out.get(f"{kind}_bytes", 0.0) + nbytes
+        out[f"{kind}_wire"] = out.get(f"{kind}_wire", 0.0) + wire
+        out[f"{kind}_count"] = out.get(f"{kind}_count", 0) + 1
+        wire_total += wire
+    out["wire_bytes_total"] = wire_total
+    return out
+
+
+_DEF_RE = re.compile(r"^\s*%?([a-zA-Z0-9_.\-]+) = ([a-z0-9_]+\[[0-9,]*\])")
+_HBM_OPS = re.compile(
+    r"= (?:\(([^)]*)\)|([a-z0-9_]+\[[0-9,]*\][^ ]*))\s+"
+    r"(dot|convolution|all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute|scatter|gather|dynamic-update-slice|dynamic-slice)"
+    r"(?:-start)?\(([^)]*)\)")
+
+
+def tpu_hbm_bytes_from_hlo(hlo_text: str) -> float:
+    """TPU-fused HBM-traffic model (memory term v2).
+
+    XLA:CPU fuses far less than the TPU backend, so raw ``bytes accessed``
+    counts elementwise convert/broadcast/multiply chains that never touch
+    HBM on TPU. This model counts only traffic that *must* cross HBM:
+    parameters, dot/conv operands+outputs, collective outputs, and
+    scatter/gather/dynamic-slice outputs+inputs. It is a lower bound the
+    same way raw bytes is an upper bound; EXPERIMENTS.md reports both.
+    """
+    defs = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            defs[m.group(1)] = _shape_bytes(m.group(2))
+    total = 0.0
+    for line in hlo_text.splitlines():
+        if " parameter(" in line:
+            m = _DEF_RE.match(line)
+            if m:
+                total += defs.get(m.group(1), 0)
+            continue
+        m = _HBM_OPS.search(line)
+        if not m:
+            continue
+        tuple_shapes, single_shape, kind, operands = m.groups()
+        out_b = _shape_bytes(tuple_shapes or single_shape)
+        total += out_b
+        if kind in ("dot", "convolution", "scatter", "gather",
+                    "dynamic-update-slice", "dynamic-slice"):
+            for op in operands.split(","):
+                name = op.strip().lstrip("%").split(" ")[0]
+                total += defs.get(name, 0)
+    return total
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   wire_bytes_per_dev: float, hw: _HW = HW) -> dict:
+    compute_s = flops_per_dev / hw.peak_flops_bf16
+    memory_s = bytes_per_dev / hw.hbm_bw
+    collective_s = wire_bytes_per_dev / hw.ici_bw
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dom = max(terms, key=terms.get)
+    bound = max(compute_s, memory_s, collective_s)
+    terms.update({
+        "dominant": dom.replace("_s", ""),
+        "bound_s": bound,
+        # fraction of peak the dominant-term-bound execution achieves
+        "compute_roofline_fraction": compute_s / bound if bound else 0.0,
+    })
+    return terms
+
+
+def model_flops(n_params: int, n_active_params: int, tokens: int,
+                kind: str) -> float:
+    """6·N·D (train) / 2·N·D (forward) with MoE active params."""
+    n = n_active_params
+    return (6.0 if kind == "train" else 2.0) * n * tokens

@@ -1,0 +1,3 @@
+# Import submodules directly (repro.sharding.partition / .hints /
+# .collectives) — the package init stays empty to avoid import cycles with
+# model modules that use sharding hints.

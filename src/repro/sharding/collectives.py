@@ -1,0 +1,64 @@
+"""Distributed-optimization tricks: gradient compression with error
+feedback, and the comm/compute-overlap grad accumulation used by the train
+loop.
+
+``compress_grads``/``decompress_grads`` implement int8 uniform quantization
+with per-tensor scales and *error feedback* (the residual is carried to the
+next step), the standard trick for keeping compressed data-parallel
+all-reduces convergent (1-bit Adam / EF-SGD lineage). In a jit'd train step
+the quantize→(all-reduce)→dequantize sequence cuts DP gradient wire bytes 4×
+(fp32) or 2× (bf16); the roofline collective term scales accordingly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(grads, error_fb):
+    """Returns (int8 grads, scales, new_error_fb)."""
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        err = g - q.astype(jnp.float32) * scale
+        return q, scale, err
+
+    flat, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error_fb)
+    qs, scales, errs = zip(*[one(g, e) for g, e in zip(flat, flat_e)])
+    return (jax.tree.unflatten(treedef, qs),
+            jax.tree.unflatten(treedef, scales),
+            jax.tree.unflatten(treedef, errs))
+
+
+def decompress_grads(qgrads, scales):
+    return jax.tree.map(
+        lambda q, s: q.astype(jnp.float32) * s, qgrads, scales)
+
+
+def grad_accum_microbatches(loss_fn, params, batch, n_micro: int):
+    """Gradient accumulation via scan over microbatches. XLA overlaps the
+    per-microbatch reduce(-scatter) of bucket i with bucket i+1's backward
+    (the classic DP overlap); returns mean grads + mean loss."""
+    def split(x):
+        b = x.shape[0]
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+    micro = jax.tree.map(split, batch)
+
+    def body(carry, mb):
+        gsum, lsum = carry
+        loss, g = jax.value_and_grad(loss_fn)(params, mb)
+        gsum = jax.tree.map(jnp.add, gsum,
+                            jax.tree.map(lambda x: x.astype(jnp.float32), g))
+        return (gsum, lsum + loss), None
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (gsum, lsum), _ = jax.lax.scan(body, (zeros, 0.0), micro)
+    inv = 1.0 / n_micro
+    return jax.tree.map(lambda g: g * inv, gsum), lsum * inv

@@ -1,0 +1,59 @@
+"""Activation-sharding hints for model code.
+
+Model modules are mesh-agnostic; step factories install the current mesh +
+axis names here and the model sprinkles ``constrain(x, ("dp", None, "tp"))``
+at the canonical Megatron points (qkv heads, MLP hidden, MoE slots,
+residual stream). With no hints installed the calls are no-ops, so single-
+device tests and examples are unaffected.
+
+Explicit constraints matter because GSPMD's propagation can mis-shard
+reshapes whose dims don't divide the mesh axis (e.g. 14 attention heads on
+a 16-way model axis → it sharded d_head and all-reduced full S×S score
+tensors: 120 GB/step; see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def set_hints(mesh, dp, tp, **flags) -> None:
+    _STATE.value = (mesh, dp, tp, flags)
+
+
+def clear_hints() -> None:
+    _STATE.value = None
+
+
+@contextlib.contextmanager
+def hints(mesh, dp, tp, **flags):
+    prev = getattr(_STATE, "value", None)
+    set_hints(mesh, dp, tp, **flags)
+    try:
+        yield
+    finally:
+        _STATE.value = prev
+
+
+def get_flag(name: str, default=None):
+    h = getattr(_STATE, "value", None)
+    if h is None:
+        return default
+    return h[3].get(name, default)
+
+
+def constrain(x: jax.Array, dims: tuple):
+    """dims entries: 'dp' | 'tp' | None (one per array dim)."""
+    h = getattr(_STATE, "value", None)
+    if h is None:
+        return x
+    mesh, dp, tp, _ = h
+    spec = P(*[dp if d == "dp" else (tp if d == "tp" else None)
+               for d in dims])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,181 @@
+"""Partition rules: parameter/optimizer/cache PartitionSpecs for the
+production mesh.
+
+Scheme (DESIGN.md §4):
+  * TP over ``model``: attention/FFN hidden dims, vocab, heads, experts.
+  * FSDP (ZeRO-3-style weight sharding) over the data-parallel axes on the
+    non-TP dimension of every large matrix — XLA all-gathers per layer
+    inside the scan, which overlaps with compute.
+  * ZeRO-1: optimizer master/moment state inherits the same spec (already
+    fully sharded; no extra axis needed).
+  * Batch over ``('pod','data')`` on the multi-pod mesh (pure DP across
+    pods; hierarchical all-reduce pod-local first is XLA's choice).
+  * KV caches: batch over DP axes, kv-heads over ``model`` when divisible.
+
+Rules are name-based over the parameter tree paths; stacked (scanned)
+segment params get a leading None.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.transformer import ModelConfig
+
+# matrices [d_in, F] with F TP-sharded (column-parallel)
+_COL = {"wq", "wk", "wv", "w_in", "w_gate", "wr", "wg", "cm_wk", "cm_wr",
+        "w_x", "w_gate_branch", "wb"}
+# matrices [F, d_out] with F TP-sharded (row-parallel)
+_ROW = {"wo", "w_out", "cm_wv"}
+# 1-D vectors sized with a TP dim
+_VEC_TP = {"bq", "bk", "bv", "w0", "ln_x", "lam", "b_a", "b_i", "conv_b"}
+# replicated small tensors
+_REPL = {"mu", "mu_x", "cm_mu_k", "cm_mu_r", "w", "b", "q_norm", "k_norm",
+         "u", "router", "lora_a", "lora_b", "wa", "conv_w", "w_a", "w_i"}
+
+
+def _keystr(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    return str(k)
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def _fit(mesh, shape, *candidates):
+    """First candidate spec whose named axes all divide the dims; jit
+    ``in_shardings`` (unlike constraints) rejects padding, so non-divisible
+    dims fall back (e.g. whisper's 51865 vocab, granite's 40 experts)."""
+    for cand in candidates:
+        ok = True
+        for dim, axis in zip(shape, cand):
+            if axis is not None and dim % _axis_size(mesh, axis) != 0:
+                ok = False
+                break
+        if ok:
+            return cand
+    return tuple(None for _ in shape)
+
+
+def _rule(path, leaf, dp, mesh) -> P:
+    names = [_keystr(k) for k in path]
+    name = names[-1]
+    stacked = any(n.startswith("seg") for n in names) or "encoder" in names
+    nd = leaf.ndim - (1 if stacked else 0)
+    shape = leaf.shape[1:] if stacked else leaf.shape
+
+    def wrap(*cands):
+        spec = _fit(mesh, shape, *cands)
+        return P(None, *spec) if stacked else P(*spec)
+
+    if name == "embed":
+        return wrap(("model", dp), (None, dp), ("model", None))
+    if name == "lm_head":
+        return wrap((dp, "model"), (dp, None), (None, "model"))
+    moe_member = "moe" in names
+    if moe_member and name in ("w_in", "w_gate"):
+        # EP over experts preferred; fallback TP over the ff dim
+        return wrap(("model", dp, None), (None, dp, "model"),
+                    (None, None, "model"))
+    if moe_member and name == "w_out":
+        return wrap(("model", None, dp), (None, "model", dp),
+                    (None, "model", None))
+    if name in _COL and nd == 2:
+        return wrap((dp, "model"), (None, "model"), (dp, None))
+    if name in _ROW and nd == 2:
+        return wrap(("model", dp), ("model", None), (None, dp))
+    if name in _VEC_TP and nd == 1:
+        return wrap(("model",))
+    # everything else (norms, biases, mixes, LoRA, router) replicated
+    return wrap(tuple(None for _ in range(nd)))
+
+
+def param_pspecs(cfg: ModelConfig, params_tree, mesh) -> dict:
+    """PartitionSpec pytree matching ``params_tree`` (arrays or specs)."""
+    dp, _ = _dp_of(mesh)
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: _rule(p, l, dp, mesh), params_tree)
+
+
+def _dp_of(mesh):
+    from repro.launch.mesh import dp_axes
+
+    dp = dp_axes(mesh)
+    size = 1
+    for a in dp:
+        size *= mesh.shape[a]
+    return (dp[0] if len(dp) == 1 else dp), size
+
+
+def batch_pspecs(batch_tree, mesh) -> dict:
+    dp, dp_size = _dp_of(mesh)
+
+    def spec(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        b = dp if leaf.shape[0] % dp_size == 0 else None
+        return P(b, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_tree)
+
+
+def cache_pspecs(cfg: ModelConfig, cache_tree, mesh,
+                 stacked: bool = True, seq_shard: bool = False) -> dict:
+    """KV caches [B, S, Hkv, dh]: batch over DP; kv heads over model when
+    divisible, else head_dim over model when divisible (decode TP without
+    padding waste). ``stacked`` => leading layer dim (scanned segments).
+
+    ``seq_shard=True`` (§Perf cell B): shard the cache *sequence* over the
+    model axis instead — distributed flash-decoding. Attention over a
+    seq-sharded cache reduces per-chip wire to softmax-stat/partial-output
+    combines instead of head/dh-contraction all-gathers of S-sized tensors.
+    """
+    dp_axes_, dp_size = _dp_of(mesh)
+    model_size = mesh.shape["model"]
+    lead = (None,) if stacked else ()
+    off = 1 if stacked else 0
+
+    def mdl(n):
+        return "model" if n % model_size == 0 else None
+
+    def spec_dispatch(path, leaf):
+        name = _keystr(path[-1])
+        nd = leaf.ndim
+        # batch axis shards over dp only when divisible (long_500k has B=1)
+        dp = dp_axes_ if leaf.shape[off] % dp_size == 0 else None
+        if name in ("k", "v", "xk", "xv"):          # [B, S, H, dh]
+            h, dh = leaf.shape[off + 2], leaf.shape[off + 3]
+            seq = leaf.shape[off + 1]
+            if seq_shard and seq % model_size == 0:
+                return P(*lead, dp, "model", None, None)
+            if h % model_size == 0:
+                return P(*lead, dp, None, "model", None)
+            return P(*lead, dp, None, None, mdl(dh))
+        if name == "wkv":                            # [B, H, dk, dv]
+            return P(*lead, dp, mdl(leaf.shape[off + 1]), None, None)
+        if name == "conv":                           # [B, w, dr]
+            return P(*lead, dp, None, mdl(leaf.shape[-1]))
+        if name == "h":                              # [B, dr]
+            return P(*lead, dp, mdl(leaf.shape[-1]))
+        if nd >= 1 + off:                            # tm_x/cm_x [B, 1, d]
+            return P(*lead, dp, *([None] * (nd - 1 - off)))
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(spec_dispatch, cache_tree)
+
+
+def opt_state_pspecs(param_specs) -> dict:
+    """ZeRO-1: master/m/v inherit the fully sharded param specs."""
+    return {"master": param_specs, "m": param_specs, "v": param_specs,
+            "count": P()}

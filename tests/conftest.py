@@ -1,0 +1,15 @@
+import os
+import sys
+
+# keep jax on a single CPU device for unit tests (the dry-run sets its own
+# device-count flag in a separate process); also keep threads bounded
+os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,64 @@
+"""Sparse-format round trips (property-based)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import csc as fmt
+
+
+def random_sparse(rng, m, n, density):
+    a = (rng.random((m, n)) < density).astype(np.float32)
+    return a * rng.standard_normal((m, n)).astype(np.float32)
+
+
+@st.composite
+def sparse_case(draw):
+    m = draw(st.integers(1, 40))
+    n = draw(st.integers(1, 40))
+    density = draw(st.sampled_from([0.0, 0.02, 0.1, 0.5]))
+    seed = draw(st.integers(0, 2**16))
+    a = random_sparse(np.random.default_rng(seed), m, n, density)
+    return a
+
+
+@settings(max_examples=40, deadline=None)
+@given(sparse_case())
+def test_coo_roundtrip(a):
+    got = np.asarray(fmt.coo_to_dense(fmt.coo_from_dense(a)))
+    np.testing.assert_allclose(got, a, rtol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(sparse_case())
+def test_csr_csc_roundtrip(a):
+    coo = fmt.coo_from_dense(a)
+    np.testing.assert_allclose(
+        np.asarray(fmt.csr_to_dense(fmt.csr_from_coo(coo))), a, rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(fmt.csc_to_dense(fmt.csc_from_coo(coo))), a, rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(sparse_case())
+def test_ell_roundtrip(a):
+    got = np.asarray(fmt.ell_to_dense(fmt.ell_from_dense(a)))
+    np.testing.assert_allclose(got, a, rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(sparse_case(), st.integers(0, 64))
+def test_pad_coo_inert(a, extra):
+    coo = fmt.coo_from_dense(a)
+    padded = fmt.pad_coo(coo, coo.nnz + extra)
+    np.testing.assert_allclose(np.asarray(fmt.coo_to_dense(padded)), a,
+                               rtol=1e-6)
+    # nnz histograms ignore padding
+    assert int(fmt.row_nnz(padded).sum()) == coo.nnz
+
+
+def test_row_col_nnz():
+    a = np.zeros((4, 5), np.float32)
+    a[0, :4] = 1
+    a[2, 1] = 3
+    coo = fmt.coo_from_dense(a)
+    assert fmt.row_nnz(coo).tolist() == [4, 0, 1, 0]
+    assert fmt.col_nnz(coo).tolist() == [1, 2, 1, 1, 0]

@@ -1,0 +1,124 @@
+"""Per-arch smoke tests (assignment: reduced config of the same family,
+one forward/train step on CPU, output shapes + no NaNs) and decode
+consistency across families."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models import transformer as tr
+
+ARCHS = configs.list_archs()
+
+
+def _batch(cfg, key, b=2, s=12):
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab)}
+    if cfg.encoder is not None:
+        batch["source_embed"] = jax.random.normal(
+            key, (b, cfg.encoder.max_source, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward(arch):
+    cfg = configs.get_reduced_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = tr.init_params(cfg, key)
+    batch = _batch(cfg, key)
+    logits, aux = tr.model_forward(cfg, params, batch,
+                                   compute_dtype=jnp.float32)
+    assert logits.shape == (2, 12, cfg.vocab)
+    assert not bool(jnp.isnan(logits).any())
+    assert not bool(jnp.isnan(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    """One grad step decreases nothing catastrophically: finite grads."""
+    cfg = configs.get_reduced_config(arch)
+    key = jax.random.PRNGKey(1)
+    params = tr.init_params(cfg, key)
+    batch = _batch(cfg, key)
+    labels = jax.random.randint(key, (2, 12), 0, cfg.vocab)
+
+    def loss_fn(p):
+        logits, aux = tr.model_forward(cfg, p, batch,
+                                       compute_dtype=jnp.float32)
+        logp = jax.nn.log_softmax(logits, -1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], -1).mean()
+        return nll + 0.01 * aux
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss))
+    gnorm = sum(float(jnp.abs(g).sum()) for g in jax.tree.leaves(grads))
+    assert jnp.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "rwkv6-3b",
+                                  "recurrentgemma-2b", "whisper-tiny",
+                                  "qwen3-moe-30b-a3b"])
+def test_decode_matches_forward(arch):
+    cfg = configs.get_reduced_config(arch)
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=64.0))
+    key = jax.random.PRNGKey(2)
+    params = tr.init_params(cfg, key)
+    b, s = 2, 12
+    batch = _batch(cfg, key, b, s)
+    toks = batch["tokens"]
+    logits, _ = tr.model_forward(cfg, params, batch,
+                                 compute_dtype=jnp.float32)
+    pre = s - 3
+    pb = dict(batch, tokens=toks[:, :pre])
+    last, cache = tr.prefill(cfg, params, pb, max_seq=s,
+                             compute_dtype=jnp.float32)
+    errs = [float(jnp.abs(last[:, 0] - logits[:, pre - 1]).max())]
+    for t in range(pre, s):
+        step_logits, cache = tr.decode_step(cfg, params, cache, toks[:, t],
+                                            jnp.int32(t),
+                                            compute_dtype=jnp.float32)
+        errs.append(float(jnp.abs(step_logits[:, 0] - logits[:, t]).max()))
+    assert max(errs) < 2e-3, f"{arch}: {errs}"
+
+
+def test_local_attention_ring_cache():
+    """Windowed decode with a ring cache equals full-cache reference."""
+    cfg = configs.get_reduced_config("recurrentgemma-2b")
+    assert cfg.window is not None and cfg.window < 16
+    key = jax.random.PRNGKey(3)
+    params = tr.init_params(cfg, key)
+    b, s = 1, 14  # > window so the ring wraps
+    batch = _batch(cfg, key, b, s)
+    toks = batch["tokens"]
+    logits, _ = tr.model_forward(cfg, params, batch,
+                                 compute_dtype=jnp.float32)
+    _, cache = tr.prefill(cfg, params, dict(batch, tokens=toks[:, :4]),
+                          max_seq=s, compute_dtype=jnp.float32)
+    errs = []
+    for t in range(4, s):
+        step_logits, cache = tr.decode_step(cfg, params, cache, toks[:, t],
+                                            jnp.int32(t),
+                                            compute_dtype=jnp.float32)
+        errs.append(float(jnp.abs(step_logits[:, 0] - logits[:, t]).max()))
+    assert max(errs) < 2e-3
+
+
+def test_param_counts_match_published():
+    expect = {"qwen2-72b": 72.7e9, "deepseek-coder-33b": 33.3e9,
+              "qwen2-0.5b": 0.49e9, "rwkv6-3b": 3.1e9,
+              "qwen3-moe-30b-a3b": 30.5e9, "pixtral-12b": 12.2e9}
+    for arch, n in expect.items():
+        got = tr.count_params(configs.get_config(arch))
+        assert abs(got - n) / n < 0.06, f"{arch}: {got / 1e9:.2f}B"
+
+
+def test_sub_quadratic_flags():
+    assert configs.get_config("rwkv6-3b").sub_quadratic
+    assert configs.get_config("recurrentgemma-2b").sub_quadratic
+    assert not configs.get_config("qwen2-72b").sub_quadratic
+    ok, _ = configs.cell_supported(configs.get_config("qwen2-72b"),
+                                   "long_500k")
+    assert not ok

@@ -1,0 +1,56 @@
+"""§Perf variants are numerically exact: chunked attention and grouped MoE
+dispatch produce the same model outputs as the paper-faithful baseline."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.kernels import ref
+from repro.models import transformer as tr
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "qwen3-moe-30b-a3b",
+                                  "whisper-tiny"])
+def test_opt_variant_matches_baseline(arch):
+    cfg = configs.get_reduced_config(arch)
+    if cfg.moe:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=64.0))
+    copt = dataclasses.replace(cfg, attn_chunk=8, moe_groups=4)
+    key = jax.random.PRNGKey(0)
+    p = tr.init_params(cfg, key)
+    batch = {"tokens": jax.random.randint(key, (2, 16), 0, cfg.vocab)}
+    if cfg.encoder is not None:
+        batch["source_embed"] = jax.random.normal(
+            key, (2, cfg.encoder.max_source, cfg.d_model), jnp.float32)
+    base, _ = tr.model_forward(cfg, p, batch, compute_dtype=jnp.float32)
+    opt, _ = tr.model_forward(copt, p, batch, compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(opt), np.asarray(base), atol=2e-4)
+
+
+@pytest.mark.parametrize("block_k", [8, 32, 100])
+@pytest.mark.parametrize("causal", [True, False])
+def test_chunked_attention_exact(block_k, causal):
+    rng = np.random.default_rng(block_k)
+    def t(s):
+        return jnp.asarray(rng.standard_normal(s).astype(np.float32))
+    q, k, v = t((2, 48, 4, 16)), t((2, 48, 2, 16)), t((2, 48, 2, 16))
+    out = ref.attention_chunked(q, k, v, causal=causal, block_k=block_k)
+    gold = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(gold), atol=2e-5)
+
+
+def test_chunked_attention_decode_offset_and_window():
+    rng = np.random.default_rng(1)
+    def t(s):
+        return jnp.asarray(rng.standard_normal(s).astype(np.float32))
+    q, k, v = t((1, 8, 4, 16)), t((1, 64, 4, 16)), t((1, 64, 4, 16))
+    for window in (None, 24):
+        out = ref.attention_chunked(q, k, v, causal=True, window=window,
+                                    block_k=16)
+        gold = ref.attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(gold),
+                                   atol=2e-5)

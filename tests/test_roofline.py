@@ -1,0 +1,73 @@
+"""Roofline accounting: HLO collective parser + term math."""
+import numpy as np
+
+from repro.roofline import analysis as ra
+
+HLO_FIXTURE = """
+ENTRY main {
+  %p0 = bf16[16,4096,512]{2,1,0} parameter(0)
+  %ag = bf16[16,4096,512]{2,1,0} all-gather(%p0), replica_groups={{0,1,2,3}}, dimensions={2}
+  %ar = f32[1024,1024]{1,0} all-reduce(%x), replica_groups=[16,2]<=[32] to_apply=%add
+  %rs = f32[64,128]{1,0} reduce-scatter(%y), replica_groups={{0,1}}, dimensions={0}
+  %cp = bf16[256]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %a2a = s32[8,8]{1,0} all-to-all(%w), replica_groups={{0,1,2,3,4,5,6,7}}
+}
+"""
+
+
+def test_collective_parser():
+    out = ra.collective_bytes_from_hlo(HLO_FIXTURE)
+    ag = 16 * 4096 * 512 * 2
+    assert out["all-gather_bytes"] == ag
+    assert np.isclose(out["all-gather_wire"], ag * 3 / 4)
+    ar = 1024 * 1024 * 4
+    assert out["all-reduce_bytes"] == ar
+    assert np.isclose(out["all-reduce_wire"], 2 * ar * 1 / 2)  # groups of 2
+    rs = 64 * 128 * 4
+    assert np.isclose(out["reduce-scatter_wire"], rs * 1)  # (n-1)=1
+    assert out["collective-permute_wire"] == 256 * 2
+    a2a = 8 * 8 * 4
+    assert np.isclose(out["all-to-all_wire"], a2a * 7 / 8)
+    assert out["wire_bytes_total"] > 0
+
+
+def test_parser_ignores_non_collectives():
+    txt = "%d = f32[1000]{0} dot(%a, %b)\n%c = f32[10]{0} add(%d, %d)"
+    out = ra.collective_bytes_from_hlo(txt)
+    assert out["wire_bytes_total"] == 0
+
+
+def test_roofline_terms():
+    t = ra.roofline_terms(197e12, 819e9, 50e9)  # exactly 1s each
+    assert np.isclose(t["compute_s"], 1.0)
+    assert np.isclose(t["memory_s"], 1.0)
+    assert np.isclose(t["collective_s"], 1.0)
+    t2 = ra.roofline_terms(197e12, 8.19e9, 5e9)
+    assert t2["dominant"] == "compute"
+    assert np.isclose(t2["compute_roofline_fraction"], 1.0)
+    t3 = ra.roofline_terms(1e12, 819e9, 50e9)
+    assert t3["dominant"] in ("memory", "collective")
+
+
+def test_model_flops():
+    assert ra.model_flops(10, 10, 100, "train") == 6 * 10 * 100
+    assert ra.model_flops(10, 4, 100, "prefill") == 2 * 4 * 100
+
+
+def test_tpu_hbm_model():
+    txt = """
+  %p0 = bf16[1024,1024]{1,0} parameter(0)
+  %p1 = bf16[1024,512]{1,0} parameter(1)
+  %d = bf16[1024,512]{1,0} dot(%p0, %p1), lhs_contracting_dims={1}
+  %c = f32[1024,512]{1,0} convert(%d)
+  %b = f32[1024,512]{1,0} broadcast(%c)
+  %ar = f32[64,64]{1,0} all-reduce(%x), replica_groups={{0,1}}
+"""
+    got = ra.tpu_hbm_bytes_from_hlo(txt)
+    p0 = 1024 * 1024 * 2
+    p1 = 1024 * 512 * 2
+    d = 1024 * 512 * 2
+    ar = 64 * 64 * 4
+    # params + dot out + dot operands + collective out; convert/broadcast
+    # (fusable elementwise) excluded
+    assert got == p0 + p1 + d + (p0 + p1) + ar
