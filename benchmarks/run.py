@@ -1,19 +1,26 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only utilization,...]
+    PYTHONPATH=src python -m benchmarks.run [--only utilization,...] \
+        [--json BENCH_spmm.json]
 
 Prints human tables per benchmark, then the machine-readable
-``name,us_per_call,derived`` CSV block.
+``name,us_per_call,derived`` CSV block. ``--json PATH`` additionally writes
+the same rows as JSON (with a timestamp and the jax backend), so the perf
+trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import time
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
     ap.add_argument("--pe", type=int, default=1024)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as machine-readable JSON")
     args = ap.parse_args()
 
     from benchmarks import (convergence, latency, moe_imbalance, order_ops,
@@ -46,6 +53,20 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+    if args.json:
+        import jax
+
+        payload = {
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "backend": jax.default_backend(),
+            "rows": [{"name": name, "us_per_call": round(float(us), 1),
+                      "derived": derived} for name, us, derived in rows],
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"wrote {len(rows)} rows to {args.json}")
 
 
 if __name__ == "__main__":

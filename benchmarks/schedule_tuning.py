@@ -1,22 +1,33 @@
-"""Kernel-parameter hillclimb: sweep the AWB schedule's (nnz_per_step K,
-rows_per_window R) — the TPU analogue of the paper's PE-count/TQ-depth
-design-space exploration (Fig. 18). Reports slot utilization, issued
-steps, and the VMEM working set the kernel claims per step, and the best
-configuration per dataset.
+"""Kernel-parameter search, two layers:
 
-VMEM/step = K slots (val+idx) + R×ktile f32 accumulator + ktile gather
-row; the product of utilization × (1/steps) at a VMEM-feasible point is
-the figure of merit.
+1. Analytic hillclimb — sweep the AWB schedule's (nnz_per_step K,
+   rows_per_window R) and rank by issued MACs (the TPU analogue of the
+   paper's PE-count/TQ-depth design-space exploration, Fig. 18), with the
+   VMEM working set as the feasibility constraint.
+2. Measured autotune-and-cache — ``core.executor.autotune`` times the
+   jitted device-resident executor per candidate and caches the fastest
+   configuration by graph fingerprint (the paper's "converge, then reuse").
+
+Plus the routing-path comparison this PR's kernel changes are about: the
+seed full-width one-hot routing (per-step [K, n] MXU contraction) vs the
+capped-``cols_per_block`` one-hot vs the fused-gather executor, measured on
+the largest synth graph. The full-width path is timed on a step sample and
+extrapolated — running all of it is exactly the cost this PR removes.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
+import numpy as np
+
 from benchmarks import common
+from repro.core import executor as exe
 from repro.core import schedule
 
 KTILE = 128
 VMEM_BUDGET = 8 * 2**20  # half of a v5e core's 16 MiB VMEM
+BENCH_KDIM = 64          # dense-operand width for measured routing numbers
 
 
 def vmem_per_step(k: int, r: int, ktile: int = KTILE) -> int:
@@ -26,7 +37,23 @@ def vmem_per_step(k: int, r: int, ktile: int = KTILE) -> int:
     return slots + acc + gather
 
 
-def run() -> list:
+def _truncate(sched: schedule.Schedule, n_steps: int) -> schedule.Schedule:
+    """First ``n_steps`` steps of a schedule (for sampled timing of routing
+    paths too slow to run in full)."""
+    k = sched.nnz_per_step
+    return dataclasses.replace(
+        sched,
+        win_id=sched.win_id[:n_steps], col_block=sched.col_block[:n_steps],
+        val=sched.val[:n_steps * k], local_row=sched.local_row[:n_steps * k],
+        local_col=sched.local_col[:n_steps * k])
+
+
+def _time_spmm(ex: exe.ScheduleExecutor, b, iters: int = 3,
+               warmup: int = 1) -> float:
+    return exe._time_call(lambda: ex.spmm(b), iters, warmup)
+
+
+def run_hillclimb() -> list:
     rows = []
     print("\n== AWB schedule (K, R) hillclimb per dataset ==")
     for name in common.BENCH_SCALE:
@@ -52,3 +79,97 @@ def run() -> list:
         rows.append((f"schedule_tuning/{name}", (time.time() - t0) * 1e6,
                      f"K={k};R={r};util={util:.3f}"))
     return rows
+
+
+def run_autotune() -> list:
+    """Measured autotune-and-cache loop per dataset (smallest three: the
+    sweep times real executors)."""
+    rows = []
+    print("\n== measured autotune (cached by graph fingerprint) ==")
+    for name in ("cora", "citeseer", "pubmed"):
+        ds = common.dataset(name)
+        t0 = time.time()
+        cfg = exe.autotune(ds.adj, (ds.num_nodes, BENCH_KDIM))
+        tune_s = time.time() - t0
+        t0 = time.time()
+        exe.autotune(ds.adj, (ds.num_nodes, BENCH_KDIM))  # cache hit
+        hit_s = time.time() - t0
+        print(f"{name:10s} K={cfg.nnz_per_step:3d} R={cfg.rows_per_window:3d}"
+              f" routing={cfg.routing:6s} {cfg.measured_us:9.0f}us/spmm "
+              f"(tuned in {tune_s:.2f}s, cache hit {hit_s * 1e6:.0f}us)")
+        rows.append((f"autotune/{name}", cfg.measured_us,
+                     f"K={cfg.nnz_per_step};R={cfg.rows_per_window};"
+                     f"routing={cfg.routing};tune_s={tune_s:.2f}"))
+    return rows
+
+
+def run_routing() -> list:
+    """Seed full-width one-hot vs capped one-hot vs fused gather on the
+    largest synth graph, plus the vectorized schedule build time."""
+    rows = []
+    name = max(common.BENCH_SCALE,
+               key=lambda nm: common.dataset(nm).adj.nnz)
+    ds = common.dataset(name)
+    n = ds.num_nodes
+    rng = np.random.default_rng(0)
+    import jax.numpy as jnp
+    b = jnp.asarray(rng.standard_normal((n, BENCH_KDIM)).astype(np.float32))
+
+    print(f"\n== routing paths on largest graph ({name}: {ds.adj.nnz} nnz,"
+          f" {n} nodes, kdim={BENCH_KDIM}) ==")
+
+    # vectorized schedule build (acceptance: < 250 ms at ~1M edges)
+    t0 = time.perf_counter()
+    full = schedule.build_balanced_schedule(ds.adj, 256, 64)
+    build_ms = (time.perf_counter() - t0) * 1e3
+    print(f"schedule build (K=256 R=64): {build_ms:.0f} ms "
+          f"({ds.adj.nnz} nnz, util {full.utilization:.1%})")
+    rows.append((f"schedule_build/{name}", build_ms * 1e3,
+                 f"nnz={ds.adj.nnz};util={full.utilization:.3f}"))
+
+    # seed path: full-width one-hot routing ([K, n] per step) — timed on a
+    # step sample and extrapolated to the full step count
+    sample = min(8, full.n_steps)
+    ex_seed = exe.ScheduleExecutor(_truncate(full, sample), routing=exe.ONEHOT)
+    us_sample = _time_spmm(ex_seed, b, iters=1, warmup=1)
+    seed_us = us_sample * full.n_steps / sample
+    print(f"seed one-hot full-width (cb={full.cols_per_block}): "
+          f"{seed_us / 1e6:.1f} s/spmm (extrapolated from {sample} of "
+          f"{full.n_steps} steps)")
+    rows.append((f"routing/{name}/onehot_fullwidth", seed_us,
+                 f"cb={full.cols_per_block};extrapolated_from={sample}"))
+
+    # capped one-hot: auto cols_per_block + density-matched K (the same
+    # K-selection the autotuner's sweep uses)
+    k_blk = exe.density_matched_k(ds.adj, 64, schedule.auto_cols_per_block(n))
+    capped = schedule.build_balanced_schedule(ds.adj, k_blk, 64,
+                                              cols_per_block="auto")
+    cap_sample = min(4096, capped.n_steps)
+    us_sample = _time_spmm(
+        exe.ScheduleExecutor(_truncate(capped, cap_sample),
+                             routing=exe.ONEHOT), b, iters=1, warmup=1)
+    cap_us = us_sample * capped.n_steps / cap_sample
+    print(f"capped one-hot (cb={capped.cols_per_block}, K={k_blk}): "
+          f"{cap_us / 1e3:.0f} ms/spmm (extrapolated from {cap_sample} of "
+          f"{capped.n_steps} steps, util {capped.utilization:.1%})")
+    rows.append((f"routing/{name}/onehot_capped", cap_us,
+                 f"cb={capped.cols_per_block};K={k_blk};"
+                 f"util={capped.utilization:.3f}"))
+
+    # fused gather executor (the new default off-TPU) — measured in full
+    ex_gather = exe.executor_for_schedule(full)
+    gather_us = _time_spmm(ex_gather, b)
+    print(f"fused gather executor: {gather_us / 1e3:.1f} ms/spmm (full)")
+    rows.append((f"routing/{name}/gather", gather_us, "full_measurement"))
+
+    speedup_cap = seed_us / cap_us
+    speedup_gather = seed_us / gather_us
+    print(f"speedup vs seed full-width one-hot: capped {speedup_cap:.0f}x, "
+          f"gather {speedup_gather:.0f}x")
+    rows.append((f"routing/{name}/speedup", 0.0,
+                 f"capped={speedup_cap:.1f}x;gather={speedup_gather:.1f}x"))
+    return rows
+
+
+def run() -> list:
+    return run_hillclimb() + run_autotune() + run_routing()

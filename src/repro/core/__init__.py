@@ -1,6 +1,13 @@
 """AWB-GCN core: the paper's contribution as composable JAX modules."""
 from repro.core import csc  # noqa: F401
 from repro.core import spmm  # noqa: F401
+from repro.core.executor import (  # noqa: F401
+    ScheduleExecutor,
+    autotune,
+    autotuned_executor,
+    get_executor,
+    graph_fingerprint,
+)
 from repro.core.schedule import (  # noqa: F401
     Schedule,
     build_balanced_schedule,

@@ -96,6 +96,16 @@ def coo_from_arrays(row: np.ndarray, col: np.ndarray, val: np.ndarray,
     )
 
 
+def transpose_coo(a: COO) -> COO:
+    """Aᵀ as a fresh row-major-sorted COO (padding entries dropped)."""
+    row = np.asarray(a.col)
+    col = np.asarray(a.row)
+    val = np.asarray(a.val)
+    keep = np.asarray(a.row) != PAD_IDX
+    return coo_from_arrays(row[keep], col[keep], val[keep],
+                           (a.shape[1], a.shape[0]))
+
+
 def _ptr_from_sorted(ids: np.ndarray, dim: int) -> np.ndarray:
     counts = np.bincount(ids, minlength=dim)
     return np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)

@@ -1,0 +1,535 @@
+"""ScheduleExecutor — the converged AWB configuration as a first-class,
+cached, device-resident artifact (DESIGN.md §3).
+
+AWB-GCN's engine "converges, then reuses the ideal configuration" (§IV):
+the balancing effort is paid once per graph, and every subsequent round and
+layer replays the converged plan. The seed realization re-paid pieces of
+that cost on every call — ``spmm_balanced`` re-converted numpy schedule
+arrays to jnp per invocation, ``make_spmm_fn`` rebuilt both schedules per
+call site, and the routing one-hots spanned the whole matrix width. This
+module closes the loop:
+
+* ``ScheduleExecutor`` uploads a ``Schedule``'s arrays to the device exactly
+  once at construction and exposes jitted closures: ``spmm(b) = A @ b``
+  (fused-gather VPU routing or step-scanned one-hot MXU routing, chosen by
+  ``select_routing``'s cost model) and a jitted whole-GCN ``forward``.
+* ``get_executor(a, ...)`` / ``get_schedule(a, ...)`` cache by **graph
+  fingerprint** (shape, nnz, content hash of indices+values): repeated calls
+  on the same graph hit the cache and perform zero schedule rebuilds and
+  zero host→device transfers.
+* ``autotune(a, b_shape)`` sweeps (nnz_per_step, rows_per_window,
+  cols_per_block, ktile), measures the jitted executor on this host, picks
+  the fastest configuration, and caches it alongside the schedule — the
+  paper's autotuner loop with wall-clock as the objective.
+
+Routing paths
+-------------
+``gather``  — per-slot ``jnp.take`` of B rows + one fused scatter-add
+              straight into output rows (``row_map∘slot`` precomposed at
+              upload time). Routing work scales with the slot count alone;
+              the right choice for ultra-sparse operands and the only
+              sensible choice off-TPU.
+``onehot``  — a ``lax.scan`` over steps replaying the Pallas kernel's MXU
+              contractions (one-hot gather [K, CB] @ B-block, one-hot
+              scatter [K, R]ᵀ @ contributions). Routing work scales with
+              K·CB per step — viable only with a capped ``cols_per_block``;
+              kept exactly kernel-shaped so it doubles as the measurable
+              stand-in for the dense-routing Pallas path in benchmarks and
+              equivalence tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from collections import OrderedDict
+from typing import Callable, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import csc as fmt
+from repro.core.schedule import (Schedule, auto_cols_per_block,
+                                 build_balanced_schedule,
+                                 build_naive_schedule)
+
+GATHER = "gather"
+ONEHOT = "onehot"
+
+# cost-model constants (v5e-class core): 128×128 MXU MAC/cycle, and a
+# dynamic-gather bandwidth proxy for VMEM row fetches on the VPU path
+_MXU_MACS_PER_CYCLE = 16384
+_GATHER_BYTES_PER_CYCLE = 512
+
+
+def routing_cost_model(k: int, cb: int, r: int, ktile: int = 128) -> dict:
+    """Estimated per-step cycles of each routing path (relative units).
+
+    one-hot: two MXU contractions, [K, CB] @ [CB, ktile] and
+    [K, R]ᵀ @ [K, ktile] → K·(CB+R)·ktile MACs.
+    gather: K dynamic row fetches of a ktile-wide f32 row (latency/bandwidth
+    bound on the VPU) + the same one-hot scatter contraction.
+    """
+    onehot = k * (cb + r) * ktile / _MXU_MACS_PER_CYCLE
+    gather = (k * ktile * 4 / _GATHER_BYTES_PER_CYCLE
+              + k * r * ktile / _MXU_MACS_PER_CYCLE)
+    return {ONEHOT: onehot, GATHER: gather}
+
+
+def select_routing(k: int, cb: int, r: int, ktile: int = 128) -> str:
+    """Pick the cheaper routing for one operand: one-hot MXU routing wins
+    when the column block is capped small; gather wins when the block spans
+    a wide (ultra-sparse) operand."""
+    cost = routing_cost_model(k, cb, r, ktile)
+    return ONEHOT if cost[ONEHOT] <= cost[GATHER] else GATHER
+
+
+def graph_fingerprint(a: fmt.COO) -> str:
+    """Content hash of a sparse operand — the schedule-cache key.
+
+    Hashes shape, true nnz, and the index/value bytes of real (non-PAD)
+    entries, so two COOs describing the same matrix — padded or not — map
+    to the same converged configuration.
+    """
+    row = np.asarray(a.row)
+    col = np.asarray(a.col)
+    val = np.asarray(a.val)
+    if (row == fmt.PAD_IDX).any():
+        keep = row != fmt.PAD_IDX
+        row, col, val = row[keep], col[keep], val[keep]
+    h = hashlib.blake2b(digest_size=16)
+    h.update(repr((a.shape, int(row.shape[0]))).encode())
+    h.update(row.tobytes())
+    h.update(col.tobytes())
+    h.update(val.tobytes())
+    return h.hexdigest()
+
+
+# step-major device copies of schedule arrays, shared between
+# ScheduleExecutor and the Pallas kernel wrapper so one schedule is
+# uploaded once no matter who consumes it. Identity-keyed, bounded LRU.
+_DEVICE_STEPS: "OrderedDict[int, tuple]" = OrderedDict()
+_DEVICE_STEPS_CAP = 32
+
+
+def device_step_arrays(sched: Schedule) -> dict:
+    """Step-major jnp arrays of one schedule — ``val``/``lrow``/``lcol``
+    reshaped [n_steps, K], ``win``/``cblk`` per step, ``row_map`` — uploaded
+    to device once per schedule instance and memoized (bounded LRU)."""
+    key = id(sched)
+    hit = _DEVICE_STEPS.get(key)
+    if hit is not None and hit[0] is sched:
+        _DEVICE_STEPS.move_to_end(key)
+        return hit[1]
+    n_steps, k = sched.n_steps, sched.nnz_per_step
+    arrs = {
+        "val": jnp.asarray(sched.val.reshape(n_steps, k)),
+        "lrow": jnp.asarray(sched.local_row.reshape(n_steps, k)),
+        "lcol": jnp.asarray(sched.local_col.reshape(n_steps, k)),
+        "win": jnp.asarray(sched.win_id),
+        "cblk": jnp.asarray(sched.col_block),
+        "row_map": jnp.asarray(sched.row_map),
+    }
+    _DEVICE_STEPS[key] = (sched, arrs)
+    if len(_DEVICE_STEPS) > _DEVICE_STEPS_CAP:
+        _DEVICE_STEPS.popitem(last=False)
+    return arrs
+
+
+class ScheduleExecutor:
+    """Device-resident executor of one converged AWB schedule.
+
+    Construction uploads every schedule array to the default device once;
+    the jitted closures capture those arrays, so repeated ``spmm``/
+    ``forward`` calls move only the dense operand.
+    """
+
+    def __init__(self, sched: Schedule, *, ktile: int = 128,
+                 routing: Optional[str] = None,
+                 slot_chunk: int = 1 << 18):
+        self.sched = sched
+        self.ktile = ktile
+        m, n = sched.shape
+        k = sched.nnz_per_step
+        r = sched.rows_per_window
+        cb = sched.cols_per_block
+        self.routing = routing or select_routing(k, cb, r, ktile)
+
+        # ---- one-time host-side precompute + host→device upload ----------
+        # only the selected routing's representation is built/uploaded
+        if self.routing == GATHER:
+            # per-slot global column and output row (row_map ∘ slot
+            # precomposed: the scatter epilogue folds into the main scatter
+            # — padding slots carry val == 0, so a clamped target row
+            # accumulates nothing)
+            win_slot = np.repeat(sched.win_id.astype(np.int64), k)
+            cblk_slot = np.repeat(sched.col_block.astype(np.int64), k)
+            gcol = np.minimum(cblk_slot * cb + sched.local_col, n - 1)
+            slot = win_slot * r + sched.local_row
+            tgt = np.maximum(sched.row_map[slot], 0).astype(np.int32)
+
+            # pad the flat slot stream to a whole number of chunks so the
+            # fused gather path can bound its [chunk, kdim] intermediate
+            s_total = gcol.shape[0]
+            self._slot_chunk = int(min(slot_chunk, max(1, s_total)))
+            pad = (-s_total) % self._slot_chunk
+            self._n_chunks = (s_total + pad) // self._slot_chunk
+
+            def _chunked(x, fill):
+                return jnp.asarray(
+                    np.concatenate([x, np.full(pad, fill, x.dtype)])
+                    .reshape(self._n_chunks, self._slot_chunk))
+
+            self._gcol = _chunked(gcol.astype(np.int32), 0)
+            self._tgt = _chunked(tgt, 0)
+            self._val = _chunked(sched.val, 0.0)
+        else:
+            # step-major arrays (shared with the Pallas kernel wrapper —
+            # one upload per schedule no matter who consumes it)
+            self._steps = device_step_arrays(sched)
+
+        self._spmm_impl = (self._gather_impl if self.routing == GATHER
+                           else self._onehot_impl)
+        self._spmm = jax.jit(self._spmm_impl)
+        self._forward = jax.jit(self._forward_impl)
+
+    # ---- public API --------------------------------------------------------
+
+    def spmm(self, b: jax.Array) -> jax.Array:
+        """C = A @ B through the device-resident converged schedule."""
+        if b.shape[0] != self.sched.shape[1]:
+            raise ValueError(
+                f"operand has {b.shape[0]} rows; schedule expects "
+                f"{self.sched.shape[1]} (A is {self.sched.shape}) — XLA "
+                "would silently clamp gather indices otherwise")
+        return self._spmm(b)
+
+    __call__ = spmm
+
+    def forward(self, params: dict, x: jax.Array) -> jax.Array:
+        """Whole-GCN forward ``softmax-free`` logits: every layer runs
+        A × (X × W) through this executor inside one jit."""
+        if x.shape[0] != self.sched.shape[1]:
+            raise ValueError(
+                f"features have {x.shape[0]} rows; schedule expects "
+                f"{self.sched.shape[1]} (A is {self.sched.shape})")
+        return self._forward(params, x)
+
+    @property
+    def utilization(self) -> float:
+        return self.sched.utilization
+
+    # ---- jitted bodies -----------------------------------------------------
+
+    def _gather_impl(self, b: jax.Array) -> jax.Array:
+        """Fused-gather routing: B-row gather per slot, one scatter-add into
+        final output rows (row_map precomposed). Chunked over the slot
+        stream so the [chunk, kdim] intermediate stays bounded on
+        million-edge graphs."""
+        m, _ = self.sched.shape
+        kdim = b.shape[1]
+        bf = b.astype(jnp.float32)
+        out = jnp.zeros((m, kdim), jnp.float32)
+
+        if self._n_chunks == 1:
+            g = jnp.take(bf, self._gcol[0], axis=0) * self._val[0][:, None]
+            out = out.at[self._tgt[0]].add(g)
+        else:
+            def body(i, acc):
+                g = (jnp.take(bf, self._gcol[i], axis=0)
+                     * self._val[i][:, None])
+                return acc.at[self._tgt[i]].add(g)
+            out = jax.lax.fori_loop(0, self._n_chunks, body, out)
+        return out.astype(b.dtype)
+
+    def _onehot_impl(self, b: jax.Array) -> jax.Array:
+        """Dense-routing emulation: scan over steps, each step doing the
+        Pallas kernel's two one-hot MXU contractions against the step's
+        [CB, kdim] B-panel. The measurable XLA twin of the kernel."""
+        m, n = self.sched.shape
+        k = self.sched.nnz_per_step
+        r = self.sched.rows_per_window
+        cb = self.sched.cols_per_block
+        kdim = b.shape[1]
+        ncb = -(-n // cb)
+        bp = jnp.pad(b.astype(jnp.float32), ((0, ncb * cb - n), (0, 0)))
+        bp = bp.reshape(ncb, cb, kdim)
+
+        def step(out_perm, s):
+            win, cblk, val, lrow, lcol = s
+            bb = bp[cblk]                                   # [CB, kdim]
+            gather = (lcol[:, None] == jnp.arange(cb)[None, :]
+                      ).astype(jnp.float32)                 # [K, CB]
+            contrib = (gather @ bb) * val[:, None]          # [K, kdim]
+            scatter = (lrow[:, None] == jnp.arange(r)[None, :]
+                       ).astype(jnp.float32)                # [K, R]
+            out_perm = out_perm.at[win].add(scatter.T @ contrib)
+            return out_perm, None
+
+        out_perm = jnp.zeros((self.sched.n_windows, r, kdim), jnp.float32)
+        out_perm, _ = jax.lax.scan(
+            step, out_perm,
+            (self._steps["win"], self._steps["cblk"], self._steps["val"],
+             self._steps["lrow"], self._steps["lcol"]))
+        # scatter epilogue (adder tree): permuted window slots → matrix rows
+        rm = self._steps["row_map"]
+        valid = rm >= 0
+        contrib = jnp.where(valid[:, None],
+                            out_perm.reshape(-1, kdim), 0.0)
+        out = jnp.zeros((m, kdim), jnp.float32).at[
+            jnp.where(valid, rm, 0)].add(contrib)
+        return out.astype(b.dtype)
+
+    def _forward_impl(self, params: dict, x: jax.Array) -> jax.Array:
+        h = x
+        n_layers = len(params)
+        for i in range(n_layers):
+            h = self._spmm_impl(h @ params[f"w{i}"])  # A × (X × W)
+            if i < n_layers - 1:
+                h = jax.nn.relu(h)
+        return h
+
+
+# ---------------------------------------------------------------------------
+# Caches: fingerprint → schedule / executor / tuned config
+# ---------------------------------------------------------------------------
+
+# fingerprint-keyed caches are deliberately unbounded: a serving system
+# holds a handful of long-lived graphs, and the converged configuration is
+# exactly what must persist. The identity-keyed per-schedule caches are
+# bounded LRUs — workloads that build throwaway schedules per call must
+# not retain every one forever.
+_SCHEDULE_CACHE: dict = {}
+_EXECUTOR_CACHE: dict = {}
+_EXEC_BY_SCHEDULE: "OrderedDict[tuple, ScheduleExecutor]" = OrderedDict()
+_EXEC_BY_SCHEDULE_CAP = 32
+_AUTOTUNE_CACHE: dict = {}
+
+
+def clear_caches() -> None:
+    """Drop every cached schedule/executor/tuning result (tests)."""
+    _SCHEDULE_CACHE.clear()
+    _EXECUTOR_CACHE.clear()
+    _EXEC_BY_SCHEDULE.clear()
+    _AUTOTUNE_CACHE.clear()
+    _DEVICE_STEPS.clear()
+
+
+def _sched_key(fp: str, nnz_per_step, rows_per_window, cols_per_block,
+               window_nnz, balanced):
+    return (fp, nnz_per_step, rows_per_window, str(cols_per_block),
+            window_nnz, balanced)
+
+
+def get_schedule(a: fmt.COO, *, nnz_per_step: int = 256,
+                 rows_per_window: int = 64,
+                 cols_per_block=None, window_nnz: Optional[int] = None,
+                 balanced: bool = True,
+                 fingerprint: Optional[str] = None) -> Schedule:
+    """Fingerprint-cached schedule build — the 'reuse the converged
+    configuration' entry point."""
+    fp = fingerprint or graph_fingerprint(a)
+    key = _sched_key(fp, nnz_per_step, rows_per_window, cols_per_block,
+                     window_nnz, balanced)
+    sched = _SCHEDULE_CACHE.get(key)
+    if sched is None:
+        if balanced:
+            sched = build_balanced_schedule(
+                a, nnz_per_step, rows_per_window,
+                cols_per_block=cols_per_block, window_nnz=window_nnz)
+        else:
+            sched = build_naive_schedule(a, nnz_per_step, rows_per_window,
+                                         cols_per_block=cols_per_block)
+        _SCHEDULE_CACHE[key] = sched
+    return sched
+
+
+def get_spmm_schedules(a: fmt.COO, *, nnz_per_step: int = 256,
+                       rows_per_window: int = 64,
+                       cols_per_block=None) -> Tuple[Schedule, Schedule]:
+    """(schedule for A, schedule for Aᵀ), both fingerprint-cached — what a
+    differentiable SpMM needs (d(A@B)/dB = Aᵀ @ dC). Call sites stop
+    rebuilding both schedules per invocation."""
+    fwd = get_schedule(a, nnz_per_step=nnz_per_step,
+                       rows_per_window=rows_per_window,
+                       cols_per_block=cols_per_block)
+    a_t = fmt.transpose_coo(a)
+    bwd = get_schedule(a_t, nnz_per_step=nnz_per_step,
+                       rows_per_window=rows_per_window,
+                       cols_per_block=cols_per_block)
+    return fwd, bwd
+
+
+def get_executor(a: fmt.COO, *, nnz_per_step: int = 256,
+                 rows_per_window: int = 64, cols_per_block=None,
+                 window_nnz: Optional[int] = None, ktile: int = 128,
+                 routing: Optional[str] = None,
+                 balanced: bool = True) -> ScheduleExecutor:
+    """Fingerprint-cached executor: the first call converges (builds the
+    schedule, uploads it); every later call with the same graph + config is
+    a pure cache hit — no rebuild, no host→device transfer."""
+    fp = graph_fingerprint(a)
+    key = (_sched_key(fp, nnz_per_step, rows_per_window, cols_per_block,
+                      window_nnz, balanced), ktile, routing)
+    ex = _EXECUTOR_CACHE.get(key)
+    if ex is None:
+        sched = get_schedule(a, nnz_per_step=nnz_per_step,
+                             rows_per_window=rows_per_window,
+                             cols_per_block=cols_per_block,
+                             window_nnz=window_nnz, balanced=balanced,
+                             fingerprint=fp)
+        ex = ScheduleExecutor(sched, ktile=ktile, routing=routing)
+        _EXECUTOR_CACHE[key] = ex
+    return ex
+
+
+def executor_for_schedule(sched: Schedule, *, ktile: int = 128,
+                          routing: Optional[str] = None) -> ScheduleExecutor:
+    """Executor for a caller-built schedule, memoized per (schedule
+    instance, ktile, routing) — identity-keyed, so rebuilding a schedule
+    re-uploads while reusing one doesn't, and asking for a different
+    routing/ktile never returns a mismatched cached executor."""
+    routing = routing or select_routing(
+        sched.nnz_per_step, sched.cols_per_block, sched.rows_per_window,
+        ktile)
+    key = (id(sched), ktile, routing)
+    ex = _EXEC_BY_SCHEDULE.get(key)
+    if ex is not None and ex.sched is sched:
+        _EXEC_BY_SCHEDULE.move_to_end(key)
+        return ex
+    ex = ScheduleExecutor(sched, ktile=ktile, routing=routing)
+    _EXEC_BY_SCHEDULE[key] = ex
+    if len(_EXEC_BY_SCHEDULE) > _EXEC_BY_SCHEDULE_CAP:
+        _EXEC_BY_SCHEDULE.popitem(last=False)
+    return ex
+
+
+# ---------------------------------------------------------------------------
+# Autotune-and-cache: measured configuration search (paper Fig. 17/18 loop)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TunedConfig:
+    """A measured-fastest executor configuration for one (graph, width).
+
+    ``cols_per_block`` holds the sweep candidate's *request* verbatim
+    (None | int | "auto") so ``get_executor(**as_executor_kwargs())``
+    reproduces exactly the measured executor; ``cols_per_block_resolved``
+    is the block width the schedule actually used."""
+    nnz_per_step: int
+    rows_per_window: int
+    cols_per_block: Union[int, str, None]
+    window_nnz: Optional[int]
+    ktile: int
+    routing: str
+    measured_us: float
+    utilization: float
+    cols_per_block_resolved: int = 0
+
+    def as_executor_kwargs(self) -> dict:
+        return dict(nnz_per_step=self.nnz_per_step,
+                    rows_per_window=self.rows_per_window,
+                    cols_per_block=self.cols_per_block,
+                    window_nnz=self.window_nnz, ktile=self.ktile,
+                    routing=self.routing)
+
+
+def _time_call(fn: Callable[[], jax.Array], iters: int, warmup: int) -> float:
+    for _ in range(warmup):
+        fn().block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def default_sweep(a: fmt.COO, rows_per_window=(32, 64)) -> list:
+    """Candidate (k, r, cb, window_nnz, routing) points: the gather path at a
+    few step granularities, plus a capped one-hot point whose nnz_per_step is
+    density-matched (≈ nnz/m · r · cb / n rounded to a lane multiple)."""
+    m, n = a.shape
+    nnz = int(np.asarray(a.row).shape[0])
+    cand = []
+    for k in (128, 256):
+        for r in rows_per_window:
+            cand.append(dict(nnz_per_step=k, rows_per_window=r,
+                             cols_per_block=None, window_nnz=None,
+                             routing=GATHER))
+    cb = auto_cols_per_block(n)
+    if cb < n:
+        for r in rows_per_window:
+            cand.append(dict(nnz_per_step=density_matched_k(a, r, cb),
+                             rows_per_window=r,
+                             cols_per_block="auto", window_nnz=None,
+                             routing=ONEHOT))
+    return cand
+
+
+def density_matched_k(a: fmt.COO, rows_per_window: int,
+                      cols_per_block: int) -> int:
+    """nnz_per_step for a capped one-hot schedule: the expected non-zero
+    count of one (rows_per_window × cols_per_block) tile, rounded to a
+    power of two ≥ 8 — each (window, block) step then carries ~K real
+    slots instead of fragmenting."""
+    m, n = a.shape
+    nnz = int(np.asarray(a.row).shape[0])
+    expect = max(1.0, nnz / m * rows_per_window * cols_per_block / n)
+    return max(8, int(2 ** np.round(np.log2(expect))))
+
+
+def autotune(a: fmt.COO, b_shape: Tuple[int, ...], *,
+             sweep: Optional[list] = None, ktile: int = 128,
+             iters: int = 3, warmup: int = 1, seed: int = 0,
+             include_onehot: bool = False) -> TunedConfig:
+    """Measure every sweep point's jitted executor on a random dense operand
+    of ``b_shape`` and cache the fastest config by graph fingerprint.
+
+    ``b_shape`` is (n, kdim) (only kdim matters for the cache key). One-hot
+    candidates are skipped off-TPU unless ``include_onehot`` — the scan
+    emulation is measurable but never competitive on CPU.
+    """
+    kdim = int(b_shape[-1])
+    fp = graph_fingerprint(a)
+    sweep_key = None if sweep is None else tuple(
+        tuple(sorted(c.items())) for c in sweep)
+    key = (fp, kdim, ktile, include_onehot, iters, warmup, sweep_key)
+    hit = _AUTOTUNE_CACHE.get(key)
+    if hit is not None:
+        return hit
+
+    rng = np.random.default_rng(seed)
+    b = jnp.asarray(rng.standard_normal((a.shape[1], kdim)).astype(np.float32))
+    best: Optional[TunedConfig] = None
+    on_tpu = jax.default_backend() == "tpu"
+    for cand in (sweep if sweep is not None else default_sweep(a)):
+        if cand["routing"] == ONEHOT and not (on_tpu or include_onehot):
+            continue
+        ex = get_executor(a, ktile=ktile, **cand)
+        us = _time_call(lambda: ex.spmm(b), iters, warmup)
+        cfg = TunedConfig(
+            nnz_per_step=cand["nnz_per_step"],
+            rows_per_window=cand["rows_per_window"],
+            cols_per_block=cand["cols_per_block"],
+            window_nnz=cand["window_nnz"], ktile=ktile,
+            routing=ex.routing, measured_us=us,
+            utilization=ex.sched.utilization,
+            cols_per_block_resolved=ex.sched.cols_per_block)
+        if best is None or cfg.measured_us < best.measured_us:
+            best = cfg
+    if best is None:
+        raise ValueError(
+            "autotune sweep has no measurable candidate: every point was "
+            "one-hot-routed and those are skipped off-TPU — pass "
+            "include_onehot=True or add a gather candidate")
+    _AUTOTUNE_CACHE[key] = best
+    return best
+
+
+def autotuned_executor(a: fmt.COO, b_shape: Tuple[int, ...],
+                       **kw) -> ScheduleExecutor:
+    """The executor for the measured-fastest configuration (both the tuning
+    result and the executor itself are cached)."""
+    cfg = autotune(a, b_shape, **kw)
+    return get_executor(a, **cfg.as_executor_kwargs())

@@ -21,7 +21,7 @@ import numpy as np
 
 from repro.core import csc as fmt
 from repro.core import spmm
-from repro.core.schedule import Schedule, build_balanced_schedule, execute_schedule_jnp
+from repro.core.schedule import Schedule, execute_schedule_jnp
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,11 +64,23 @@ def make_schedule_spmm(sched: Schedule) -> Callable:
 
 
 def forward_awb(params: dict, a: fmt.COO, x: jax.Array,
-                sched: Optional[Schedule] = None) -> jax.Array:
-    """Forward pass through the converged AWB schedule."""
-    if sched is None:
-        sched = build_balanced_schedule(a)
-    return forward(params, a, x, spmm_fn=make_schedule_spmm(sched))
+                sched: Optional[Schedule] = None,
+                executor: Optional["ScheduleExecutor"] = None  # noqa: F821
+                ) -> jax.Array:
+    """Forward pass through the converged AWB configuration.
+
+    Runs on a ``core.executor.ScheduleExecutor`` — device-resident schedule
+    arrays uploaded once, jitted whole-GCN forward, cached by graph
+    fingerprint — so repeated inference on a fixed graph pays zero schedule
+    rebuild/transfer cost (DESIGN.md §3). Pass ``sched`` to pin a
+    caller-built schedule, or ``executor`` to bring your own.
+    """
+    from repro.core import executor as _exe
+
+    if executor is None:
+        executor = (_exe.get_executor(a) if sched is None
+                    else _exe.executor_for_schedule(sched))
+    return executor.forward(params, x)
 
 
 def loss_fn(params: dict, a: fmt.COO, x: jax.Array, labels: jax.Array,

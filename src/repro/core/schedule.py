@@ -101,6 +101,28 @@ class Schedule:
         return np.stack([edges[:-1], edges[1:]], axis=1)
 
 
+AUTO_COLS_PER_BLOCK = 256
+
+
+def auto_cols_per_block(n_cols: int, target: int = AUTO_COLS_PER_BLOCK) -> int:
+    """Capped dense-operand block width for one-hot routing.
+
+    The Pallas kernel's one-hot gather matrix is ``[K, cols_per_block]``; the
+    seed default (one block spanning all ``n`` columns) makes routing work
+    scale with ``K·n``. Capping at ``target`` (a couple of MXU tiles) keeps
+    routing at ``K·cb`` while the block B-panel stays VMEM-resident. Operands
+    narrower than the cap keep a single full-width block (TDQ-2)."""
+    return n_cols if n_cols <= target else target
+
+
+def _resolve_cols_per_block(n: int, cols_per_block) -> int:
+    if cols_per_block is None:
+        return n
+    if cols_per_block == "auto":
+        return auto_cols_per_block(n)
+    return int(cols_per_block)
+
+
 def _group_layout(keys: np.ndarray, k: int, uniform: bool):
     """Chunk sorted groups into ≤k-slot steps.
 
@@ -114,20 +136,19 @@ def _group_layout(keys: np.ndarray, k: int, uniform: bool):
                 np.zeros(0, np.int64), 0)
     new_group = np.empty(ne, bool)
     new_group[0] = True
-    new_group[1:] = keys[1:] != keys[:-1]
-    group_idx = np.cumsum(new_group) - 1
-    group_start = np.maximum.accumulate(np.where(new_group, np.arange(ne), 0))
-    pos_in_group = np.arange(ne) - group_start
-    chunk_in_group = pos_in_group // k
-    pos_in_chunk = pos_in_group % k
-    n_groups = int(group_idx[-1]) + 1
-    group_sizes = np.bincount(group_idx, minlength=n_groups)
+    np.not_equal(keys[1:], keys[:-1], out=new_group[1:])
+    group_idx = np.cumsum(new_group, dtype=np.int32) - 1
+    starts = np.nonzero(new_group)[0]          # [n_groups] first elem/group
+    n_groups = starts.shape[0]
+    pos_in_group = np.arange(ne, dtype=np.int64) - starts[group_idx]
+    chunk_in_group, pos_in_chunk = np.divmod(pos_in_group, k)
+    group_sizes = np.diff(np.append(starts, ne))
     group_chunks = -(-group_sizes // k)
     if uniform:
         per_group = int(group_chunks.max())
-        step_of_elem = group_idx * per_group + chunk_in_group
+        step_of_elem = group_idx.astype(np.int64) * per_group + chunk_in_group
         n_steps = n_groups * per_group
-        head_of_step = np.repeat(np.nonzero(new_group)[0], per_group)
+        head_of_step = np.repeat(starts, per_group)
     else:
         chunk_offset = np.concatenate([[0], np.cumsum(group_chunks)[:-1]])
         step_of_elem = chunk_offset[group_idx] + chunk_in_group
@@ -136,29 +157,52 @@ def _group_layout(keys: np.ndarray, k: int, uniform: bool):
     return step_of_elem, pos_in_chunk, head_of_step, n_steps
 
 
+def _sorted_order(primary: np.ndarray, row: np.ndarray, col: np.ndarray,
+                  n: int) -> np.ndarray:
+    """argsort by ``(primary, row, col)``.
+
+    Fast path: COO inputs from ``csc.coo_from_*`` are already (row, col)
+    lexsorted, so one stable sort on ``primary`` yields the full order
+    without the 3-key lexsort (the schedule-build hot spot on million-edge
+    graphs)."""
+    if row.size == 0:
+        return np.zeros(0, np.int64)
+    rc = row.astype(np.int64) * n + col
+    if np.all(rc[1:] >= rc[:-1]):
+        return np.argsort(primary, kind="stable")
+    return np.lexsort((col, row, primary))
+
+
 def _emit(row, col, val, shape, k, r, cb, window_of_row, window_start,
           evil_mask_row, uniform: bool) -> Schedule:
     """Pack non-zeros into steps obeying (window, col_block) purity.
     Regular steps first (sorted by (window, col_block)), then evil chunks."""
     m, n = shape
     n_colblocks = max(1, -(-n // cb))
-    colblk = col // cb
+    # single full-width block (the TDQ-2 default): every block id is 0, so
+    # skip the per-nnz division and the key fold entirely
+    one_block = n_colblocks == 1
+    colblk = np.zeros(col.shape[0], np.int32) if one_block else col // cb
     is_evil = evil_mask_row[row]
     n_reg_windows = int(window_start.shape[0])
 
     # ---- regular rows ------------------------------------------------------
     reg = np.nonzero(~is_evil)[0]
     rwin = window_of_row[row[reg]]
-    reg_key = rwin * n_colblocks + colblk[reg]
-    order = np.lexsort((col[reg], row[reg], reg_key))
+    # int64 when folding in the block id: windows × n_colblocks can exceed
+    # int32 on large blocked builds
+    reg_key = (rwin if one_block
+               else rwin.astype(np.int64) * n_colblocks + colblk[reg])
+    order = _sorted_order(reg_key, row[reg], col[reg], n)
     reg = reg[order]
     r_step, r_pos, r_head, n_reg_steps = _group_layout(reg_key[order], k,
                                                        uniform)
 
     # ---- evil rows: group by (row, colblock) --------------------------------
     ev = np.nonzero(is_evil)[0]
-    ev_key = row[ev] * n_colblocks + colblk[ev]
-    order = np.lexsort((col[ev], ev_key))
+    ev_key = (row[ev].astype(np.int64) if one_block
+              else row[ev].astype(np.int64) * n_colblocks + colblk[ev])
+    order = _sorted_order(ev_key, row[ev], col[ev], n)
     ev = ev[order]
     e_step, e_pos, e_head, n_evil_steps = _group_layout(ev_key[order], k,
                                                         False)
@@ -179,28 +223,36 @@ def _emit(row, col, val, shape, k, r, cb, window_of_row, window_start,
         slots = r_step * k + r_pos
         sval[slots] = val[reg]
         w = window_of_row[row[reg]]
-        srow[slots] = (row[reg] - window_start[w]).astype(np.int32)
-        scol[slots] = (col[reg] - colblk[reg] * cb).astype(np.int32)
+        srow[slots] = (row[reg] - window_start[w]).astype(np.int32,
+                                                          copy=False)
+        scol[slots] = (col[reg] if one_block
+                       else col[reg] - colblk[reg] * cb
+                       ).astype(np.int32, copy=False)
         head = reg[r_head]
         step_win[:n_reg_steps] = window_of_row[row[head]]
         step_cb[:n_reg_steps] = colblk[head]
 
     # row_map for regular windows: slot (w, j) -> window_start[w] + j while
     # within the window's row range (and not an evil row, whose value comes
-    # only from chunks)
-    win_end = np.concatenate([window_start[1:], [m]]) if n_reg_windows else \
-        np.zeros(0, np.int64)
-    for w in range(n_reg_windows):
-        cnt = int(min(win_end[w] - window_start[w], r))
-        rows = np.arange(window_start[w], window_start[w] + cnt)
-        vals_map = np.where(evil_mask_row[rows], -1, rows).astype(np.int32)
-        row_map[w * r: w * r + cnt] = vals_map
+    # only from chunks). One fancy-indexed write over all (window, slot)
+    # pairs instead of a per-window loop.
+    if n_reg_windows:
+        win_end = np.concatenate([window_start[1:],
+                                  np.asarray([m], window_start.dtype)])
+        cnt = np.clip(win_end - window_start, 0, r)
+        w_ids = np.repeat(np.arange(n_reg_windows, dtype=np.int64), cnt)
+        j = np.arange(int(cnt.sum()), dtype=np.int64) - \
+            np.repeat(np.cumsum(cnt) - cnt, cnt)
+        rows = window_start[w_ids] + j
+        row_map[w_ids * r + j] = np.where(evil_mask_row[rows], -1,
+                                          rows).astype(np.int32)
 
     if ev.size:
         slots = (n_reg_steps + e_step) * k + e_pos
         sval[slots] = val[ev]
         srow[slots] = (e_step % r).astype(np.int32)  # chunk slot in window
-        scol[slots] = (col[ev] - colblk[ev] * cb).astype(np.int32)
+        scol[slots] = (col[ev] if one_block
+                       else col[ev] - colblk[ev] * cb).astype(np.int32)
         step_win[n_reg_steps:] = (n_reg_windows + e_step[e_head] // r
                                   ).astype(np.int32)
         step_cb[n_reg_steps:] = colblk[ev[e_head]]
@@ -217,51 +269,76 @@ def _emit(row, col, val, shape, k, r, cb, window_of_row, window_start,
 
 
 def _clean_coo(a: fmt.COO):
-    row = np.asarray(a.row, np.int64)
-    col = np.asarray(a.col, np.int64)
+    row = np.asarray(a.row)
+    col = np.asarray(a.col)
     val = np.asarray(a.val, np.float32)
-    keep = row != fmt.PAD_IDX
-    return row[keep], col[keep], val[keep]
+    if (row == fmt.PAD_IDX).any():
+        keep = row != fmt.PAD_IDX
+        row, col, val = row[keep], col[keep], val[keep]
+    # int32 indices stay int32 (million-edge builds are memory-bandwidth
+    # bound); key arithmetic upcasts locally where overflow is possible.
+    return row, col, val
 
 
 def build_balanced_schedule(a: fmt.COO, nnz_per_step: int = 256,
                             rows_per_window: int = 64,
                             cols_per_block: int | None = None,
-                            evil_threshold: int | None = None) -> Schedule:
-    """AWB schedule: first-fit contiguous row windows holding ≤ nnz_per_step
+                            evil_threshold: int | None = None,
+                            window_nnz: int | None = None) -> Schedule:
+    """AWB schedule: first-fit contiguous row windows holding ≤ ``window_nnz``
     non-zeros and ≤ rows_per_window rows (distribution smoothing + remote
     switching, converged), evil rows chunked across steps (row remapping).
 
     ``cols_per_block=None`` (default) disables column blocking — right for
     ultra-sparse operands where blocking fragments steps (TDQ-2). Pass a
-    block size to enable Fig.-9-style blocking (TDQ-1).
+    block size to enable Fig.-9-style blocking (TDQ-1), or ``"auto"`` to cap
+    the block at ``AUTO_COLS_PER_BLOCK`` so the kernel's one-hot routing
+    cost scales with K·cb instead of K·n (see ``auto_cols_per_block``).
+
+    ``window_nnz`` is the window's nnz budget; it defaults to
+    ``nnz_per_step`` (every window drains in one full step when unblocked).
+    With column blocking a window's non-zeros split across ~n_colblocks
+    steps, so the budget auto-couples to ``nnz_per_step * n_colblocks`` in
+    ``"auto"`` mode — each (window, block) step then still carries ~K slots
+    of real work instead of fragmenting (the capped one-hot path needs a
+    small ``nnz_per_step`` ≈ density·rows_per_window·cols_per_block, which
+    ``executor.autotune`` selects).
     """
     m, n = a.shape
     row, col, val = _clean_coo(a)
     k, r = nnz_per_step, rows_per_window
-    cb = n if cols_per_block is None else cols_per_block
-    evil_t = evil_threshold if evil_threshold is not None else k
+    cb = _resolve_cols_per_block(n, cols_per_block)
+    if window_nnz is None:
+        n_colblocks = -(-n // cb)
+        window_nnz = k * n_colblocks if cols_per_block == "auto" else k
+    evil_t = evil_threshold if evil_threshold is not None else window_nnz
 
     per_row = np.bincount(row, minlength=m)
     evil_mask = per_row > evil_t
 
     # First-fit contiguous row windows over regular-row nnz: close a window
-    # when adding the next row would exceed k nnz, or at r rows.
+    # when adding the next row would exceed k nnz, or at r rows. The
+    # candidate next boundary from *every* row is computed in one vectorized
+    # searchsorted; following the boundary chain is then O(1) per window.
     reg_nnz = np.where(evil_mask, 0, per_row).astype(np.int64)
     cum = np.cumsum(reg_nnz)
-    window_of_row = np.zeros(m, np.int64)
-    window_start = [0]
-    base, w = 0, 0
-    while base < m:
-        target = (cum[base - 1] if base else 0) + k
-        hi = int(np.searchsorted(cum, target, side="right"))
-        hi = min(max(hi, base + 1), base + r, m)
-        window_of_row[base:hi] = w
-        if hi < m:
-            window_start.append(hi)
-        base = hi
-        w += 1
-    window_start = np.asarray(window_start, np.int64)
+    if m:
+        prev = np.concatenate([[0], cum[:-1]])
+        nxt = np.searchsorted(cum, prev + window_nnz, side="right")
+        idx = np.arange(m, dtype=np.int64)
+        nxt = np.minimum(np.minimum(np.maximum(nxt, idx + 1), idx + r), m)
+        starts = [0]
+        base = int(nxt[0])
+        while base < m:
+            starts.append(base)
+            base = int(nxt[base])
+        window_start = np.asarray(starts, np.int32)
+        boundary = np.zeros(m, np.int32)
+        boundary[window_start[1:]] = 1
+        window_of_row = np.cumsum(boundary, dtype=np.int32)
+    else:
+        window_start = np.asarray([0], np.int32)
+        window_of_row = np.zeros(0, np.int32)
 
     return _emit(row, col, val, (m, n), k, r, cb, window_of_row,
                  window_start, evil_mask, uniform=False)
@@ -276,9 +353,10 @@ def build_naive_schedule(a: fmt.COO, nnz_per_step: int = 256,
     m, n = a.shape
     row, col, val = _clean_coo(a)
     r = rows_per_window
-    cb = n if cols_per_block is None else cols_per_block
-    window_of_row = np.arange(m, dtype=np.int64) // r
-    window_start = np.arange(0, max(m, 1), r, dtype=np.int64)
+    cb = _resolve_cols_per_block(n, cols_per_block)
+    window_of_row = (np.arange(m, dtype=np.int32) //
+                     np.int32(r)).astype(np.int32, copy=False)
+    window_start = np.arange(0, max(m, 1), r, dtype=np.int32)
     evil_mask = np.zeros(m, bool)  # baseline has no evil-row handling
     return _emit(row, col, val, (m, n), nnz_per_step, r, cb, window_of_row,
                  window_start, evil_mask, uniform=True)

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.core import csc as fmt
 from repro.core import spmm as spmm_ref_mod
-from repro.core.schedule import Schedule, execute_schedule_jnp
+from repro.core.schedule import Schedule
 from repro.kernels import flash_attention as _fa
 from repro.kernels import spmm_pallas as _sp
 from repro.kernels import ref as _ref
@@ -30,14 +30,21 @@ def default_backend() -> str:
 # ---------------------------------------------------------------------------
 
 def spmm(sched: Schedule, b: jax.Array, *, backend: str | None = None,
-         ktile: int = 128) -> jax.Array:
-    """C = A @ B through the converged AWB schedule."""
+         ktile: int = 128, routing: str = "auto") -> jax.Array:
+    """C = A @ B through the converged AWB schedule.
+
+    The XLA path runs on the schedule's cached ``ScheduleExecutor`` (device-
+    resident arrays, jitted fused-gather routing); the Pallas paths pass
+    ``routing`` through to the kernel ("onehot"/"gather"/"auto")."""
     backend = backend or default_backend()
     if backend == "pallas":
-        return _sp.spmm_balanced(sched, b, ktile=ktile, interpret=False)
+        return _sp.spmm_balanced(sched, b, ktile=ktile, interpret=False,
+                                 routing=routing)
     if backend == "pallas_interpret":
-        return _sp.spmm_balanced(sched, b, ktile=ktile, interpret=True)
-    return execute_schedule_jnp(sched, b)
+        return _sp.spmm_balanced(sched, b, ktile=ktile, interpret=True,
+                                 routing=routing)
+    from repro.core.executor import executor_for_schedule
+    return executor_for_schedule(sched, ktile=ktile).spmm(b)
 
 
 def spmm_coo(a: fmt.COO, b: jax.Array) -> jax.Array:

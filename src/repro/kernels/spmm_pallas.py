@@ -7,13 +7,21 @@ TPU adaptation of the paper's engine (DESIGN.md §2):
 
 * A *step* (one grid iteration) is the analogue of a PE's round of work:
   exactly ``nnz_per_step`` non-zero slots, VMEM-resident.
-* The omega network that routes non-zeros to PEs becomes two **one-hot
-  matmuls on the MXU**: gathering B rows is ``one_hot(local_col) @ B_block``
-  and scattering into the window accumulator is
-  ``one_hot(local_row).T @ contributions``. Dynamic routing as dense
-  contractions is the TPU-native replacement for per-element switching —
-  the MXU retires a step in ~(K·CB + K·R)·ktile/16K cycles, beating a
-  per-non-zero DMA gather whose ~512 B descriptors are latency-bound.
+* Routing non-zeros to PEs (the paper's omega network) has two TPU
+  realizations, selected per operand by ``core.executor``'s cost model:
+
+  - ``"onehot"``: two **one-hot matmuls on the MXU** — gathering B rows is
+    ``one_hot(local_col) @ B_block`` and scattering into the window
+    accumulator is ``one_hot(local_row).T @ contributions``. Dynamic routing
+    as dense contractions; the MXU retires a step in ~(K·CB + K·R)·ktile/16K
+    cycles. Viable only when ``cols_per_block`` is capped (schedule built
+    with ``cols_per_block="auto"``) so the [K, CB] routing matrix stays a
+    couple of MXU tiles instead of spanning the whole matrix width.
+  - ``"gather"``: a dynamic **VPU gather** of B rows by slot index
+    (``b_block[local_col]``) followed by the same one-hot scatter. Routing
+    work scales with K alone — the right path for ultra-sparse operands
+    whose natural block is the full width.
+
 * The window accumulator lives in the output block; steps of one window are
   consecutive (schedule contract), so it is zeroed on window entry and
   written back once per window — the ACC-buffer of the paper with RaW
@@ -34,14 +42,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import csc as _fmt
 from repro.core.schedule import Schedule
+
+# jax renamed TPUCompilerParams → CompilerParams across versions; take
+# whichever this install provides
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
 
 
 def _kernel(win_ref, cblk_ref,            # scalar prefetch
             val_ref, lrow_ref, lcol_ref,  # [1, K] step slots
             b_ref,                        # [CB, ktile] dense block
             out_ref,                      # [R, ktile] window accumulator
-            *, n_rows_window: int, acc_dtype):
+            *, n_rows_window: int, acc_dtype, routing: str):
     step = pl.program_id(1)
 
     # window entry: previous step belonged to a different window (or first)
@@ -59,14 +73,20 @@ def _kernel(win_ref, cblk_ref,            # scalar prefetch
     lcol = lcol_ref[0, :]                           # [K]
     lrow = lrow_ref[0, :]                           # [K]
 
-    # gather B rows via one-hot contraction (the omega network, MXU-style)
-    gather = (lcol[:, None] == jax.lax.broadcasted_iota(jnp.int32, (k, cb), 1)
-              ).astype(acc_dtype)                   # [K, CB]
-    rows = jax.lax.dot(gather, b_ref[...].astype(acc_dtype),
-                       preferred_element_type=acc_dtype)  # [K, ktile]
+    if routing == "onehot":
+        # gather B rows via one-hot contraction (the omega network as a
+        # dense MXU contraction — [K, CB] must be capped to stay cheap)
+        gather = (lcol[:, None] == jax.lax.broadcasted_iota(
+            jnp.int32, (k, cb), 1)).astype(acc_dtype)       # [K, CB]
+        rows = jax.lax.dot(gather, b_ref[...].astype(acc_dtype),
+                           preferred_element_type=acc_dtype)  # [K, ktile]
+    else:
+        # dynamic VPU gather by slot index: routing work scales with K
+        rows = jnp.take(b_ref[...], lcol, axis=0).astype(acc_dtype)
     contrib = rows * val[:, None]
 
-    # scatter-accumulate into the window via one-hot^T contraction
+    # scatter-accumulate into the window via one-hot^T contraction (R is
+    # small, so this contraction is cheap on both routing paths)
     scatter = (lrow[:, None] == jax.lax.broadcasted_iota(
         jnp.int32, (k, n_rows_window), 1)).astype(acc_dtype)  # [K, R]
     acc = jax.lax.dot(scatter.T, contrib,
@@ -75,10 +95,10 @@ def _kernel(win_ref, cblk_ref,            # scalar prefetch
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "k", "r", "cb", "n_windows", "ktile", "interpret"))
+    "k", "r", "cb", "n_windows", "ktile", "interpret", "routing"))
 def _spmm_pallas_perm(val, lrow, lcol, win, cblk, b,
                       *, k: int, r: int, cb: int, n_windows: int,
-                      ktile: int, interpret: bool):
+                      ktile: int, interpret: bool, routing: str):
     n, kdim = b.shape
     n_steps = win.shape[0]
 
@@ -90,7 +110,8 @@ def _spmm_pallas_perm(val, lrow, lcol, win, cblk, b,
     out_shape = jax.ShapeDtypeStruct((n_windows * r, kd), b.dtype)
 
     out = pl.pallas_call(
-        functools.partial(_kernel, n_rows_window=r, acc_dtype=jnp.float32),
+        functools.partial(_kernel, n_rows_window=r, acc_dtype=jnp.float32,
+                          routing=routing),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
             grid=grid,
@@ -106,7 +127,7 @@ def _spmm_pallas_perm(val, lrow, lcol, win, cblk, b,
         ),
         out_shape=out_shape,
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
     )(win, cblk, val.reshape(n_steps, k), lrow.reshape(n_steps, k),
       lcol.reshape(n_steps, k), bp)
@@ -114,21 +135,31 @@ def _spmm_pallas_perm(val, lrow, lcol, win, cblk, b,
 
 
 def spmm_balanced(sched: Schedule, b: jax.Array, *, ktile: int = 128,
-                  interpret: bool = True) -> jax.Array:
+                  interpret: bool = True,
+                  routing: str = "auto") -> jax.Array:
     """C = A @ B through the AWB schedule. ``interpret=True`` runs the
-    kernel body on CPU (validation mode); on TPU pass ``interpret=False``."""
+    kernel body on CPU (validation mode); on TPU pass ``interpret=False``.
+
+    ``routing`` is ``"onehot"`` (MXU dense routing), ``"gather"`` (VPU
+    dynamic gather), or ``"auto"`` (the executor cost model decides from the
+    schedule's K/CB/R geometry).
+    """
+    from repro.core.executor import device_step_arrays, select_routing
     from repro.core.schedule import scatter_epilogue
 
-    val = jnp.asarray(sched.val)
-    lrow = jnp.asarray(sched.local_row)
-    lcol = jnp.asarray(sched.local_col)
-    win = jnp.asarray(sched.win_id)
-    cblk = jnp.asarray(sched.col_block)
+    if routing == "auto":
+        routing = select_routing(sched.nnz_per_step, sched.cols_per_block,
+                                 sched.rows_per_window, ktile)
+    # device-resident copies of the schedule arrays, uploaded once per
+    # schedule (shared with one-hot executors) — repeated calls move no
+    # schedule bytes
+    steps = device_step_arrays(sched)
     out_perm = _spmm_pallas_perm(
-        val, lrow, lcol, win, cblk, b,
+        steps["val"].reshape(-1), steps["lrow"].reshape(-1),
+        steps["lcol"].reshape(-1), steps["win"], steps["cblk"], b,
         k=sched.nnz_per_step, r=sched.rows_per_window,
         cb=sched.cols_per_block, n_windows=sched.n_windows,
-        ktile=ktile, interpret=interpret)
+        ktile=ktile, interpret=interpret, routing=routing)
     return scatter_epilogue(sched, out_perm)
 
 
@@ -139,41 +170,41 @@ def spmm_balanced(sched: Schedule, b: jax.Array, *, ktile: int = 128,
 # (the normalized adjacency is not trained).
 # ---------------------------------------------------------------------------
 
-import functools as _functools
-
-from repro.core import csc as _fmt
-from repro.core.schedule import build_balanced_schedule as _build
-
 
 def transpose_coo(a: "_fmt.COO") -> "_fmt.COO":
-    import numpy as _np
-
-    row = _np.asarray(a.col)
-    col = _np.asarray(a.row)
-    val = _np.asarray(a.val)
-    keep = _np.asarray(a.row) != _fmt.PAD_IDX
-    return _fmt.coo_from_arrays(row[keep], col[keep], val[keep],
-                                (a.shape[1], a.shape[0]))
+    return _fmt.transpose_coo(a)
 
 
 def make_spmm_fn(a: "_fmt.COO", *, nnz_per_step: int = 256,
                  rows_per_window: int = 64, ktile: int = 128,
-                 interpret: bool = True):
+                 interpret: bool = True,
+                 schedules: tuple[Schedule, Schedule] | None = None,
+                 routing: str = "auto"):
     """Returns a differentiable ``f(b) = A @ b`` backed by the Pallas kernel
-    with schedules for A and Aᵀ built once (the converged configurations)."""
-    sched = _build(a, nnz_per_step, rows_per_window)
-    sched_t = _build(transpose_coo(a), nnz_per_step, rows_per_window)
+    with schedules for A and Aᵀ built once (the converged configurations).
+
+    ``schedules`` accepts a prebuilt ``(forward, transpose)`` pair; when
+    omitted, both come from the executor's fingerprint cache
+    (``executor.get_spmm_schedules``), so repeated call sites on the same
+    graph share one build instead of re-running it.
+    """
+    if schedules is None:
+        from repro.core.executor import get_spmm_schedules
+        schedules = get_spmm_schedules(a, nnz_per_step=nnz_per_step,
+                                       rows_per_window=rows_per_window)
+    sched, sched_t = schedules
 
     @jax.custom_vjp
     def f(b):
-        return spmm_balanced(sched, b, ktile=ktile, interpret=interpret)
+        return spmm_balanced(sched, b, ktile=ktile, interpret=interpret,
+                             routing=routing)
 
     def fwd(b):
         return f(b), None
 
     def bwd(_, dc):
         return (spmm_balanced(sched_t, dc, ktile=ktile,
-                              interpret=interpret),)
+                              interpret=interpret, routing=routing),)
 
     f.defvjp(fwd, bwd)
     return f

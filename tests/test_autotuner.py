@@ -1,6 +1,10 @@
 """Autotuner + PE-sim invariants (the paper's §IV dynamics)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import autotuner, pesim
 

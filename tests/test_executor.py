@@ -1,0 +1,268 @@
+"""ScheduleExecutor: correctness vs the COO reference, fingerprint cache
+semantics, zero host→device transfers on the cache-hit path, routing-path
+equivalence (gather == one-hot, bit for bit on one schedule), and the
+autotune-and-cache loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import csc as fmt, executor as exe, gcn, schedule, spmm
+from repro.graphs import synth
+from repro.kernels import spmm_pallas
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    exe.clear_caches()
+    yield
+    exe.clear_caches()
+
+
+def _graph(n=300, density=0.03, alpha=0.9, seed=7):
+    return synth.power_law_adjacency(n, density, alpha, seed=seed)
+
+
+def _b(n, k=12, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((n, k)).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Correctness
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,density,alpha", [
+    (64, 0.05, 0.8), (200, 0.02, 1.1), (123, 0.08, 0.6)])
+def test_gather_executor_matches_coo(n, density, alpha):
+    a = _graph(n, density, alpha, seed=n)
+    b = _b(n, seed=n)
+    ref = np.asarray(spmm.spmm_coo(a, b))
+    ex = exe.get_executor(a, nnz_per_step=32, rows_per_window=16,
+                          routing=exe.GATHER)
+    np.testing.assert_allclose(np.asarray(ex.spmm(b)), ref, atol=1e-4)
+
+
+def test_executor_handles_evil_rows():
+    n = 64
+    rng = np.random.default_rng(0)
+    dense = np.zeros((n, n), np.float32)
+    dense[5, :] = rng.standard_normal(n)
+    dense[rng.integers(0, n, 40), rng.integers(0, n, 40)] = 1.0
+    a = fmt.coo_from_dense(dense)
+    ex = exe.get_executor(a, nnz_per_step=8, rows_per_window=8)
+    assert ex.sched.n_evil_chunks > 0
+    b = _b(n, 5)
+    np.testing.assert_allclose(np.asarray(ex.spmm(b)),
+                               dense @ np.asarray(b), atol=1e-4)
+
+
+def test_onehot_executor_matches_gather():
+    a = _graph(150, 0.05, 0.9, seed=3)
+    b = _b(150, 9, seed=3)
+    gather = exe.get_executor(a, nnz_per_step=16, rows_per_window=8,
+                              routing=exe.GATHER)
+    onehot = exe.get_executor(a, nnz_per_step=16, rows_per_window=8,
+                              routing=exe.ONEHOT)
+    np.testing.assert_allclose(np.asarray(gather.spmm(b)),
+                               np.asarray(onehot.spmm(b)), atol=1e-5)
+
+
+def test_executor_chunked_slot_stream():
+    """Slot streams longer than slot_chunk take the fori_loop path."""
+    a = _graph(400, 0.05, 0.9, seed=5)
+    b = _b(400, 8, seed=5)
+    ref = np.asarray(spmm.spmm_coo(a, b))
+    ex = exe.ScheduleExecutor(
+        schedule.build_balanced_schedule(a, 64, 32), slot_chunk=512)
+    assert ex._n_chunks > 1
+    np.testing.assert_allclose(np.asarray(ex.spmm(b)), ref, atol=1e-4)
+
+
+def test_forward_awb_through_executor_matches_reference():
+    ds = synth.make_dataset("cora", scale=4)
+    cfg = gcn.GCNConfig(ds.num_features, 16, ds.num_classes)
+    params = gcn.init_params(cfg, jax.random.PRNGKey(0))
+    x = jnp.asarray(ds.features)
+    ref = np.asarray(gcn.forward(params, ds.adj, x))
+    # default path (fingerprint-cached executor)
+    got = np.asarray(gcn.forward_awb(params, ds.adj, x))
+    np.testing.assert_allclose(got, ref, atol=1e-3)
+    # pinned-schedule path
+    sched = schedule.build_balanced_schedule(ds.adj, 64, 32)
+    got2 = np.asarray(gcn.forward_awb(params, ds.adj, x, sched))
+    np.testing.assert_allclose(got2, ref, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Cache semantics + zero transfers on the hot path
+# ---------------------------------------------------------------------------
+
+def test_fingerprint_cache_hits_and_misses():
+    a = _graph(seed=1)
+    ex1 = exe.get_executor(a)
+    assert exe.get_executor(a) is ex1
+    # same matrix content, different COO object → same fingerprint → hit
+    a2 = fmt.COO(jnp.asarray(np.asarray(a.row).copy()),
+                 jnp.asarray(np.asarray(a.col).copy()),
+                 jnp.asarray(np.asarray(a.val).copy()), a.shape)
+    assert exe.get_executor(a2) is ex1
+    # different graph → miss
+    assert exe.get_executor(_graph(seed=2)) is not ex1
+    # different config → miss
+    assert exe.get_executor(a, nnz_per_step=64) is not ex1
+
+
+def test_schedule_pair_cache_dedupes_builds(monkeypatch):
+    a = _graph(seed=3)
+    calls = []
+    orig = schedule.build_balanced_schedule
+
+    def counting(*args, **kw):
+        calls.append(1)
+        return orig(*args, **kw)
+
+    monkeypatch.setattr(exe, "build_balanced_schedule", counting)
+    exe.get_spmm_schedules(a, nnz_per_step=32, rows_per_window=16)
+    assert len(calls) == 2  # one for A, one for Aᵀ
+    # a second call site on the same graph rebuilds nothing
+    s1, s1t = exe.get_spmm_schedules(a, nnz_per_step=32, rows_per_window=16)
+    assert len(calls) == 2
+    # and make_spmm_fn consumes the cached pair
+    f = spmm_pallas.make_spmm_fn(a, nnz_per_step=32, rows_per_window=16,
+                                 ktile=8)
+    assert len(calls) == 2
+    b = _b(a.shape[0], 6, seed=3)
+    np.testing.assert_allclose(np.asarray(f(b)),
+                               np.asarray(spmm.spmm_coo(a, b)), atol=1e-4)
+
+
+def test_cache_hit_performs_zero_host_transfers(monkeypatch):
+    """Acceptance: repeated executor calls move no schedule bytes — no
+    jnp.asarray / device_put after the warm-up call."""
+    a = _graph(seed=4)
+    b = _b(a.shape[0], seed=4)
+    ex = exe.get_executor(a, nnz_per_step=64, rows_per_window=32)
+    ex.spmm(b).block_until_ready()  # trace + compile + upload
+
+    transfers = []
+    orig_asarray = jnp.asarray
+    orig_put = jax.device_put
+
+    def counting_asarray(*args, **kw):
+        transfers.append(("asarray", args[0].__class__.__name__))
+        return orig_asarray(*args, **kw)
+
+    def counting_put(*args, **kw):
+        transfers.append(("device_put", args[0].__class__.__name__))
+        return orig_put(*args, **kw)
+
+    monkeypatch.setattr(jnp, "asarray", counting_asarray)
+    monkeypatch.setattr(jax, "device_put", counting_put)
+
+    ex2 = exe.get_executor(a, nnz_per_step=64, rows_per_window=32)
+    assert ex2 is ex
+    for _ in range(3):
+        ex2.spmm(b).block_until_ready()
+    assert transfers == []
+
+
+def test_executor_for_schedule_memoizes():
+    a = _graph(seed=6)
+    s = schedule.build_balanced_schedule(a, 64, 32)
+    ex1 = exe.executor_for_schedule(s)
+    assert exe.executor_for_schedule(s) is ex1
+
+
+# ---------------------------------------------------------------------------
+# Kernel routing paths: gather == one-hot bit for bit on one schedule
+# ---------------------------------------------------------------------------
+
+def test_kernel_routing_paths_bit_identical():
+    a = _graph(150, 0.04, 1.0, seed=9)
+    b = _b(150, 12, seed=9)
+    s = schedule.build_balanced_schedule(a, 16, 8)
+    onehot = np.asarray(spmm_pallas.spmm_balanced(s, b, ktile=8,
+                                                  routing="onehot"))
+    gather = np.asarray(spmm_pallas.spmm_balanced(s, b, ktile=8,
+                                                  routing="gather"))
+    np.testing.assert_array_equal(onehot, gather)  # bit-for-bit in f32
+    np.testing.assert_allclose(gather, np.asarray(spmm.spmm_coo(a, b)),
+                               atol=1e-4)
+
+
+def test_kernel_capped_cb_matches_fullwidth():
+    a = _graph(400, 0.04, 0.9, seed=10)
+    b = _b(400, 10, seed=10)
+    full = schedule.build_balanced_schedule(a, 16, 8)
+    capped = schedule.build_balanced_schedule(a, 8, 8,
+                                              cols_per_block="auto")
+    assert capped.cols_per_block < a.shape[1]
+    out_full = np.asarray(spmm_pallas.spmm_balanced(full, b, ktile=8,
+                                                    routing="onehot"))
+    out_capped = np.asarray(spmm_pallas.spmm_balanced(capped, b, ktile=8,
+                                                      routing="onehot"))
+    # different step partitions sum the same terms; f32 re-association
+    # noise only
+    np.testing.assert_allclose(out_capped, out_full, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(out_capped, np.asarray(spmm.spmm_coo(a, b)),
+                               atol=1e-4)
+
+
+def test_routing_cost_model_prefers_gather_for_wide_blocks():
+    assert exe.select_routing(256, 58000, 64) == exe.GATHER
+    assert exe.select_routing(256, 128, 64) == exe.ONEHOT
+    costs = exe.routing_cost_model(256, 1024, 64)
+    assert costs[exe.ONEHOT] > 0 and costs[exe.GATHER] > 0
+
+
+# ---------------------------------------------------------------------------
+# Autotune-and-cache
+# ---------------------------------------------------------------------------
+
+def test_autotune_returns_cached_config():
+    a = _graph(seed=12)
+    cfg = exe.autotune(a, (a.shape[1], 12), iters=1, warmup=1)
+    assert cfg.measured_us > 0
+    assert cfg.routing in (exe.GATHER, exe.ONEHOT)
+    assert exe.autotune(a, (a.shape[1], 12), iters=1, warmup=1) is cfg
+    # different measurement settings are a different cache entry, not a
+    # stale hit
+    assert exe.autotune(a, (a.shape[1], 12), iters=2, warmup=1) is not cfg
+    ex = exe.autotuned_executor(a, (a.shape[1], 12))
+    b = _b(a.shape[0], 12, seed=12)
+    np.testing.assert_allclose(np.asarray(ex.spmm(b)),
+                               np.asarray(spmm.spmm_coo(a, b)), atol=1e-4)
+
+
+def test_fingerprint_ignores_padding():
+    a = _graph(seed=14)
+    padded = fmt.pad_coo(a, a.nnz + 64)
+    assert exe.graph_fingerprint(a) == exe.graph_fingerprint(padded)
+    assert exe.get_executor(padded) is exe.get_executor(a)
+
+
+def test_autotuned_executor_honours_explicit_sweep_cb():
+    """The returned executor runs exactly the measured-fastest candidate —
+    an explicit cols_per_block is not rewritten to 'auto'."""
+    a = _graph(600, 0.02, 0.9, seed=15)
+    sweep = [dict(nnz_per_step=8, rows_per_window=16, cols_per_block=64,
+                  window_nnz=80, routing=exe.ONEHOT)]
+    cfg = exe.autotune(a, (600, 6), sweep=sweep, include_onehot=True,
+                       iters=1, warmup=1)
+    assert cfg.cols_per_block == 64
+    ex = exe.autotuned_executor(a, (600, 6), sweep=sweep,
+                                include_onehot=True, iters=1, warmup=1)
+    assert ex.sched.cols_per_block == 64 == cfg.cols_per_block_resolved
+    # off-TPU, an all-onehot sweep without the opt-in is a clear error
+    with pytest.raises(ValueError, match="include_onehot"):
+        exe.autotune(a, (600, 7), sweep=sweep)
+
+
+def test_autotune_sweep_includes_capped_onehot_candidate():
+    a = _graph(600, 0.02, 0.9, seed=13)
+    cand = exe.default_sweep(a)
+    routings = {c["routing"] for c in cand}
+    assert routings == {exe.GATHER, exe.ONEHOT}
+    cfg = exe.autotune(a, (600, 8), iters=1, warmup=1, include_onehot=True)
+    assert cfg.measured_us > 0
