@@ -25,7 +25,7 @@ def main() -> None:
 
     from benchmarks import (convergence, latency, moe_imbalance, order_ops,
                             roofline_table, scaling, schedule_tuning,
-                            schedule_util, utilization)
+                            schedule_util, sharded_spmm, utilization)
 
     suites = {
         "order_ops": order_ops.run,                    # Table II
@@ -35,6 +35,7 @@ def main() -> None:
         "latency": latency.run,                        # Tables III/IV
         "schedule_util": schedule_util.run,            # TPU Fig-14 analogue
         "schedule_tuning": schedule_tuning.run,        # kernel-param sweep
+        "sharded_spmm": sharded_spmm.run,              # multi-device executor
         "moe_imbalance": moe_imbalance.run,            # beyond-paper (EP)
         "roofline": roofline_table.run,                # §Roofline
     }
@@ -63,6 +64,13 @@ def main() -> None:
             "rows": [{"name": name, "us_per_call": round(float(us), 1),
                       "derived": derived} for name, us, derived in rows],
         }
+        # per-device-count latency of the sharded executor as its own
+        # section, so the perf trajectory across PRs tracks device scaling
+        # separately from the single-device rows
+        sharded = [r for r in payload["rows"]
+                   if r["name"].startswith("sharded_spmm/")]
+        if sharded:
+            payload["sharded_spmm"] = sharded
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
             f.write("\n")

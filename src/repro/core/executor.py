@@ -48,11 +48,15 @@ from typing import Callable, Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.core import csc as fmt
 from repro.core.schedule import (Schedule, auto_cols_per_block,
                                  build_balanced_schedule,
                                  build_naive_schedule)
+from repro.sharding.schedule_shard import shard_schedule
 
 GATHER = "gather"
 ONEHOT = "onehot"
@@ -137,67 +141,34 @@ def device_step_arrays(sched: Schedule) -> dict:
     return arrs
 
 
-class ScheduleExecutor:
-    """Device-resident executor of one converged AWB schedule.
+def _gather_slots(sched: Schedule):
+    """Per-slot flat arrays of the fused-gather routing: global B-row
+    ``gcol``, output row ``tgt`` (``row_map ∘ slot`` precomposed: the
+    scatter epilogue folds into the main scatter — padding slots carry
+    ``val == 0``, so a clamped target row accumulates nothing), and the
+    slot values. All step-major, length ``n_steps * nnz_per_step``."""
+    m, n = sched.shape
+    k = sched.nnz_per_step
+    r = sched.rows_per_window
+    cb = sched.cols_per_block
+    win_slot = np.repeat(sched.win_id.astype(np.int64), k)
+    cblk_slot = np.repeat(sched.col_block.astype(np.int64), k)
+    gcol = np.minimum(cblk_slot * cb + sched.local_col, n - 1)
+    slot = win_slot * r + sched.local_row
+    tgt = np.maximum(sched.row_map[slot], 0).astype(np.int32)
+    return gcol.astype(np.int32), tgt, sched.val
 
-    Construction uploads every schedule array to the default device once;
-    the jitted closures capture those arrays, so repeated ``spmm``/
-    ``forward`` calls move only the dense operand.
-    """
 
-    def __init__(self, sched: Schedule, *, ktile: int = 128,
-                 routing: Optional[str] = None,
-                 slot_chunk: int = 1 << 18):
-        self.sched = sched
-        self.ktile = ktile
-        m, n = sched.shape
-        k = sched.nnz_per_step
-        r = sched.rows_per_window
-        cb = sched.cols_per_block
-        self.routing = routing or select_routing(k, cb, r, ktile)
+class _ExecutorBase:
+    """Shared surface of the single- and multi-device executors: operand
+    validation, the jitted-closure call protocol, and the whole-GCN forward
+    loop (every layer's A × (X × W) through ``self._spmm_impl``)."""
 
-        # ---- one-time host-side precompute + host→device upload ----------
-        # only the selected routing's representation is built/uploaded
-        if self.routing == GATHER:
-            # per-slot global column and output row (row_map ∘ slot
-            # precomposed: the scatter epilogue folds into the main scatter
-            # — padding slots carry val == 0, so a clamped target row
-            # accumulates nothing)
-            win_slot = np.repeat(sched.win_id.astype(np.int64), k)
-            cblk_slot = np.repeat(sched.col_block.astype(np.int64), k)
-            gcol = np.minimum(cblk_slot * cb + sched.local_col, n - 1)
-            slot = win_slot * r + sched.local_row
-            tgt = np.maximum(sched.row_map[slot], 0).astype(np.int32)
-
-            # pad the flat slot stream to a whole number of chunks so the
-            # fused gather path can bound its [chunk, kdim] intermediate
-            s_total = gcol.shape[0]
-            self._slot_chunk = int(min(slot_chunk, max(1, s_total)))
-            pad = (-s_total) % self._slot_chunk
-            self._n_chunks = (s_total + pad) // self._slot_chunk
-
-            def _chunked(x, fill):
-                return jnp.asarray(
-                    np.concatenate([x, np.full(pad, fill, x.dtype)])
-                    .reshape(self._n_chunks, self._slot_chunk))
-
-            self._gcol = _chunked(gcol.astype(np.int32), 0)
-            self._tgt = _chunked(tgt, 0)
-            self._val = _chunked(sched.val, 0.0)
-        else:
-            # step-major arrays (shared with the Pallas kernel wrapper —
-            # one upload per schedule no matter who consumes it)
-            self._steps = device_step_arrays(sched)
-
-        self._spmm_impl = (self._gather_impl if self.routing == GATHER
-                           else self._onehot_impl)
-        self._spmm = jax.jit(self._spmm_impl)
-        self._forward = jax.jit(self._forward_impl)
-
-    # ---- public API --------------------------------------------------------
+    sched: Schedule
+    routing: str
 
     def spmm(self, b: jax.Array) -> jax.Array:
-        """C = A @ B through the device-resident converged schedule."""
+        """C = A @ b through the device-resident converged schedule."""
         if b.shape[0] != self.sched.shape[1]:
             raise ValueError(
                 f"operand has {b.shape[0]} rows; schedule expects "
@@ -219,6 +190,64 @@ class ScheduleExecutor:
     @property
     def utilization(self) -> float:
         return self.sched.utilization
+
+    def _forward_impl(self, params: dict, x: jax.Array) -> jax.Array:
+        h = x
+        n_layers = len(params)
+        for i in range(n_layers):
+            h = self._spmm_impl(h @ params[f"w{i}"])  # A × (X × W)
+            if i < n_layers - 1:
+                h = jax.nn.relu(h)
+        return h
+
+
+class ScheduleExecutor(_ExecutorBase):
+    """Device-resident executor of one converged AWB schedule.
+
+    Construction uploads every schedule array to the default device once;
+    the jitted closures capture those arrays, so repeated ``spmm``/
+    ``forward`` calls move only the dense operand.
+    """
+
+    def __init__(self, sched: Schedule, *, ktile: int = 128,
+                 routing: Optional[str] = None,
+                 slot_chunk: int = 1 << 18):
+        self.sched = sched
+        self.ktile = ktile
+        k = sched.nnz_per_step
+        r = sched.rows_per_window
+        cb = sched.cols_per_block
+        self.routing = routing or select_routing(k, cb, r, ktile)
+
+        # ---- one-time host-side precompute + host→device upload ----------
+        # only the selected routing's representation is built/uploaded
+        if self.routing == GATHER:
+            gcol, tgt, val = _gather_slots(sched)
+
+            # pad the flat slot stream to a whole number of chunks so the
+            # fused gather path can bound its [chunk, kdim] intermediate
+            s_total = gcol.shape[0]
+            self._slot_chunk = int(min(slot_chunk, max(1, s_total)))
+            pad = (-s_total) % self._slot_chunk
+            self._n_chunks = (s_total + pad) // self._slot_chunk
+
+            def _chunked(x, fill):
+                return jnp.asarray(
+                    np.concatenate([x, np.full(pad, fill, x.dtype)])
+                    .reshape(self._n_chunks, self._slot_chunk))
+
+            self._gcol = _chunked(gcol, 0)
+            self._tgt = _chunked(tgt, 0)
+            self._val = _chunked(val, 0.0)
+        else:
+            # step-major arrays (shared with the Pallas kernel wrapper —
+            # one upload per schedule no matter who consumes it)
+            self._steps = device_step_arrays(sched)
+
+        self._spmm_impl = (self._gather_impl if self.routing == GATHER
+                           else self._onehot_impl)
+        self._spmm = jax.jit(self._spmm_impl)
+        self._forward = jax.jit(self._forward_impl)
 
     # ---- jitted bodies -----------------------------------------------------
 
@@ -281,14 +310,182 @@ class ScheduleExecutor:
             jnp.where(valid, rm, 0)].add(contrib)
         return out.astype(b.dtype)
 
-    def _forward_impl(self, params: dict, x: jax.Array) -> jax.Array:
-        h = x
-        n_layers = len(params)
-        for i in range(n_layers):
-            h = self._spmm_impl(h @ params[f"w{i}"])  # A × (X × W)
-            if i < n_layers - 1:
-                h = jax.nn.relu(h)
-        return h
+
+class ShardedScheduleExecutor(_ExecutorBase):
+    """Multi-device executor of one converged AWB schedule.
+
+    The schedule is split by ``sharding.schedule_shard`` into contiguous
+    per-device step shards (steps are equal work, so equal counts are
+    balanced devices — the paper's equal-work distribution across the PE
+    array, lifted one level to the device mesh). Construction uploads each
+    shard to its own device exactly once (``device_put`` with a
+    ``P('dev', ...)`` sharding on the stacked step axis); ``spmm``/
+    ``forward`` then run the routing body under ``shard_map`` and merge the
+    per-device partial outputs with a ``psum`` — the distributed adder
+    tree that also reunites evil-row chunks and boundary-straddling
+    windows living on different devices.
+
+    Both routing paths shard identically: the step axis is the shard axis,
+    and each device executes exactly the single-device body over its own
+    steps. Numerics therefore match the single-device executor up to f32
+    re-association of the cross-device sum.
+    """
+
+    def __init__(self, sched: Schedule, *, n_devices: Optional[int] = None,
+                 mesh: Optional[Mesh] = None, ktile: int = 128,
+                 routing: Optional[str] = None, slot_chunk: int = 1 << 18):
+        if mesh is None:
+            devs = jax.devices()
+            if n_devices is None:
+                n_devices = len(devs)
+            if not 1 <= n_devices <= len(devs):
+                raise ValueError(
+                    f"n_devices={n_devices} but this host exposes "
+                    f"{len(devs)} device(s)")
+            mesh = Mesh(np.asarray(devs[:n_devices]), ("dev",))
+        else:
+            if len(mesh.axis_names) != 1:
+                raise ValueError(
+                    "ShardedScheduleExecutor shards over one step axis and "
+                    f"needs a 1-D mesh; got axes {mesh.axis_names}")
+            if n_devices is not None and n_devices != mesh.devices.size:
+                raise ValueError(
+                    f"n_devices={n_devices} contradicts the given mesh of "
+                    f"{mesh.devices.size} device(s); pass one or the other")
+            n_devices = int(mesh.devices.size)
+        self.mesh = mesh
+        self.axis = mesh.axis_names[0]
+        self.n_devices = n_devices
+        self.sched = sched
+        self.ktile = ktile
+        k = sched.nnz_per_step
+        r = sched.rows_per_window
+        cb = sched.cols_per_block
+        self.routing = routing or select_routing(k, cb, r, ktile)
+
+        shards = shard_schedule(sched, n_devices)
+        self.step_ranges = shards.ranges
+
+        def put(x, *tail_spec):
+            return jax.device_put(
+                jnp.asarray(x), NamedSharding(mesh, P(self.axis, *tail_spec)))
+
+        # ---- one-time host-side split + per-device upload ----------------
+        if self.routing == GATHER:
+            gcol, tgt, val = _gather_slots(sched)
+            # per-device flat slot streams, padded to the common shard
+            # length, then chunked so the [chunk, kdim] intermediate stays
+            # bounded (same contract as the single-device executor)
+            s_max = shards.steps_per_shard
+            length = s_max * k
+            self._slot_chunk = int(min(slot_chunk, max(1, length)))
+            pad = (-length) % self._slot_chunk
+            self._n_chunks = (length + pad) // self._slot_chunk
+
+            def stack(x, fill):
+                out = np.full((n_devices, length + pad), fill, x.dtype)
+                for d, (lo, hi) in enumerate(shards.ranges):
+                    out[d, :(hi - lo) * k] = x[lo * k:hi * k]
+                return put(out.reshape(n_devices, self._n_chunks,
+                                       self._slot_chunk))
+
+            self._gcol = stack(gcol, 0)
+            self._tgt = stack(tgt, 0)
+            self._val = stack(val, 0.0)
+        else:
+            self._steps = {
+                "val": put(shards.val), "lrow": put(shards.lrow),
+                "lcol": put(shards.lcol), "win": put(shards.win),
+                "cblk": put(shards.cblk),
+                # replicated: the epilogue runs device-local, pre-psum
+                "row_map": jax.device_put(jnp.asarray(sched.row_map),
+                                          NamedSharding(mesh, P())),
+            }
+
+        self._spmm_impl = (self._sharded_gather_impl
+                           if self.routing == GATHER
+                           else self._sharded_onehot_impl)
+        self._spmm = jax.jit(self._spmm_impl)
+        self._forward = jax.jit(self._forward_impl)
+
+    def _shard_map(self, body, in_specs):
+        # check_rep=False: the bodies end in an explicit psum, which makes
+        # the P() output replicated by construction; the static replication
+        # checker has no rule for scatter-add on some jax versions.
+        return shard_map(body, mesh=self.mesh, in_specs=in_specs,
+                         out_specs=P(), check_rep=False)
+
+    # ---- jitted bodies -----------------------------------------------------
+
+    def _sharded_gather_impl(self, b: jax.Array) -> jax.Array:
+        """Fused-gather routing per device shard + psum merge."""
+        m, _ = self.sched.shape
+        axis = self.axis
+        n_chunks = self._n_chunks
+
+        def body(gcol, tgt, val, bf):
+            gcol, tgt, val = gcol[0], tgt[0], val[0]   # [n_chunks, chunk]
+            out = jnp.zeros((m, bf.shape[1]), jnp.float32)
+            if n_chunks == 1:
+                g = jnp.take(bf, gcol[0], axis=0) * val[0][:, None]
+                out = out.at[tgt[0]].add(g)
+            else:
+                def chunk(i, acc):
+                    g = jnp.take(bf, gcol[i], axis=0) * val[i][:, None]
+                    return acc.at[tgt[i]].add(g)
+                out = jax.lax.fori_loop(0, n_chunks, chunk, out)
+            return jax.lax.psum(out, axis)
+
+        fn = self._shard_map(body, (P(axis), P(axis), P(axis), P()))
+        out = fn(self._gcol, self._tgt, self._val, b.astype(jnp.float32))
+        return out.astype(b.dtype)
+
+    def _sharded_onehot_impl(self, b: jax.Array) -> jax.Array:
+        """Per-device one-hot step scan + local scatter epilogue, then a
+        psum of the per-device partial outputs."""
+        m, n = self.sched.shape
+        r = self.sched.rows_per_window
+        cb = self.sched.cols_per_block
+        n_windows = self.sched.n_windows
+        axis = self.axis
+        ncb = -(-n // cb)
+
+        def body(win, cblk, val, lrow, lcol, rm, bf):
+            win, cblk = win[0], cblk[0]                # [S] / [S, K]
+            val, lrow, lcol = val[0], lrow[0], lcol[0]
+            kdim = bf.shape[1]
+            bp = jnp.pad(bf, ((0, ncb * cb - n), (0, 0)))
+            bp = bp.reshape(ncb, cb, kdim)
+
+            def step(out_perm, s):
+                w, cblk_s, val_s, lrow_s, lcol_s = s
+                bb = bp[cblk_s]                                 # [CB, kdim]
+                gather = (lcol_s[:, None] == jnp.arange(cb)[None, :]
+                          ).astype(jnp.float32)                 # [K, CB]
+                contrib = (gather @ bb) * val_s[:, None]        # [K, kdim]
+                scatter = (lrow_s[:, None] == jnp.arange(r)[None, :]
+                           ).astype(jnp.float32)                # [K, R]
+                out_perm = out_perm.at[w].add(scatter.T @ contrib)
+                return out_perm, None
+
+            out_perm = jnp.zeros((n_windows, r, kdim), jnp.float32)
+            out_perm, _ = jax.lax.scan(step, out_perm,
+                                       (win, cblk, val, lrow, lcol))
+            # device-local scatter epilogue, then the cross-device adder
+            # tree: one psum of [m, kdim] partials
+            valid = rm >= 0
+            contrib = jnp.where(valid[:, None],
+                                out_perm.reshape(-1, kdim), 0.0)
+            out = jnp.zeros((m, kdim), jnp.float32).at[
+                jnp.where(valid, rm, 0)].add(contrib)
+            return jax.lax.psum(out, axis)
+
+        fn = self._shard_map(
+            body, (P(axis), P(axis), P(axis), P(axis), P(axis), P(), P()))
+        s = self._steps
+        out = fn(s["win"], s["cblk"], s["val"], s["lrow"], s["lcol"],
+                 s["row_map"], b.astype(jnp.float32))
+        return out.astype(b.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -320,6 +517,35 @@ def _sched_key(fp: str, nnz_per_step, rows_per_window, cols_per_block,
                window_nnz, balanced):
     return (fp, nnz_per_step, rows_per_window, str(cols_per_block),
             window_nnz, balanced)
+
+
+def mesh_fingerprint(mesh: Optional[Mesh] = None,
+                     n_devices: Optional[int] = None):
+    """Hashable identity of the requested device mesh — the second half of
+    the ``(graph fingerprint, mesh)`` executor-cache key.
+
+    ``None`` (no mesh, no device count) means the plain single-device
+    ``ScheduleExecutor``; ``n_devices=1`` is a *distinct* entry (a 1-device
+    sharded executor), so single- and multi-device executors coexist in the
+    cache. Device ids are part of the key: the same shape on different
+    devices is a different placement.
+    """
+    if mesh is None and n_devices is None:
+        return None
+    if mesh is not None:
+        if n_devices is not None and n_devices != mesh.devices.size:
+            raise ValueError(
+                f"n_devices={n_devices} contradicts the given mesh of "
+                f"{mesh.devices.size} device(s); pass one or the other")
+        return (tuple(mesh.axis_names), tuple(mesh.devices.shape),
+                tuple(int(d.id) for d in mesh.devices.flat))
+    devs = jax.devices()
+    if not 1 <= n_devices <= len(devs):
+        raise ValueError(
+            f"n_devices={n_devices} but this host exposes "
+            f"{len(devs)} device(s)")
+    devs = devs[:n_devices]
+    return (("dev",), (len(devs),), tuple(int(d.id) for d in devs))
 
 
 def get_schedule(a: fmt.COO, *, nnz_per_step: int = 256,
@@ -365,13 +591,22 @@ def get_executor(a: fmt.COO, *, nnz_per_step: int = 256,
                  rows_per_window: int = 64, cols_per_block=None,
                  window_nnz: Optional[int] = None, ktile: int = 128,
                  routing: Optional[str] = None,
-                 balanced: bool = True) -> ScheduleExecutor:
+                 balanced: bool = True,
+                 n_devices: Optional[int] = None,
+                 mesh: Optional[Mesh] = None) -> _ExecutorBase:
     """Fingerprint-cached executor: the first call converges (builds the
     schedule, uploads it); every later call with the same graph + config is
-    a pure cache hit — no rebuild, no host→device transfer."""
+    a pure cache hit — no rebuild, no host→device transfer.
+
+    Pass ``n_devices`` (or a 1-D ``mesh``) for a ``ShardedScheduleExecutor``
+    whose schedule shards live one-per-device; the cache keys on
+    ``(graph fingerprint, mesh)``, so single- and multi-device executors of
+    the same graph coexist.
+    """
     fp = graph_fingerprint(a)
+    mkey = mesh_fingerprint(mesh, n_devices)
     key = (_sched_key(fp, nnz_per_step, rows_per_window, cols_per_block,
-                      window_nnz, balanced), ktile, routing)
+                      window_nnz, balanced), ktile, routing, mkey)
     ex = _EXECUTOR_CACHE.get(key)
     if ex is None:
         sched = get_schedule(a, nnz_per_step=nnz_per_step,
@@ -379,26 +614,39 @@ def get_executor(a: fmt.COO, *, nnz_per_step: int = 256,
                              cols_per_block=cols_per_block,
                              window_nnz=window_nnz, balanced=balanced,
                              fingerprint=fp)
-        ex = ScheduleExecutor(sched, ktile=ktile, routing=routing)
+        if mkey is None:
+            ex = ScheduleExecutor(sched, ktile=ktile, routing=routing)
+        else:
+            ex = ShardedScheduleExecutor(sched, n_devices=n_devices,
+                                         mesh=mesh, ktile=ktile,
+                                         routing=routing)
         _EXECUTOR_CACHE[key] = ex
     return ex
 
 
 def executor_for_schedule(sched: Schedule, *, ktile: int = 128,
-                          routing: Optional[str] = None) -> ScheduleExecutor:
+                          routing: Optional[str] = None,
+                          n_devices: Optional[int] = None,
+                          mesh: Optional[Mesh] = None) -> _ExecutorBase:
     """Executor for a caller-built schedule, memoized per (schedule
-    instance, ktile, routing) — identity-keyed, so rebuilding a schedule
-    re-uploads while reusing one doesn't, and asking for a different
-    routing/ktile never returns a mismatched cached executor."""
+    instance, ktile, routing, mesh) — identity-keyed, so rebuilding a
+    schedule re-uploads while reusing one doesn't, and asking for a
+    different routing/ktile/mesh never returns a mismatched cached
+    executor."""
     routing = routing or select_routing(
         sched.nnz_per_step, sched.cols_per_block, sched.rows_per_window,
         ktile)
-    key = (id(sched), ktile, routing)
+    mkey = mesh_fingerprint(mesh, n_devices)
+    key = (id(sched), ktile, routing, mkey)
     ex = _EXEC_BY_SCHEDULE.get(key)
     if ex is not None and ex.sched is sched:
         _EXEC_BY_SCHEDULE.move_to_end(key)
         return ex
-    ex = ScheduleExecutor(sched, ktile=ktile, routing=routing)
+    if mkey is None:
+        ex = ScheduleExecutor(sched, ktile=ktile, routing=routing)
+    else:
+        ex = ShardedScheduleExecutor(sched, n_devices=n_devices, mesh=mesh,
+                                     ktile=ktile, routing=routing)
     _EXEC_BY_SCHEDULE[key] = ex
     if len(_EXEC_BY_SCHEDULE) > _EXEC_BY_SCHEDULE_CAP:
         _EXEC_BY_SCHEDULE.popitem(last=False)
@@ -416,7 +664,10 @@ class TunedConfig:
     ``cols_per_block`` holds the sweep candidate's *request* verbatim
     (None | int | "auto") so ``get_executor(**as_executor_kwargs())``
     reproduces exactly the measured executor; ``cols_per_block_resolved``
-    is the block width the schedule actually used."""
+    is the block width the schedule actually used. ``n_devices`` is None
+    for the single-device executor and a device count for the sharded
+    one (sharded candidates enter the sweep whenever the host exposes a
+    multi-device mesh)."""
     nnz_per_step: int
     rows_per_window: int
     cols_per_block: Union[int, str, None]
@@ -426,13 +677,14 @@ class TunedConfig:
     measured_us: float
     utilization: float
     cols_per_block_resolved: int = 0
+    n_devices: Optional[int] = None
 
     def as_executor_kwargs(self) -> dict:
         return dict(nnz_per_step=self.nnz_per_step,
                     rows_per_window=self.rows_per_window,
                     cols_per_block=self.cols_per_block,
                     window_nnz=self.window_nnz, ktile=self.ktile,
-                    routing=self.routing)
+                    routing=self.routing, n_devices=self.n_devices)
 
 
 def _time_call(fn: Callable[[], jax.Array], iters: int, warmup: int) -> float:
@@ -467,6 +719,34 @@ def default_sweep(a: fmt.COO, rows_per_window=(32, 64)) -> list:
     return cand
 
 
+def sharded_device_counts(max_devices: Optional[int] = None) -> tuple:
+    """Device counts the sharded sweep covers: powers of two in
+    (1, available], capped at ``max_devices``. Empty on a single-device
+    host — the sweep then degenerates to the single-device candidates."""
+    n_avail = len(jax.devices())
+    cap = n_avail if max_devices is None else min(max_devices, n_avail)
+    counts = []
+    d = 2
+    while d <= cap:
+        counts.append(d)
+        d *= 2
+    return tuple(counts)
+
+
+def sharded_sweep(a: fmt.COO, device_counts: tuple,
+                  rows_per_window=(32, 64)) -> list:
+    """Sharded-executor candidates: the gather path at each device count
+    (one-hot shards identically but is never competitive off-TPU, and on
+    TPU the kernel sweep covers it)."""
+    cand = []
+    for d in device_counts:
+        for r in rows_per_window:
+            cand.append(dict(nnz_per_step=256, rows_per_window=r,
+                             cols_per_block=None, window_nnz=None,
+                             routing=GATHER, n_devices=d))
+    return cand
+
+
 def density_matched_k(a: fmt.COO, rows_per_window: int,
                       cols_per_block: int) -> int:
     """nnz_per_step for a capped one-hot schedule: the expected non-zero
@@ -482,28 +762,40 @@ def density_matched_k(a: fmt.COO, rows_per_window: int,
 def autotune(a: fmt.COO, b_shape: Tuple[int, ...], *,
              sweep: Optional[list] = None, ktile: int = 128,
              iters: int = 3, warmup: int = 1, seed: int = 0,
-             include_onehot: bool = False) -> TunedConfig:
+             include_onehot: bool = False,
+             max_devices: Optional[int] = None) -> TunedConfig:
     """Measure every sweep point's jitted executor on a random dense operand
     of ``b_shape`` and cache the fastest config by graph fingerprint.
 
     ``b_shape`` is (n, kdim) (only kdim matters for the cache key). One-hot
     candidates are skipped off-TPU unless ``include_onehot`` — the scan
-    emulation is measurable but never competitive on CPU.
+    emulation is measurable but never competitive on CPU. When the host
+    exposes more than one device the default sweep additionally measures
+    the **sharded** executor at power-of-two device counts (capped by
+    ``max_devices``); explicit ``sweep`` candidates may carry their own
+    ``n_devices``.
     """
     kdim = int(b_shape[-1])
     fp = graph_fingerprint(a)
     sweep_key = None if sweep is None else tuple(
         tuple(sorted(c.items())) for c in sweep)
-    key = (fp, kdim, ktile, include_onehot, iters, warmup, sweep_key)
+    key = (fp, kdim, ktile, include_onehot, iters, warmup, sweep_key,
+           max_devices, len(jax.devices()))
     hit = _AUTOTUNE_CACHE.get(key)
     if hit is not None:
         return hit
+
+    if sweep is None:
+        sweep_eff = default_sweep(a) + sharded_sweep(
+            a, sharded_device_counts(max_devices))
+    else:
+        sweep_eff = sweep
 
     rng = np.random.default_rng(seed)
     b = jnp.asarray(rng.standard_normal((a.shape[1], kdim)).astype(np.float32))
     best: Optional[TunedConfig] = None
     on_tpu = jax.default_backend() == "tpu"
-    for cand in (sweep if sweep is not None else default_sweep(a)):
+    for cand in sweep_eff:
         if cand["routing"] == ONEHOT and not (on_tpu or include_onehot):
             continue
         ex = get_executor(a, ktile=ktile, **cand)
@@ -515,7 +807,8 @@ def autotune(a: fmt.COO, b_shape: Tuple[int, ...], *,
             window_nnz=cand["window_nnz"], ktile=ktile,
             routing=ex.routing, measured_us=us,
             utilization=ex.sched.utilization,
-            cols_per_block_resolved=ex.sched.cols_per_block)
+            cols_per_block_resolved=ex.sched.cols_per_block,
+            n_devices=cand.get("n_devices"))
         if best is None or cfg.measured_us < best.measured_us:
             best = cfg
     if best is None:
@@ -528,7 +821,7 @@ def autotune(a: fmt.COO, b_shape: Tuple[int, ...], *,
 
 
 def autotuned_executor(a: fmt.COO, b_shape: Tuple[int, ...],
-                       **kw) -> ScheduleExecutor:
+                       **kw) -> _ExecutorBase:
     """The executor for the measured-fastest configuration (both the tuning
     result and the executor itself are cached)."""
     cfg = autotune(a, b_shape, **kw)

@@ -65,8 +65,9 @@ def make_schedule_spmm(sched: Schedule) -> Callable:
 
 def forward_awb(params: dict, a: fmt.COO, x: jax.Array,
                 sched: Optional[Schedule] = None,
-                executor: Optional["ScheduleExecutor"] = None  # noqa: F821
-                ) -> jax.Array:
+                executor: Optional["_ExecutorBase"] = None,  # noqa: F821
+                n_devices: Optional[int] = None,
+                mesh=None) -> jax.Array:
     """Forward pass through the converged AWB configuration.
 
     Runs on a ``core.executor.ScheduleExecutor`` — device-resident schedule
@@ -74,12 +75,20 @@ def forward_awb(params: dict, a: fmt.COO, x: jax.Array,
     fingerprint — so repeated inference on a fixed graph pays zero schedule
     rebuild/transfer cost (DESIGN.md §3). Pass ``sched`` to pin a
     caller-built schedule, or ``executor`` to bring your own.
+
+    ``n_devices`` (or a 1-D ``mesh``) runs the layers' SpMMs on the
+    **sharded** executor instead: per-device step shards under shard_map
+    with a psum merge, cached by ``(graph fingerprint, mesh)`` (DESIGN.md
+    §4).
     """
     from repro.core import executor as _exe
 
     if executor is None:
-        executor = (_exe.get_executor(a) if sched is None
-                    else _exe.executor_for_schedule(sched))
+        if sched is None:
+            executor = _exe.get_executor(a, n_devices=n_devices, mesh=mesh)
+        else:
+            executor = _exe.executor_for_schedule(sched, n_devices=n_devices,
+                                                  mesh=mesh)
     return executor.forward(params, x)
 
 

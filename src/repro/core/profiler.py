@@ -13,6 +13,7 @@ import numpy as np
 
 from repro.core import csc as fmt
 from repro.core.schedule import Schedule
+from repro.sharding import schedule_shard
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,8 +75,27 @@ def schedule_report(s: Schedule) -> dict:
 def device_loads(s: Schedule, n_devices: int) -> np.ndarray:
     """Steps per device under the schedule's contiguous split (steps are
     equal work, so this is the device-level load vector)."""
-    ranges = s.device_step_ranges(n_devices)
-    return (ranges[:, 1] - ranges[:, 0]).astype(np.float64)
+    return schedule_shard.shard_step_counts(s.n_steps,
+                                            n_devices).astype(np.float64)
+
+
+def shard_report(s: Schedule, n_devices: int) -> list:
+    """Per-device shard stats under the contiguous step split: steps, true
+    nnz, issued slots, and slot utilization — the distributed analogue of
+    ``schedule_report``. Steps and nnz sum to the full schedule's."""
+    steps = schedule_shard.shard_step_counts(s.n_steps, n_devices)
+    nnz = schedule_shard.shard_nnz(s, n_devices)
+    out = []
+    for d in range(n_devices):
+        issued = int(steps[d]) * s.nnz_per_step
+        out.append({
+            "device": d,
+            "steps": int(steps[d]),
+            "nnz": int(nnz[d]),
+            "issued_slots": issued,
+            "utilization": int(nnz[d]) / max(1, issued),
+        })
+    return out
 
 
 def naive_device_loads(a: fmt.COO, n_devices: int) -> np.ndarray:

@@ -96,9 +96,12 @@ class Schedule:
 
     def device_step_ranges(self, n_devices: int) -> np.ndarray:
         """Split steps contiguously across devices; since steps are
-        equal-work, equal step counts == balanced devices."""
-        edges = np.linspace(0, self.n_steps, n_devices + 1).round().astype(np.int64)
-        return np.stack([edges[:-1], edges[1:]], axis=1)
+        equal-work, equal step counts == balanced devices. Delegates to the
+        shared splitter every shard consumer uses
+        (``sharding.schedule_shard.split_step_ranges``)."""
+        from repro.sharding.schedule_shard import split_step_ranges
+
+        return split_step_ranges(self.n_steps, n_devices)
 
 
 AUTO_COLS_PER_BLOCK = 256

@@ -1,0 +1,120 @@
+"""Schedule sharding — split a converged ``Schedule`` across a device mesh.
+
+AWB-GCN's balancing premise is that equal-work distribution across a large
+PE array is what unlocks utilization (§IV); a ``Schedule`` already packs
+non-zeros into equal-work steps, so the multi-device story is a *contiguous
+step split*: equal step counts are balanced device shards by construction.
+This module is the single owner of that split — ``split_step_ranges`` is
+the helper every caller (``Schedule.device_step_ranges``, the profiler, the
+sharded executor, benchmarks) must use instead of re-slicing ranges.
+
+``shard_schedule`` materializes the split as **stacked step-major arrays**
+``[n_devices, steps_per_shard, ...]``, padded so every shard carries the
+same step count (padding steps have ``val == 0`` and in-range indices, so
+they accumulate nothing — the same contract the kernel relies on). The
+stacked layout is exactly what ``shard_map`` over the device axis consumes:
+one ``device_put`` with a ``P('dev', ...)`` sharding uploads each shard to
+its own device.
+
+Evil-row chunks may land on different devices than their sibling chunks
+(and a row window can straddle a shard boundary); every device therefore
+produces a *partial* output and the executor merges partials with a
+``psum`` — the distributed form of the Labor-PE adder tree.
+
+No jax imports here: splitting and stacking are host-side numpy, usable by
+the profiler and tests without touching device state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+if TYPE_CHECKING:  # pragma: no cover - typing only, avoids an import cycle
+    from repro.core.schedule import Schedule
+
+
+def split_step_ranges(n_steps: int, n_devices: int) -> np.ndarray:
+    """Contiguous ``[n_devices, 2]`` (start, end) step ranges.
+
+    Steps are equal work, so near-equal counts (max-min ≤ 1) are balanced
+    shards. ``n_devices > n_steps`` yields empty ranges for the surplus
+    devices — legal, and the stacked form pads them with no-op steps.
+    """
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    edges = np.linspace(0, n_steps, n_devices + 1).round().astype(np.int64)
+    return np.stack([edges[:-1], edges[1:]], axis=1)
+
+
+def shard_step_counts(n_steps: int, n_devices: int) -> np.ndarray:
+    """Steps per device under the contiguous split — the device-level load
+    vector (max-min ≤ 1 by construction)."""
+    ranges = split_step_ranges(n_steps, n_devices)
+    return ranges[:, 1] - ranges[:, 0]
+
+
+def shard_nnz(sched: "Schedule", n_devices: int) -> np.ndarray:
+    """True non-zeros per device shard (slots with ``val != 0`` — explicit
+    stored zeros are indistinguishable from padding slots and count as
+    padding, matching the work they cost)."""
+    per_step = (sched.val.reshape(sched.n_steps, -1) != 0).sum(axis=1)
+    cum = np.concatenate([[0], np.cumsum(per_step)])
+    ranges = split_step_ranges(sched.n_steps, n_devices)
+    return (cum[ranges[:, 1]] - cum[ranges[:, 0]]).astype(np.int64)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleShards:
+    """One schedule split into stacked, equal-length per-device step shards.
+
+    Arrays are host-side numpy in the ``[n_devices, steps_per_shard, ...]``
+    layout ``shard_map`` consumes; ``ranges[d]`` records which global steps
+    device ``d`` owns (its trailing ``steps_per_shard - (hi - lo)`` steps
+    are padding: ``val == 0`` everywhere, window/block 0).
+    """
+
+    ranges: np.ndarray         # [D, 2] global (start, end) step ranges
+    steps_per_shard: int       # padded per-device step count (>= 1)
+    val: np.ndarray            # [D, S, K] float32
+    lrow: np.ndarray           # [D, S, K] int32
+    lcol: np.ndarray           # [D, S, K] int32
+    win: np.ndarray            # [D, S] int32
+    cblk: np.ndarray           # [D, S] int32
+    nnz: np.ndarray            # [D] true non-zeros per shard
+
+    @property
+    def n_devices(self) -> int:
+        return int(self.ranges.shape[0])
+
+
+def shard_schedule(sched: "Schedule", n_devices: int) -> ScheduleShards:
+    """Split ``sched`` into ``n_devices`` stacked step shards."""
+    ranges = split_step_ranges(sched.n_steps, n_devices)
+    sizes = ranges[:, 1] - ranges[:, 0]
+    s_max = max(1, int(sizes.max()))
+    k = sched.nnz_per_step
+
+    val = np.zeros((n_devices, s_max, k), np.float32)
+    lrow = np.zeros((n_devices, s_max, k), np.int32)
+    lcol = np.zeros((n_devices, s_max, k), np.int32)
+    win = np.zeros((n_devices, s_max), np.int32)
+    cblk = np.zeros((n_devices, s_max), np.int32)
+
+    sval = sched.val.reshape(sched.n_steps, k)
+    slrow = sched.local_row.reshape(sched.n_steps, k)
+    slcol = sched.local_col.reshape(sched.n_steps, k)
+    for d, (lo, hi) in enumerate(ranges):
+        s = int(hi - lo)
+        if s == 0:
+            continue
+        val[d, :s] = sval[lo:hi]
+        lrow[d, :s] = slrow[lo:hi]
+        lcol[d, :s] = slcol[lo:hi]
+        win[d, :s] = sched.win_id[lo:hi]
+        cblk[d, :s] = sched.col_block[lo:hi]
+
+    return ScheduleShards(
+        ranges=ranges, steps_per_shard=s_max, val=val, lrow=lrow, lcol=lcol,
+        win=win, cblk=cblk, nnz=shard_nnz(sched, n_devices))

@@ -1,0 +1,86 @@
+"""Shard-splitting properties (hypothesis): the contiguous step split
+partitions all steps exactly once for arbitrary (n_steps, n_devices) —
+including n_devices > n_steps — and shard work stays within one step
+budget of the mean.
+
+Property-based module: skipped wholesale when hypothesis is absent, like
+the other property suites."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import schedule
+from repro.graphs import synth
+from repro.sharding import schedule_shard
+
+
+@settings(max_examples=60, deadline=None)
+@given(n_steps=st.integers(0, 5000), n_devices=st.integers(1, 128))
+def test_split_partitions_steps_exactly_once(n_steps, n_devices):
+    ranges = schedule_shard.split_step_ranges(n_steps, n_devices)
+    assert ranges.shape == (n_devices, 2)
+    # contiguous cover of [0, n_steps): starts at 0, ends at n_steps, each
+    # shard begins where the previous ended, no shard runs backwards
+    assert ranges[0, 0] == 0 and ranges[-1, 1] == n_steps
+    np.testing.assert_array_equal(ranges[1:, 0], ranges[:-1, 1])
+    sizes = ranges[:, 1] - ranges[:, 0]
+    assert (sizes >= 0).all()         # n_devices > n_steps → empty shards
+    assert int(sizes.sum()) == n_steps
+    # equal-work split: step counts within one of each other
+    assert int(sizes.max() - sizes.min()) <= (1 if n_steps else 0)
+    np.testing.assert_array_equal(
+        sizes, schedule_shard.shard_step_counts(n_steps, n_devices))
+
+
+@st.composite
+def sched_case(draw):
+    n = draw(st.integers(24, 150))
+    alpha = draw(st.sampled_from([0.6, 0.9, 1.2]))
+    density = draw(st.sampled_from([0.02, 0.05, 0.12]))
+    seed = draw(st.integers(0, 2**16))
+    k = draw(st.sampled_from([8, 16, 33]))
+    r = draw(st.sampled_from([4, 16]))
+    d = draw(st.integers(1, 48))
+    return n, density, alpha, seed, k, r, d
+
+
+@settings(max_examples=25, deadline=None)
+@given(sched_case())
+def test_shard_work_within_one_step_budget_of_mean(case):
+    """Steps are the schedule's equal-work unit, so per-shard issued work
+    (steps × nnz_per_step slots) stays within one step budget of the mean
+    — the device-level form of the paper's equal-work distribution — and
+    the per-shard true nnz partitions the schedule's nnz exactly."""
+    n, density, alpha, seed, k, r, d = case
+    a = synth.power_law_adjacency(n, density, alpha, seed=seed)
+    s = schedule.build_balanced_schedule(a, nnz_per_step=k,
+                                         rows_per_window=r)
+    counts = schedule_shard.shard_step_counts(s.n_steps, d)
+    issued = counts * s.nnz_per_step
+    mean = issued.mean()
+    assert (np.abs(issued - mean) <= s.nnz_per_step).all()
+    nnz = schedule_shard.shard_nnz(s, d)
+    assert int(nnz.sum()) == s.nnz
+    assert (nnz >= 0).all() and (nnz <= issued).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(sched_case())
+def test_stacked_shards_conserve_slots(case):
+    """The stacked [D, S, K] form re-packs every real slot exactly once:
+    concatenating the shards' in-range steps reproduces the schedule's
+    step-major arrays, and padding steps are all-zero."""
+    n, density, alpha, seed, k, r, d = case
+    a = synth.power_law_adjacency(n, density, alpha, seed=seed)
+    s = schedule.build_balanced_schedule(a, nnz_per_step=k,
+                                         rows_per_window=r)
+    shards = schedule_shard.shard_schedule(s, d)
+    sizes = shards.ranges[:, 1] - shards.ranges[:, 0]
+    val = np.concatenate([shards.val[i, :sizes[i]] for i in range(d)])
+    np.testing.assert_array_equal(val.reshape(-1),
+                                  s.val)
+    for i in range(d):
+        assert not shards.val[i, sizes[i]:].any()
