@@ -25,7 +25,8 @@ def main() -> None:
 
     from benchmarks import (convergence, latency, moe_imbalance, order_ops,
                             roofline_table, scaling, schedule_tuning,
-                            schedule_util, sharded_spmm, utilization)
+                            schedule_util, serving, sharded_spmm,
+                            utilization)
 
     suites = {
         "order_ops": order_ops.run,                    # Table II
@@ -36,6 +37,7 @@ def main() -> None:
         "schedule_util": schedule_util.run,            # TPU Fig-14 analogue
         "schedule_tuning": schedule_tuning.run,        # kernel-param sweep
         "sharded_spmm": sharded_spmm.run,              # multi-device executor
+        "serving": serving.run,                        # store + batching
         "moe_imbalance": moe_imbalance.run,            # beyond-paper (EP)
         "roofline": roofline_table.run,                # §Roofline
     }
@@ -64,13 +66,15 @@ def main() -> None:
             "rows": [{"name": name, "us_per_call": round(float(us), 1),
                       "derived": derived} for name, us, derived in rows],
         }
-        # per-device-count latency of the sharded executor as its own
-        # section, so the perf trajectory across PRs tracks device scaling
-        # separately from the single-device rows
-        sharded = [r for r in payload["rows"]
-                   if r["name"].startswith("sharded_spmm/")]
-        if sharded:
-            payload["sharded_spmm"] = sharded
+        # per-device-count latency of the sharded executor and the serving
+        # engine's cold/warm-start numbers as their own sections, so the
+        # perf trajectory across PRs tracks device scaling and store-hit
+        # latency separately from the single-device rows
+        for section in ("sharded_spmm", "serving"):
+            sub = [r for r in payload["rows"]
+                   if r["name"].startswith(f"{section}/")]
+            if sub:
+                payload[section] = sub
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
             f.write("\n")

@@ -4,8 +4,9 @@
    rows_per_window R) and rank by issued MACs (the TPU analogue of the
    paper's PE-count/TQ-depth design-space exploration, Fig. 18), with the
    VMEM working set as the feasibility constraint.
-2. Measured autotune-and-cache — ``core.executor.autotune`` times the
-   jitted device-resident executor per candidate and caches the fastest
+2. Measured autotune-and-cache — ``tuning.runner.autotune`` prunes the
+   candidate space with the paper's cycle model, times the jitted
+   device-resident executor per survivor, and caches the fastest
    configuration by graph fingerprint (the paper's "converge, then reuse").
 
 Plus the routing-path comparison this PR's kernel changes are about: the
@@ -24,6 +25,7 @@ import numpy as np
 from benchmarks import common
 from repro.core import executor as exe
 from repro.core import schedule
+from repro.tuning import runner, space
 
 KTILE = 128
 VMEM_BUDGET = 8 * 2**20  # half of a v5e core's 16 MiB VMEM
@@ -50,7 +52,7 @@ def _truncate(sched: schedule.Schedule, n_steps: int) -> schedule.Schedule:
 
 def _time_spmm(ex: exe.ScheduleExecutor, b, iters: int = 3,
                warmup: int = 1) -> float:
-    return exe._time_call(lambda: ex.spmm(b), iters, warmup)
+    return runner.time_call(lambda: ex.spmm(b), iters, warmup)
 
 
 def run_hillclimb() -> list:
@@ -89,17 +91,21 @@ def run_autotune() -> list:
     for name in ("cora", "citeseer", "pubmed"):
         ds = common.dataset(name)
         t0 = time.time()
-        cfg = exe.autotune(ds.adj, (ds.num_nodes, BENCH_KDIM))
+        cfg = runner.autotune(ds.adj, (ds.num_nodes, BENCH_KDIM))
         tune_s = time.time() - t0
         t0 = time.time()
-        exe.autotune(ds.adj, (ds.num_nodes, BENCH_KDIM))  # cache hit
+        runner.autotune(ds.adj, (ds.num_nodes, BENCH_KDIM))  # cache hit
         hit_s = time.time() - t0
+        bf16 = ("?" if cfg.bf16_max_err is None
+                else f"{cfg.bf16_max_err:.1e}")
         print(f"{name:10s} K={cfg.nnz_per_step:3d} R={cfg.rows_per_window:3d}"
-              f" routing={cfg.routing:6s} {cfg.measured_us:9.0f}us/spmm "
-              f"(tuned in {tune_s:.2f}s, cache hit {hit_s * 1e6:.0f}us)")
+              f" ktile={cfg.ktile} routing={cfg.routing:6s} "
+              f"{cfg.measured_us:9.0f}us/spmm (tuned in {tune_s:.2f}s, "
+              f"cache hit {hit_s * 1e6:.0f}us, bf16 max-err {bf16})")
         rows.append((f"autotune/{name}", cfg.measured_us,
                      f"K={cfg.nnz_per_step};R={cfg.rows_per_window};"
-                     f"routing={cfg.routing};tune_s={tune_s:.2f}"))
+                     f"ktile={cfg.ktile};routing={cfg.routing};"
+                     f"tune_s={tune_s:.2f};bf16_err={bf16}"))
     return rows
 
 
@@ -141,7 +147,8 @@ def run_routing() -> list:
 
     # capped one-hot: auto cols_per_block + density-matched K (the same
     # K-selection the autotuner's sweep uses)
-    k_blk = exe.density_matched_k(ds.adj, 64, schedule.auto_cols_per_block(n))
+    k_blk = space.density_matched_k(ds.adj, 64,
+                                    schedule.auto_cols_per_block(n))
     capped = schedule.build_balanced_schedule(ds.adj, k_blk, 64,
                                               cols_per_block="auto")
     cap_sample = min(4096, capped.n_steps)

@@ -30,16 +30,16 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(n_dev)d"
 import sys
 sys.path.insert(0, %(src)r)
 import numpy as np, jax, jax.numpy as jnp
-from repro.core import executor as exe
 from repro.graphs import synth
+from repro.tuning import registry, runner
 
 a = synth.power_law_adjacency(%(n)d, %(density)g, %(alpha)g, seed=%(seed)d)
 rng = np.random.default_rng(0)
 b = jnp.asarray(rng.standard_normal((%(n)d, %(kdim)d)).astype(np.float32))
 base_us = None
 for d in %(counts)r:
-    ex = exe.get_executor(a, n_devices=d)
-    us = exe._time_call(lambda: ex.spmm(b), iters=3, warmup=2)
+    ex = registry.get_executor(a, n_devices=d)
+    us = runner.time_call(lambda: ex.spmm(b), iters=3, warmup=2)
     if base_us is None:
         base_us = us
     print("ROW dev%%d %%f n_devices=%%d;nnz=%%d;speedup_vs_1dev=%%.2fx"

@@ -1,16 +1,23 @@
 """AWB-GCN core: the paper's contribution as composable JAX modules."""
 from repro.core import csc  # noqa: F401
 from repro.core import spmm  # noqa: F401
-from repro.core.executor import (  # noqa: F401
-    ScheduleExecutor,
-    autotune,
-    autotuned_executor,
-    get_executor,
-    graph_fingerprint,
-)
+from repro.core.executor import ScheduleExecutor  # noqa: F401
 from repro.core.schedule import (  # noqa: F401
     Schedule,
     build_balanced_schedule,
     build_naive_schedule,
     execute_schedule_jnp,
 )
+from repro.lazyexports import lazy_exports
+
+# caching/tuning entry points live in repro.tuning now; resolved lazily
+# (PEP 562) so `import repro.core` from inside the tuning package itself
+# (registry → csc) never re-enters a partially-initialized module.
+_TUNING_EXPORTS = {
+    "autotune": "repro.tuning.runner",
+    "autotuned_executor": "repro.tuning.runner",
+    "get_executor": "repro.tuning.registry",
+    "graph_fingerprint": "repro.tuning.registry",
+}
+
+__getattr__, __dir__ = lazy_exports(__name__, _TUNING_EXPORTS, globals())

@@ -1,26 +1,23 @@
 """ScheduleExecutor — the converged AWB configuration as a first-class,
-cached, device-resident artifact (DESIGN.md §3).
+device-resident artifact (DESIGN.md §3).
 
 AWB-GCN's engine "converges, then reuses the ideal configuration" (§IV):
 the balancing effort is paid once per graph, and every subsequent round and
-layer replays the converged plan. The seed realization re-paid pieces of
-that cost on every call — ``spmm_balanced`` re-converted numpy schedule
-arrays to jnp per invocation, ``make_spmm_fn`` rebuilt both schedules per
-call site, and the routing one-hots spanned the whole matrix width. This
-module closes the loop:
+layer replays the converged plan. This module is purely the **execution
+machinery** for that plan:
 
 * ``ScheduleExecutor`` uploads a ``Schedule``'s arrays to the device exactly
   once at construction and exposes jitted closures: ``spmm(b) = A @ b``
   (fused-gather VPU routing or step-scanned one-hot MXU routing, chosen by
   ``select_routing``'s cost model) and a jitted whole-GCN ``forward``.
-* ``get_executor(a, ...)`` / ``get_schedule(a, ...)`` cache by **graph
-  fingerprint** (shape, nnz, content hash of indices+values): repeated calls
-  on the same graph hit the cache and perform zero schedule rebuilds and
-  zero host→device transfers.
-* ``autotune(a, b_shape)`` sweeps (nnz_per_step, rows_per_window,
-  cols_per_block, ktile), measures the jitted executor on this host, picks
-  the fastest configuration, and caches it alongside the schedule — the
-  paper's autotuner loop with wall-clock as the objective.
+* ``ShardedScheduleExecutor`` runs the same plan across a 1-D device mesh
+  (per-device step shards under ``shard_map``, psum merge — DESIGN.md §4).
+
+Every caching/search concern that used to live here — fingerprint-keyed
+schedule/executor caches, the measured autotune sweep, ``TunedConfig`` —
+moved to the ``repro.tuning`` package (``registry``, ``runner``, ``space``,
+``store``); this module lazily re-exports those names so existing call
+sites (``executor.get_executor``, ``executor.autotune``, …) keep working.
 
 Routing paths
 -------------
@@ -36,14 +33,15 @@ Routing paths
               kept exactly kernel-shaped so it doubles as the measurable
               stand-in for the dense-routing Pallas path in benchmarks and
               equivalence tests.
+
+Both executors accept ``bf16_accumulate=True`` to run the routing bodies'
+multiplies and accumulations in bfloat16 (a sweep axis — the autotuner
+attaches an f32-vs-bf16 max-error report to the winning ``TunedConfig``).
 """
 from __future__ import annotations
 
-import dataclasses
-import hashlib
-import time
 from collections import OrderedDict
-from typing import Callable, Optional, Tuple, Union
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -52,10 +50,8 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.core import csc as fmt
-from repro.core.schedule import (Schedule, auto_cols_per_block,
-                                 build_balanced_schedule,
-                                 build_naive_schedule)
+from repro.core.schedule import Schedule
+from repro.lazyexports import lazy_exports
 from repro.sharding.schedule_shard import shard_schedule
 
 GATHER = "gather"
@@ -89,27 +85,6 @@ def select_routing(k: int, cb: int, r: int, ktile: int = 128) -> str:
     return ONEHOT if cost[ONEHOT] <= cost[GATHER] else GATHER
 
 
-def graph_fingerprint(a: fmt.COO) -> str:
-    """Content hash of a sparse operand — the schedule-cache key.
-
-    Hashes shape, true nnz, and the index/value bytes of real (non-PAD)
-    entries, so two COOs describing the same matrix — padded or not — map
-    to the same converged configuration.
-    """
-    row = np.asarray(a.row)
-    col = np.asarray(a.col)
-    val = np.asarray(a.val)
-    if (row == fmt.PAD_IDX).any():
-        keep = row != fmt.PAD_IDX
-        row, col, val = row[keep], col[keep], val[keep]
-    h = hashlib.blake2b(digest_size=16)
-    h.update(repr((a.shape, int(row.shape[0]))).encode())
-    h.update(row.tobytes())
-    h.update(col.tobytes())
-    h.update(val.tobytes())
-    return h.hexdigest()
-
-
 # step-major device copies of schedule arrays, shared between
 # ScheduleExecutor and the Pallas kernel wrapper so one schedule is
 # uploaded once no matter who consumes it. Identity-keyed, bounded LRU.
@@ -141,6 +116,16 @@ def device_step_arrays(sched: Schedule) -> dict:
     return arrs
 
 
+def release_device_steps(sched: Schedule) -> None:
+    """Drop the memoized device copy of one schedule's step arrays.
+
+    The serving engine's eviction and ``tuning.registry.release_graph``
+    call this so a one-hot executor's uploads don't outlive their owner —
+    without it the identity-keyed LRU above keeps the arrays resident
+    until 32 unrelated schedules displace them."""
+    _DEVICE_STEPS.pop(id(sched), None)
+
+
 def _gather_slots(sched: Schedule):
     """Per-slot flat arrays of the fused-gather routing: global B-row
     ``gcol``, output row ``tgt`` (``row_map ∘ slot`` precomposed: the
@@ -166,6 +151,11 @@ class _ExecutorBase:
 
     sched: Schedule
     routing: str
+    bf16_accumulate: bool = False
+
+    @property
+    def _acc_dtype(self):
+        return jnp.bfloat16 if self.bf16_accumulate else jnp.float32
 
     def spmm(self, b: jax.Array) -> jax.Array:
         """C = A @ b through the device-resident converged schedule."""
@@ -206,14 +196,17 @@ class ScheduleExecutor(_ExecutorBase):
 
     Construction uploads every schedule array to the default device once;
     the jitted closures capture those arrays, so repeated ``spmm``/
-    ``forward`` calls move only the dense operand.
+    ``forward`` calls move only the dense operand. ``device_bytes`` reports
+    the resident footprint — what the serving engine's LRU budget meters.
     """
 
     def __init__(self, sched: Schedule, *, ktile: int = 128,
                  routing: Optional[str] = None,
+                 bf16_accumulate: bool = False,
                  slot_chunk: int = 1 << 18):
         self.sched = sched
         self.ktile = ktile
+        self.bf16_accumulate = bf16_accumulate
         k = sched.nnz_per_step
         r = sched.rows_per_window
         cb = sched.cols_per_block
@@ -239,10 +232,14 @@ class ScheduleExecutor(_ExecutorBase):
             self._gcol = _chunked(gcol, 0)
             self._tgt = _chunked(tgt, 0)
             self._val = _chunked(val, 0.0)
+            self.device_bytes = int(self._gcol.nbytes + self._tgt.nbytes
+                                    + self._val.nbytes)
         else:
             # step-major arrays (shared with the Pallas kernel wrapper —
             # one upload per schedule no matter who consumes it)
             self._steps = device_step_arrays(sched)
+            self.device_bytes = int(sum(v.nbytes
+                                        for v in self._steps.values()))
 
         self._spmm_impl = (self._gather_impl if self.routing == GATHER
                            else self._onehot_impl)
@@ -257,18 +254,20 @@ class ScheduleExecutor(_ExecutorBase):
         stream so the [chunk, kdim] intermediate stays bounded on
         million-edge graphs."""
         m, _ = self.sched.shape
-        kdim = b.shape[1]
-        bf = b.astype(jnp.float32)
-        out = jnp.zeros((m, kdim), jnp.float32)
+        kdim = b.shape[-1]
+        acc = self._acc_dtype
+        bf = b.astype(acc)
+        out = jnp.zeros((m, kdim), acc)
 
         if self._n_chunks == 1:
-            g = jnp.take(bf, self._gcol[0], axis=0) * self._val[0][:, None]
+            g = (jnp.take(bf, self._gcol[0], axis=0)
+                 * self._val[0].astype(acc)[:, None])
             out = out.at[self._tgt[0]].add(g)
         else:
-            def body(i, acc):
+            def body(i, a_):
                 g = (jnp.take(bf, self._gcol[i], axis=0)
-                     * self._val[i][:, None])
-                return acc.at[self._tgt[i]].add(g)
+                     * self._val[i].astype(acc)[:, None])
+                return a_.at[self._tgt[i]].add(g)
             out = jax.lax.fori_loop(0, self._n_chunks, body, out)
         return out.astype(b.dtype)
 
@@ -280,23 +279,24 @@ class ScheduleExecutor(_ExecutorBase):
         k = self.sched.nnz_per_step
         r = self.sched.rows_per_window
         cb = self.sched.cols_per_block
-        kdim = b.shape[1]
+        kdim = b.shape[-1]
+        acc = self._acc_dtype
         ncb = -(-n // cb)
-        bp = jnp.pad(b.astype(jnp.float32), ((0, ncb * cb - n), (0, 0)))
+        bp = jnp.pad(b.astype(acc), ((0, ncb * cb - n), (0, 0)))
         bp = bp.reshape(ncb, cb, kdim)
 
         def step(out_perm, s):
             win, cblk, val, lrow, lcol = s
             bb = bp[cblk]                                   # [CB, kdim]
             gather = (lcol[:, None] == jnp.arange(cb)[None, :]
-                      ).astype(jnp.float32)                 # [K, CB]
-            contrib = (gather @ bb) * val[:, None]          # [K, kdim]
+                      ).astype(acc)                         # [K, CB]
+            contrib = (gather @ bb) * val.astype(acc)[:, None]  # [K, kdim]
             scatter = (lrow[:, None] == jnp.arange(r)[None, :]
-                       ).astype(jnp.float32)                # [K, R]
+                       ).astype(acc)                        # [K, R]
             out_perm = out_perm.at[win].add(scatter.T @ contrib)
             return out_perm, None
 
-        out_perm = jnp.zeros((self.sched.n_windows, r, kdim), jnp.float32)
+        out_perm = jnp.zeros((self.sched.n_windows, r, kdim), acc)
         out_perm, _ = jax.lax.scan(
             step, out_perm,
             (self._steps["win"], self._steps["cblk"], self._steps["val"],
@@ -306,7 +306,7 @@ class ScheduleExecutor(_ExecutorBase):
         valid = rm >= 0
         contrib = jnp.where(valid[:, None],
                             out_perm.reshape(-1, kdim), 0.0)
-        out = jnp.zeros((m, kdim), jnp.float32).at[
+        out = jnp.zeros((m, kdim), acc).at[
             jnp.where(valid, rm, 0)].add(contrib)
         return out.astype(b.dtype)
 
@@ -333,7 +333,9 @@ class ShardedScheduleExecutor(_ExecutorBase):
 
     def __init__(self, sched: Schedule, *, n_devices: Optional[int] = None,
                  mesh: Optional[Mesh] = None, ktile: int = 128,
-                 routing: Optional[str] = None, slot_chunk: int = 1 << 18):
+                 routing: Optional[str] = None,
+                 bf16_accumulate: bool = False,
+                 slot_chunk: int = 1 << 18):
         if mesh is None:
             devs = jax.devices()
             if n_devices is None:
@@ -358,6 +360,7 @@ class ShardedScheduleExecutor(_ExecutorBase):
         self.n_devices = n_devices
         self.sched = sched
         self.ktile = ktile
+        self.bf16_accumulate = bf16_accumulate
         k = sched.nnz_per_step
         r = sched.rows_per_window
         cb = sched.cols_per_block
@@ -392,6 +395,8 @@ class ShardedScheduleExecutor(_ExecutorBase):
             self._gcol = stack(gcol, 0)
             self._tgt = stack(tgt, 0)
             self._val = stack(val, 0.0)
+            self.device_bytes = int(self._gcol.nbytes + self._tgt.nbytes
+                                    + self._val.nbytes)
         else:
             self._steps = {
                 "val": put(shards.val), "lrow": put(shards.lrow),
@@ -401,6 +406,8 @@ class ShardedScheduleExecutor(_ExecutorBase):
                 "row_map": jax.device_put(jnp.asarray(sched.row_map),
                                           NamedSharding(mesh, P())),
             }
+            self.device_bytes = int(sum(v.nbytes
+                                        for v in self._steps.values()))
 
         self._spmm_impl = (self._sharded_gather_impl
                            if self.routing == GATHER
@@ -421,23 +428,25 @@ class ShardedScheduleExecutor(_ExecutorBase):
         """Fused-gather routing per device shard + psum merge."""
         m, _ = self.sched.shape
         axis = self.axis
+        acc = self._acc_dtype
         n_chunks = self._n_chunks
 
         def body(gcol, tgt, val, bf):
             gcol, tgt, val = gcol[0], tgt[0], val[0]   # [n_chunks, chunk]
-            out = jnp.zeros((m, bf.shape[1]), jnp.float32)
+            out = jnp.zeros((m, bf.shape[1]), acc)
             if n_chunks == 1:
-                g = jnp.take(bf, gcol[0], axis=0) * val[0][:, None]
+                g = jnp.take(bf, gcol[0], axis=0) * val[0].astype(acc)[:, None]
                 out = out.at[tgt[0]].add(g)
             else:
-                def chunk(i, acc):
-                    g = jnp.take(bf, gcol[i], axis=0) * val[i][:, None]
-                    return acc.at[tgt[i]].add(g)
+                def chunk(i, a_):
+                    g = (jnp.take(bf, gcol[i], axis=0)
+                         * val[i].astype(acc)[:, None])
+                    return a_.at[tgt[i]].add(g)
                 out = jax.lax.fori_loop(0, n_chunks, chunk, out)
             return jax.lax.psum(out, axis)
 
         fn = self._shard_map(body, (P(axis), P(axis), P(axis), P()))
-        out = fn(self._gcol, self._tgt, self._val, b.astype(jnp.float32))
+        out = fn(self._gcol, self._tgt, self._val, b.astype(acc))
         return out.astype(b.dtype)
 
     def _sharded_onehot_impl(self, b: jax.Array) -> jax.Array:
@@ -448,6 +457,7 @@ class ShardedScheduleExecutor(_ExecutorBase):
         cb = self.sched.cols_per_block
         n_windows = self.sched.n_windows
         axis = self.axis
+        acc = self._acc_dtype
         ncb = -(-n // cb)
 
         def body(win, cblk, val, lrow, lcol, rm, bf):
@@ -461,14 +471,14 @@ class ShardedScheduleExecutor(_ExecutorBase):
                 w, cblk_s, val_s, lrow_s, lcol_s = s
                 bb = bp[cblk_s]                                 # [CB, kdim]
                 gather = (lcol_s[:, None] == jnp.arange(cb)[None, :]
-                          ).astype(jnp.float32)                 # [K, CB]
-                contrib = (gather @ bb) * val_s[:, None]        # [K, kdim]
+                          ).astype(acc)                         # [K, CB]
+                contrib = (gather @ bb) * val_s.astype(acc)[:, None]
                 scatter = (lrow_s[:, None] == jnp.arange(r)[None, :]
-                           ).astype(jnp.float32)                # [K, R]
+                           ).astype(acc)                        # [K, R]
                 out_perm = out_perm.at[w].add(scatter.T @ contrib)
                 return out_perm, None
 
-            out_perm = jnp.zeros((n_windows, r, kdim), jnp.float32)
+            out_perm = jnp.zeros((n_windows, r, kdim), acc)
             out_perm, _ = jax.lax.scan(step, out_perm,
                                        (win, cblk, val, lrow, lcol))
             # device-local scatter epilogue, then the cross-device adder
@@ -476,7 +486,7 @@ class ShardedScheduleExecutor(_ExecutorBase):
             valid = rm >= 0
             contrib = jnp.where(valid[:, None],
                                 out_perm.reshape(-1, kdim), 0.0)
-            out = jnp.zeros((m, kdim), jnp.float32).at[
+            out = jnp.zeros((m, kdim), acc).at[
                 jnp.where(valid, rm, 0)].add(contrib)
             return jax.lax.psum(out, axis)
 
@@ -484,345 +494,35 @@ class ShardedScheduleExecutor(_ExecutorBase):
             body, (P(axis), P(axis), P(axis), P(axis), P(axis), P(), P()))
         s = self._steps
         out = fn(s["win"], s["cblk"], s["val"], s["lrow"], s["lcol"],
-                 s["row_map"], b.astype(jnp.float32))
+                 s["row_map"], b.astype(acc))
         return out.astype(b.dtype)
 
 
 # ---------------------------------------------------------------------------
-# Caches: fingerprint → schedule / executor / tuned config
+# Delegation: caching, fingerprints, and the autotune loop live in the
+# repro.tuning package now. Resolved lazily (PEP 562) so importing this
+# module never drags the tuning subsystem in — and so there is no import
+# cycle (tuning.registry imports the executor classes above).
 # ---------------------------------------------------------------------------
 
-# fingerprint-keyed caches are deliberately unbounded: a serving system
-# holds a handful of long-lived graphs, and the converged configuration is
-# exactly what must persist. The identity-keyed per-schedule caches are
-# bounded LRUs — workloads that build throwaway schedules per call must
-# not retain every one forever.
-_SCHEDULE_CACHE: dict = {}
-_EXECUTOR_CACHE: dict = {}
-_EXEC_BY_SCHEDULE: "OrderedDict[tuple, ScheduleExecutor]" = OrderedDict()
-_EXEC_BY_SCHEDULE_CAP = 32
-_AUTOTUNE_CACHE: dict = {}
+_TUNING_EXPORTS = {
+    "graph_fingerprint": "repro.tuning.registry",
+    "mesh_fingerprint": "repro.tuning.registry",
+    "clear_caches": "repro.tuning.registry",
+    "get_schedule": "repro.tuning.registry",
+    "get_spmm_schedules": "repro.tuning.registry",
+    "get_executor": "repro.tuning.registry",
+    "executor_for_schedule": "repro.tuning.registry",
+    "release_graph": "repro.tuning.registry",
+    "TunedConfig": "repro.tuning.space",
+    "default_sweep": "repro.tuning.space",
+    "sharded_sweep": "repro.tuning.space",
+    "sharded_device_counts": "repro.tuning.space",
+    "density_matched_k": "repro.tuning.space",
+    "autotune": "repro.tuning.runner",
+    "autotuned_executor": "repro.tuning.runner",
+    "warm_tuned_executor": "repro.tuning.runner",
+    "time_call": "repro.tuning.runner",
+}
 
-
-def clear_caches() -> None:
-    """Drop every cached schedule/executor/tuning result (tests)."""
-    _SCHEDULE_CACHE.clear()
-    _EXECUTOR_CACHE.clear()
-    _EXEC_BY_SCHEDULE.clear()
-    _AUTOTUNE_CACHE.clear()
-    _DEVICE_STEPS.clear()
-
-
-def _sched_key(fp: str, nnz_per_step, rows_per_window, cols_per_block,
-               window_nnz, balanced):
-    return (fp, nnz_per_step, rows_per_window, str(cols_per_block),
-            window_nnz, balanced)
-
-
-def mesh_fingerprint(mesh: Optional[Mesh] = None,
-                     n_devices: Optional[int] = None):
-    """Hashable identity of the requested device mesh — the second half of
-    the ``(graph fingerprint, mesh)`` executor-cache key.
-
-    ``None`` (no mesh, no device count) means the plain single-device
-    ``ScheduleExecutor``; ``n_devices=1`` is a *distinct* entry (a 1-device
-    sharded executor), so single- and multi-device executors coexist in the
-    cache. Device ids are part of the key: the same shape on different
-    devices is a different placement.
-    """
-    if mesh is None and n_devices is None:
-        return None
-    if mesh is not None:
-        if n_devices is not None and n_devices != mesh.devices.size:
-            raise ValueError(
-                f"n_devices={n_devices} contradicts the given mesh of "
-                f"{mesh.devices.size} device(s); pass one or the other")
-        return (tuple(mesh.axis_names), tuple(mesh.devices.shape),
-                tuple(int(d.id) for d in mesh.devices.flat))
-    devs = jax.devices()
-    if not 1 <= n_devices <= len(devs):
-        raise ValueError(
-            f"n_devices={n_devices} but this host exposes "
-            f"{len(devs)} device(s)")
-    devs = devs[:n_devices]
-    return (("dev",), (len(devs),), tuple(int(d.id) for d in devs))
-
-
-def get_schedule(a: fmt.COO, *, nnz_per_step: int = 256,
-                 rows_per_window: int = 64,
-                 cols_per_block=None, window_nnz: Optional[int] = None,
-                 balanced: bool = True,
-                 fingerprint: Optional[str] = None) -> Schedule:
-    """Fingerprint-cached schedule build — the 'reuse the converged
-    configuration' entry point."""
-    fp = fingerprint or graph_fingerprint(a)
-    key = _sched_key(fp, nnz_per_step, rows_per_window, cols_per_block,
-                     window_nnz, balanced)
-    sched = _SCHEDULE_CACHE.get(key)
-    if sched is None:
-        if balanced:
-            sched = build_balanced_schedule(
-                a, nnz_per_step, rows_per_window,
-                cols_per_block=cols_per_block, window_nnz=window_nnz)
-        else:
-            sched = build_naive_schedule(a, nnz_per_step, rows_per_window,
-                                         cols_per_block=cols_per_block)
-        _SCHEDULE_CACHE[key] = sched
-    return sched
-
-
-def get_spmm_schedules(a: fmt.COO, *, nnz_per_step: int = 256,
-                       rows_per_window: int = 64,
-                       cols_per_block=None) -> Tuple[Schedule, Schedule]:
-    """(schedule for A, schedule for Aᵀ), both fingerprint-cached — what a
-    differentiable SpMM needs (d(A@B)/dB = Aᵀ @ dC). Call sites stop
-    rebuilding both schedules per invocation."""
-    fwd = get_schedule(a, nnz_per_step=nnz_per_step,
-                       rows_per_window=rows_per_window,
-                       cols_per_block=cols_per_block)
-    a_t = fmt.transpose_coo(a)
-    bwd = get_schedule(a_t, nnz_per_step=nnz_per_step,
-                       rows_per_window=rows_per_window,
-                       cols_per_block=cols_per_block)
-    return fwd, bwd
-
-
-def get_executor(a: fmt.COO, *, nnz_per_step: int = 256,
-                 rows_per_window: int = 64, cols_per_block=None,
-                 window_nnz: Optional[int] = None, ktile: int = 128,
-                 routing: Optional[str] = None,
-                 balanced: bool = True,
-                 n_devices: Optional[int] = None,
-                 mesh: Optional[Mesh] = None) -> _ExecutorBase:
-    """Fingerprint-cached executor: the first call converges (builds the
-    schedule, uploads it); every later call with the same graph + config is
-    a pure cache hit — no rebuild, no host→device transfer.
-
-    Pass ``n_devices`` (or a 1-D ``mesh``) for a ``ShardedScheduleExecutor``
-    whose schedule shards live one-per-device; the cache keys on
-    ``(graph fingerprint, mesh)``, so single- and multi-device executors of
-    the same graph coexist.
-    """
-    fp = graph_fingerprint(a)
-    mkey = mesh_fingerprint(mesh, n_devices)
-    key = (_sched_key(fp, nnz_per_step, rows_per_window, cols_per_block,
-                      window_nnz, balanced), ktile, routing, mkey)
-    ex = _EXECUTOR_CACHE.get(key)
-    if ex is None:
-        sched = get_schedule(a, nnz_per_step=nnz_per_step,
-                             rows_per_window=rows_per_window,
-                             cols_per_block=cols_per_block,
-                             window_nnz=window_nnz, balanced=balanced,
-                             fingerprint=fp)
-        if mkey is None:
-            ex = ScheduleExecutor(sched, ktile=ktile, routing=routing)
-        else:
-            ex = ShardedScheduleExecutor(sched, n_devices=n_devices,
-                                         mesh=mesh, ktile=ktile,
-                                         routing=routing)
-        _EXECUTOR_CACHE[key] = ex
-    return ex
-
-
-def executor_for_schedule(sched: Schedule, *, ktile: int = 128,
-                          routing: Optional[str] = None,
-                          n_devices: Optional[int] = None,
-                          mesh: Optional[Mesh] = None) -> _ExecutorBase:
-    """Executor for a caller-built schedule, memoized per (schedule
-    instance, ktile, routing, mesh) — identity-keyed, so rebuilding a
-    schedule re-uploads while reusing one doesn't, and asking for a
-    different routing/ktile/mesh never returns a mismatched cached
-    executor."""
-    routing = routing or select_routing(
-        sched.nnz_per_step, sched.cols_per_block, sched.rows_per_window,
-        ktile)
-    mkey = mesh_fingerprint(mesh, n_devices)
-    key = (id(sched), ktile, routing, mkey)
-    ex = _EXEC_BY_SCHEDULE.get(key)
-    if ex is not None and ex.sched is sched:
-        _EXEC_BY_SCHEDULE.move_to_end(key)
-        return ex
-    if mkey is None:
-        ex = ScheduleExecutor(sched, ktile=ktile, routing=routing)
-    else:
-        ex = ShardedScheduleExecutor(sched, n_devices=n_devices, mesh=mesh,
-                                     ktile=ktile, routing=routing)
-    _EXEC_BY_SCHEDULE[key] = ex
-    if len(_EXEC_BY_SCHEDULE) > _EXEC_BY_SCHEDULE_CAP:
-        _EXEC_BY_SCHEDULE.popitem(last=False)
-    return ex
-
-
-# ---------------------------------------------------------------------------
-# Autotune-and-cache: measured configuration search (paper Fig. 17/18 loop)
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass(frozen=True)
-class TunedConfig:
-    """A measured-fastest executor configuration for one (graph, width).
-
-    ``cols_per_block`` holds the sweep candidate's *request* verbatim
-    (None | int | "auto") so ``get_executor(**as_executor_kwargs())``
-    reproduces exactly the measured executor; ``cols_per_block_resolved``
-    is the block width the schedule actually used. ``n_devices`` is None
-    for the single-device executor and a device count for the sharded
-    one (sharded candidates enter the sweep whenever the host exposes a
-    multi-device mesh)."""
-    nnz_per_step: int
-    rows_per_window: int
-    cols_per_block: Union[int, str, None]
-    window_nnz: Optional[int]
-    ktile: int
-    routing: str
-    measured_us: float
-    utilization: float
-    cols_per_block_resolved: int = 0
-    n_devices: Optional[int] = None
-
-    def as_executor_kwargs(self) -> dict:
-        return dict(nnz_per_step=self.nnz_per_step,
-                    rows_per_window=self.rows_per_window,
-                    cols_per_block=self.cols_per_block,
-                    window_nnz=self.window_nnz, ktile=self.ktile,
-                    routing=self.routing, n_devices=self.n_devices)
-
-
-def _time_call(fn: Callable[[], jax.Array], iters: int, warmup: int) -> float:
-    for _ in range(warmup):
-        fn().block_until_ready()
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn()
-    out.block_until_ready()
-    return (time.perf_counter() - t0) / iters * 1e6
-
-
-def default_sweep(a: fmt.COO, rows_per_window=(32, 64)) -> list:
-    """Candidate (k, r, cb, window_nnz, routing) points: the gather path at a
-    few step granularities, plus a capped one-hot point whose nnz_per_step is
-    density-matched (≈ nnz/m · r · cb / n rounded to a lane multiple)."""
-    m, n = a.shape
-    nnz = int(np.asarray(a.row).shape[0])
-    cand = []
-    for k in (128, 256):
-        for r in rows_per_window:
-            cand.append(dict(nnz_per_step=k, rows_per_window=r,
-                             cols_per_block=None, window_nnz=None,
-                             routing=GATHER))
-    cb = auto_cols_per_block(n)
-    if cb < n:
-        for r in rows_per_window:
-            cand.append(dict(nnz_per_step=density_matched_k(a, r, cb),
-                             rows_per_window=r,
-                             cols_per_block="auto", window_nnz=None,
-                             routing=ONEHOT))
-    return cand
-
-
-def sharded_device_counts(max_devices: Optional[int] = None) -> tuple:
-    """Device counts the sharded sweep covers: powers of two in
-    (1, available], capped at ``max_devices``. Empty on a single-device
-    host — the sweep then degenerates to the single-device candidates."""
-    n_avail = len(jax.devices())
-    cap = n_avail if max_devices is None else min(max_devices, n_avail)
-    counts = []
-    d = 2
-    while d <= cap:
-        counts.append(d)
-        d *= 2
-    return tuple(counts)
-
-
-def sharded_sweep(a: fmt.COO, device_counts: tuple,
-                  rows_per_window=(32, 64)) -> list:
-    """Sharded-executor candidates: the gather path at each device count
-    (one-hot shards identically but is never competitive off-TPU, and on
-    TPU the kernel sweep covers it)."""
-    cand = []
-    for d in device_counts:
-        for r in rows_per_window:
-            cand.append(dict(nnz_per_step=256, rows_per_window=r,
-                             cols_per_block=None, window_nnz=None,
-                             routing=GATHER, n_devices=d))
-    return cand
-
-
-def density_matched_k(a: fmt.COO, rows_per_window: int,
-                      cols_per_block: int) -> int:
-    """nnz_per_step for a capped one-hot schedule: the expected non-zero
-    count of one (rows_per_window × cols_per_block) tile, rounded to a
-    power of two ≥ 8 — each (window, block) step then carries ~K real
-    slots instead of fragmenting."""
-    m, n = a.shape
-    nnz = int(np.asarray(a.row).shape[0])
-    expect = max(1.0, nnz / m * rows_per_window * cols_per_block / n)
-    return max(8, int(2 ** np.round(np.log2(expect))))
-
-
-def autotune(a: fmt.COO, b_shape: Tuple[int, ...], *,
-             sweep: Optional[list] = None, ktile: int = 128,
-             iters: int = 3, warmup: int = 1, seed: int = 0,
-             include_onehot: bool = False,
-             max_devices: Optional[int] = None) -> TunedConfig:
-    """Measure every sweep point's jitted executor on a random dense operand
-    of ``b_shape`` and cache the fastest config by graph fingerprint.
-
-    ``b_shape`` is (n, kdim) (only kdim matters for the cache key). One-hot
-    candidates are skipped off-TPU unless ``include_onehot`` — the scan
-    emulation is measurable but never competitive on CPU. When the host
-    exposes more than one device the default sweep additionally measures
-    the **sharded** executor at power-of-two device counts (capped by
-    ``max_devices``); explicit ``sweep`` candidates may carry their own
-    ``n_devices``.
-    """
-    kdim = int(b_shape[-1])
-    fp = graph_fingerprint(a)
-    sweep_key = None if sweep is None else tuple(
-        tuple(sorted(c.items())) for c in sweep)
-    key = (fp, kdim, ktile, include_onehot, iters, warmup, sweep_key,
-           max_devices, len(jax.devices()))
-    hit = _AUTOTUNE_CACHE.get(key)
-    if hit is not None:
-        return hit
-
-    if sweep is None:
-        sweep_eff = default_sweep(a) + sharded_sweep(
-            a, sharded_device_counts(max_devices))
-    else:
-        sweep_eff = sweep
-
-    rng = np.random.default_rng(seed)
-    b = jnp.asarray(rng.standard_normal((a.shape[1], kdim)).astype(np.float32))
-    best: Optional[TunedConfig] = None
-    on_tpu = jax.default_backend() == "tpu"
-    for cand in sweep_eff:
-        if cand["routing"] == ONEHOT and not (on_tpu or include_onehot):
-            continue
-        ex = get_executor(a, ktile=ktile, **cand)
-        us = _time_call(lambda: ex.spmm(b), iters, warmup)
-        cfg = TunedConfig(
-            nnz_per_step=cand["nnz_per_step"],
-            rows_per_window=cand["rows_per_window"],
-            cols_per_block=cand["cols_per_block"],
-            window_nnz=cand["window_nnz"], ktile=ktile,
-            routing=ex.routing, measured_us=us,
-            utilization=ex.sched.utilization,
-            cols_per_block_resolved=ex.sched.cols_per_block,
-            n_devices=cand.get("n_devices"))
-        if best is None or cfg.measured_us < best.measured_us:
-            best = cfg
-    if best is None:
-        raise ValueError(
-            "autotune sweep has no measurable candidate: every point was "
-            "one-hot-routed and those are skipped off-TPU — pass "
-            "include_onehot=True or add a gather candidate")
-    _AUTOTUNE_CACHE[key] = best
-    return best
-
-
-def autotuned_executor(a: fmt.COO, b_shape: Tuple[int, ...],
-                       **kw) -> _ExecutorBase:
-    """The executor for the measured-fastest configuration (both the tuning
-    result and the executor itself are cached)."""
-    cfg = autotune(a, b_shape, **kw)
-    return get_executor(a, **cfg.as_executor_kwargs())
+__getattr__, __dir__ = lazy_exports(__name__, _TUNING_EXPORTS, globals())

@@ -81,13 +81,13 @@ def forward_awb(params: dict, a: fmt.COO, x: jax.Array,
     with a psum merge, cached by ``(graph fingerprint, mesh)`` (DESIGN.md
     §4).
     """
-    from repro.core import executor as _exe
+    from repro.tuning import registry as _reg
 
     if executor is None:
         if sched is None:
-            executor = _exe.get_executor(a, n_devices=n_devices, mesh=mesh)
+            executor = _reg.get_executor(a, n_devices=n_devices, mesh=mesh)
         else:
-            executor = _exe.executor_for_schedule(sched, n_devices=n_devices,
+            executor = _reg.executor_for_schedule(sched, n_devices=n_devices,
                                                   mesh=mesh)
     return executor.forward(params, x)
 

@@ -104,6 +104,76 @@ class Schedule:
         return split_step_ranges(self.n_steps, n_devices)
 
 
+# ---------------------------------------------------------------------------
+# Serialization — the tuning store persists converged schedules as plain
+# arrays (one .npz per store entry) so serving restarts skip the rebuild.
+# ---------------------------------------------------------------------------
+
+#: bump when Schedule's on-disk layout changes — part of the store key, so
+#: stale entries miss (and re-tune) instead of deserializing garbage.
+SCHEDULE_FORMAT_VERSION = 1
+
+_ARRAY_FIELDS = ("win_id", "col_block", "val", "local_row", "local_col",
+                 "row_map")
+
+
+def schedule_to_arrays(sched: Schedule) -> dict:
+    """Flatten a Schedule into plain numpy arrays: the six schedule arrays
+    plus an int64 ``meta`` vector of the scalar geometry. The inverse of
+    ``schedule_from_arrays``; together they are the store's wire format."""
+    out = {f: np.asarray(getattr(sched, f)) for f in _ARRAY_FIELDS}
+    out["meta"] = np.asarray(
+        [sched.shape[0], sched.shape[1], sched.nnz_per_step,
+         sched.rows_per_window, sched.cols_per_block, sched.nnz,
+         sched.n_evil_chunks], np.int64)
+    return out
+
+
+def schedule_from_arrays(arrays) -> Schedule:
+    """Rebuild a Schedule from ``schedule_to_arrays`` output, validating
+    internal consistency so a truncated or corrupted store entry raises
+    ``ValueError`` (the store maps that to a re-tune) instead of producing
+    an executor that silently computes garbage."""
+    try:
+        meta = np.asarray(arrays["meta"], np.int64)
+        m, n, k, r, cb, nnz, n_evil = (int(v) for v in meta)
+        fields = {f: np.asarray(arrays[f]) for f in _ARRAY_FIELDS}
+    except (KeyError, TypeError, OverflowError) as e:
+        raise ValueError(f"schedule entry missing/overflowing field: {e}")
+    sched = Schedule(shape=(m, n), nnz_per_step=k, rows_per_window=r,
+                     cols_per_block=cb, nnz=nnz, n_evil_chunks=n_evil,
+                     win_id=fields["win_id"].astype(np.int32),
+                     col_block=fields["col_block"].astype(np.int32),
+                     val=fields["val"].astype(np.float32),
+                     local_row=fields["local_row"].astype(np.int32),
+                     local_col=fields["local_col"].astype(np.int32),
+                     row_map=fields["row_map"].astype(np.int32))
+    n_steps = sched.n_steps
+    if (min(m, n, k, r, cb) <= 0 or nnz < 0 or n_evil < 0
+            or sched.val.shape != (n_steps * k,)
+            or sched.local_row.shape != (n_steps * k,)
+            or sched.local_col.shape != (n_steps * k,)
+            or sched.col_block.shape != (n_steps,)
+            or sched.row_map.shape[0] % r != 0
+            or nnz > n_steps * k):
+        raise ValueError("inconsistent schedule geometry in stored entry")
+    # both bounds matter: a negative index would silently wrap (NumPy/jnp
+    # semantics) and compute garbage instead of failing over to a re-tune
+    n_colblocks = -(-n // cb)
+    if n_steps and (int(sched.win_id.min()) < 0
+                    or int(sched.win_id.max()) >= sched.n_windows
+                    or int(sched.col_block.min(initial=0)) < 0
+                    or int(sched.col_block.max(initial=0)) >= n_colblocks
+                    or int(sched.local_row.min(initial=0)) < 0
+                    or int(sched.local_row.max(initial=0)) >= r
+                    or int(sched.local_col.min(initial=0)) < 0
+                    or int(sched.local_col.max(initial=0)) >= cb
+                    or int(sched.row_map.min(initial=-1)) < -1
+                    or int(sched.row_map.max(initial=-1)) >= m):
+        raise ValueError("out-of-range indices in stored schedule entry")
+    return sched
+
+
 AUTO_COLS_PER_BLOCK = 256
 
 

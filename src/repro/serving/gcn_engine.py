@@ -1,0 +1,314 @@
+"""Multi-graph GCN serving engine on the tuning store.
+
+The paper's workload is inference on a fixed graph; a serving system holds
+*many* such graphs — one converged configuration each — and rotates them
+through bounded device memory. ``GCNServingEngine`` composes the tuning
+subsystem into that shape:
+
+* **Warm starts.** ``add_graph`` keys the ``TuningStore`` by graph
+  fingerprint; a hit deserializes the ``TunedConfig`` *and* the prebuilt
+  schedule arrays, so a process restart performs **zero measured sweeps and
+  zero schedule rebuilds** — deserialize, upload, serve. A miss runs the
+  measured sweep once (single-device, pruned by the paper's cycle model)
+  and persists the winner, so the *next* restart is warm. A corrupted store
+  entry is dropped and re-tuned, never crashed on.
+* **Batching.** Same-graph feature requests batch into **one jitted
+  forward**: the executor's whole-GCN body under ``jax.vmap`` over the
+  request axis — one dispatch for the whole batch instead of one per
+  request. ``submit``/``flush`` accumulate a per-graph queue;
+  ``serve_batch`` is the direct path.
+* **Bounded residency.** Each resident graph's device footprint — its
+  executor's schedule arrays (``device_bytes``) *plus* its uploaded
+  weights — counts against ``device_budget_bytes``. Admission beyond the
+  budget evicts least-recently-served graphs: device arrays, weights, and
+  jitted closures are dropped; the host-side schedule, config, and weight
+  copies are kept, so re-admission is a re-upload — still no rebuild, no
+  sweep — and thousands of graphs can rotate through a fixed HBM budget.
+
+The engine deliberately bypasses ``tuning.registry``'s unbounded
+fingerprint caches for its executors — eviction must actually free device
+memory, so the engine's executor references are the only ones.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import csc as fmt
+from repro.core.executor import ScheduleExecutor, release_device_steps
+from repro.core.schedule import Schedule
+from repro.tuning import registry, runner
+from repro.tuning.space import TunedConfig
+from repro.tuning.store import TuningStore
+
+
+class FlushError(RuntimeError):
+    """One or more per-graph batches failed during ``flush``.
+
+    Nothing is lost: ``partial`` holds the successfully served
+    ``{graph_id: logits}``, ``failures`` the ``{graph_id: exception}``,
+    and every failed graph's queue was restored for retry."""
+
+    def __init__(self, failures, partial):
+        super().__init__(
+            f"flush failed for graph(s) {sorted(failures)}; "
+            f"{len(partial)} graph(s) served (see .partial), failed "
+            f"queues restored for retry")
+        self.failures = failures
+        self.partial = partial
+
+
+@dataclasses.dataclass
+class AdmitReport:
+    """What ``add_graph`` did for one graph."""
+    graph_id: str
+    warm_start: bool          # True: store hit — no sweep, no rebuild
+    tune_seconds: float       # 0.0 on the warm path
+    device_bytes: int         # resident footprint (schedule + weights)
+    config: TunedConfig
+
+
+@dataclasses.dataclass
+class _Resident:
+    graph_id: str
+    fingerprint: str
+    config: TunedConfig
+    sched: Schedule                      # host copy — survives eviction
+    params_host: dict                    # host copy — survives eviction
+    params: Optional[dict] = None        # device-resident weight tree
+    executor: Optional[ScheduleExecutor] = None
+    fwd: Optional[callable] = None       # jitted vmapped whole-GCN forward
+    bytes: int = 0                       # schedule + weight device bytes
+
+
+class GCNServingEngine:
+    """Serve batched GCN inference over many resident graphs concurrently.
+
+    ``device_budget_bytes`` bounds the total device-resident schedule
+    bytes; the graph being served is always kept resident, even if it
+    alone exceeds the budget (a budget smaller than one graph cannot be
+    honoured — it degrades to one-graph-at-a-time rotation).
+    """
+
+    def __init__(self, *, store: Optional[TuningStore] = None,
+                 store_root=None,
+                 device_budget_bytes: int = 64 << 20,
+                 autotune_iters: int = 3, autotune_warmup: int = 1,
+                 autotune_kwargs: Optional[dict] = None):
+        self.store = store if store is not None else TuningStore(store_root)
+        self.device_budget_bytes = int(device_budget_bytes)
+        self._autotune_kwargs = dict(autotune_kwargs or {})
+        reserved = {"max_devices", "store"} & set(self._autotune_kwargs)
+        if reserved:
+            raise ValueError(
+                f"autotune_kwargs may not override {sorted(reserved)}: the "
+                "engine pins max_devices=1 and its own store")
+        self._autotune_kwargs.setdefault("iters", autotune_iters)
+        self._autotune_kwargs.setdefault("warmup", autotune_warmup)
+        self._graphs: "OrderedDict[str, _Resident]" = OrderedDict()
+        self._pending: Dict[str, List[jax.Array]] = {}
+        self.device_bytes_in_use = 0
+        self.counters = {"store_hits": 0, "store_misses": 0,
+                         "evictions": 0, "readmissions": 0,
+                         "batches": 0, "requests": 0}
+
+    # ---- admission ---------------------------------------------------------
+
+    def add_graph(self, graph_id: str, a: fmt.COO, params: dict, *,
+                  kdim: Optional[int] = None) -> AdmitReport:
+        """Register a graph + trained weights and make it servable.
+
+        ``kdim`` is the tuning probe width; it defaults to the first
+        layer's output width (the width every A×(XW) product in the
+        forward actually sees first)."""
+        if graph_id in self._graphs:
+            raise ValueError(f"graph {graph_id!r} already registered")
+        if kdim is None:
+            kdim = int(np.asarray(params["w0"]).shape[1])
+        fp = registry.graph_fingerprint(a)
+        # the engine serves single-device executors: pin the 1-device sweep
+        # so the store key and the tuned mesh agree (and fold any custom
+        # sweep identity exactly as autotune will)
+        key = runner.store_key(self.store, fp, kdim, max_devices=1,
+                               **self._autotune_kwargs)
+        t0 = time.perf_counter()
+        entry = self.store.load(key)
+        warm = entry is not None
+        if warm:
+            self.counters["store_hits"] += 1
+            cfg, sched = entry
+            if cfg.n_devices is not None:
+                raise ValueError(
+                    f"GCNServingEngine serves single-device executors, but "
+                    f"the stored config for {graph_id!r} requests "
+                    f"n_devices={cfg.n_devices}")
+            tune_s = 0.0
+        executor = None
+        if not warm:
+            self.counters["store_misses"] += 1
+            cfg = runner.autotune(a, (a.shape[1], kdim), max_devices=1,
+                                  store=self.store, **self._autotune_kwargs)
+            if cfg.n_devices is not None:
+                raise ValueError(
+                    f"GCNServingEngine serves single-device executors, but "
+                    f"the tuned config for {graph_id!r} requests "
+                    f"n_devices={cfg.n_devices} — remove sharded candidates "
+                    f"from autotune_kwargs['sweep']")
+            # take ownership of the winner's already-resident executor (the
+            # sweep just measured it — no second _gather_slots precompute,
+            # no second upload) ...
+            executor = registry.get_executor(a, **cfg.as_executor_kwargs())
+            sched = executor.sched
+            # ... then release the graph from the registry's unbounded
+            # caches: the sweep's ~dozen losing candidate executors must
+            # not pin device memory, and *this* engine's byte budget
+            # becomes the only thing keeping the winner resident
+            registry.release_graph(fp)
+            tune_s = time.perf_counter() - t0
+        rec = _Resident(graph_id=graph_id, fingerprint=fp, config=cfg,
+                        sched=sched, executor=executor,
+                        params_host=jax.tree.map(np.asarray, params))
+        self._graphs[graph_id] = rec
+        self._admit(rec)
+        return AdmitReport(graph_id=graph_id, warm_start=warm,
+                           tune_seconds=tune_s, device_bytes=rec.bytes,
+                           config=cfg)
+
+    def remove_graph(self, graph_id: str) -> None:
+        rec = self._graphs.pop(graph_id)
+        self._pending.pop(graph_id, None)
+        if rec.executor is not None:
+            self.device_bytes_in_use -= rec.bytes
+        release_device_steps(rec.sched)
+
+    # ---- residency / eviction ----------------------------------------------
+
+    def _admit(self, rec: _Resident) -> None:
+        """Ensure ``rec`` is device-resident (LRU-touch + budget sweep).
+        ``rec.executor`` may arrive pre-seeded (cold admission hands over
+        the sweep's winner) — then only weights upload and jit remain."""
+        if rec.fwd is None:
+            first = rec.bytes == 0
+            cfg = rec.config
+            ex = rec.executor
+            if ex is None:
+                ex = ScheduleExecutor(rec.sched, ktile=cfg.ktile,
+                                      routing=cfg.routing,
+                                      bf16_accumulate=cfg.bf16_accumulate)
+            rec.executor = ex
+            rec.params = jax.tree.map(jnp.asarray, rec.params_host)
+            # one jitted dispatch per (graph, batch size): the whole-GCN
+            # body vmapped over the request axis
+            rec.fwd = jax.jit(jax.vmap(ex._forward_impl, in_axes=(None, 0)))
+            rec.bytes = ex.device_bytes + sum(
+                int(x.nbytes) for x in jax.tree.leaves(rec.params))
+            self.device_bytes_in_use += rec.bytes
+            if not first:
+                self.counters["readmissions"] += 1
+        self._graphs.move_to_end(rec.graph_id)
+        self._evict_over_budget(keep=rec.graph_id)
+
+    def _evict(self, rec: _Resident) -> None:
+        # dropping the executor, weights, and the jitted closure releases
+        # the device arrays they capture; the host schedule/config/weights
+        # stay for re-upload. One-hot executors also memoize their step
+        # arrays in the executor module's LRU — purge that too, or the
+        # bytes survive the eviction.
+        rec.executor = None
+        rec.params = None
+        rec.fwd = None
+        release_device_steps(rec.sched)
+        self.device_bytes_in_use -= rec.bytes
+        self.counters["evictions"] += 1
+
+    def _evict_over_budget(self, keep: str) -> None:
+        while self.device_bytes_in_use > self.device_budget_bytes:
+            victim = next((r for r in self._graphs.values()
+                           if r.executor is not None and r.graph_id != keep),
+                          None)
+            if victim is None:
+                break  # only `keep` is resident; it is never evicted
+            self._evict(victim)
+
+    @property
+    def resident_graphs(self) -> List[str]:
+        return [g for g, r in self._graphs.items() if r.executor is not None]
+
+    @property
+    def graphs(self) -> List[str]:
+        return list(self._graphs)
+
+    # ---- serving -----------------------------------------------------------
+
+    def serve_batch(self, graph_id: str, xs) -> jax.Array:
+        """One jitted forward over a batch of same-graph feature matrices.
+
+        ``xs`` is a sequence of ``[n, f]`` arrays (or a stacked
+        ``[B, n, f]`` array); returns stacked ``[B, n, classes]`` logits."""
+        rec = self._graphs[graph_id]
+        xb = xs if hasattr(xs, "ndim") and xs.ndim == 3 else jnp.stack(
+            [jnp.asarray(x) for x in xs])
+        n = rec.sched.shape[1]
+        if xb.shape[1] != n:
+            raise ValueError(
+                f"features have {xb.shape[1]} rows; graph {graph_id!r} "
+                f"has {n} nodes")
+        self._admit(rec)  # LRU touch + re-upload if evicted
+        out = rec.fwd(rec.params, xb)
+        # count only completed batches — a failed/retried batch must not
+        # inflate the served-work stats
+        self.counters["batches"] += 1
+        self.counters["requests"] += int(xb.shape[0])
+        return out
+
+    def infer(self, graph_id: str, x) -> jax.Array:
+        """Single-request forward (a batch of one)."""
+        return self.serve_batch(graph_id, [x])[0]
+
+    def submit(self, graph_id: str, x) -> None:
+        """Queue one request; ``flush`` serves every queue in one jitted
+        forward per graph. Shape is validated here so one malformed
+        request can never poison a later ``flush``."""
+        rec = self._graphs.get(graph_id)
+        if rec is None:
+            raise KeyError(f"unknown graph {graph_id!r}")
+        x = jnp.asarray(x)
+        n = rec.sched.shape[1]
+        if x.ndim != 2 or x.shape[0] != n:
+            raise ValueError(
+                f"request for graph {graph_id!r} must be [n={n}, features]; "
+                f"got shape {x.shape}")
+        self._pending.setdefault(graph_id, []).append(x)
+
+    def flush(self) -> Dict[str, jax.Array]:
+        """Serve all queued requests, batched per graph. Returns
+        ``{graph_id: [B, n, classes] logits}`` in submission order.
+
+        A failing batch never takes the others down: every remaining
+        graph is still served, the failed graphs' queues are restored for
+        retry, and the raised ``FlushError`` carries the successful
+        results in ``.partial`` — no computed logits are lost."""
+        out, failures = {}, {}
+        pending, self._pending = self._pending, {}
+        for graph_id, xs in pending.items():
+            try:
+                out[graph_id] = self.serve_batch(graph_id, xs)
+            except Exception as e:
+                failures[graph_id] = e
+                self._pending.setdefault(graph_id, []).extend(xs)
+        if failures:
+            raise FlushError(failures, out)
+        return out
+
+    def stats(self) -> dict:
+        return dict(self.counters,
+                    device_bytes_in_use=self.device_bytes_in_use,
+                    device_budget_bytes=self.device_budget_bytes,
+                    n_graphs=len(self._graphs),
+                    n_resident=len(self.resident_graphs))

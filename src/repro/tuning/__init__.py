@@ -1,0 +1,43 @@
+"""The tuning subsystem: converge once, persist, reuse forever.
+
+AWB-GCN's engine "after converging, reuses the ideal configuration" (§IV).
+This package owns everything between a raw graph and a converged,
+device-resident executor:
+
+* ``space``    — the candidate search space the measured sweep explores
+  (nnz_per_step × rows_per_window × cols_per_block × ktile × bf16
+  accumulate, plus sharded variants), and ``TunedConfig``, the converged
+  artifact.
+* ``runner``   — the measured autotune loop: prune obviously-unbalanced
+  candidates with the paper's cycle model, time the survivors' jitted
+  executors, attach the f32-vs-bf16 error report, persist the winner.
+* ``store``    — the persistent on-disk store: ``TunedConfig`` + prebuilt
+  schedule arrays under ``~/.cache`` (or ``$REPRO_TUNING_STORE``), keyed by
+  (graph fingerprint, device kind, mesh, code version), atomic writes,
+  corrupted entries fall back to re-tuning.
+* ``registry`` — the in-process caches (fingerprint → schedule / executor /
+  tuned config) that ``core.executor`` delegated here.
+"""
+from repro.tuning.registry import (  # noqa: F401
+    clear_caches,
+    executor_for_schedule,
+    get_executor,
+    get_schedule,
+    get_spmm_schedules,
+    graph_fingerprint,
+    mesh_fingerprint,
+)
+from repro.tuning.runner import (  # noqa: F401
+    autotune,
+    autotuned_executor,
+    time_call,
+    warm_tuned_executor,
+)
+from repro.tuning.space import (  # noqa: F401
+    TunedConfig,
+    default_sweep,
+    density_matched_k,
+    sharded_device_counts,
+    sharded_sweep,
+)
+from repro.tuning.store import TuningStore, mesh_descriptor  # noqa: F401

@@ -1,0 +1,244 @@
+"""In-process caches: graph fingerprint → schedule / executor.
+
+``core.executor`` used to own these dicts; they live here now so the
+executor module is purely the execution machinery and every caching policy
+(in-process here, on-disk in ``tuning.store``) sits in one subsystem.
+
+The fingerprint-keyed caches are deliberately unbounded: a serving system
+holds a handful of long-lived graphs, and the converged configuration is
+exactly what must persist (bounded rotation across *thousands* of graphs is
+the serving engine's job — ``serving.gcn_engine`` evicts device-resident
+schedules under an LRU byte budget and bypasses these caches). The
+identity-keyed per-schedule cache is a bounded LRU — workloads that build
+throwaway schedules per call must not retain every one forever.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core import csc as fmt
+from repro.core import executor as _exe
+from repro.core import schedule as _schedule
+from repro.core.executor import (ScheduleExecutor, ShardedScheduleExecutor,
+                                 _ExecutorBase, select_routing)
+from repro.core.schedule import Schedule
+
+
+def graph_fingerprint(a: fmt.COO) -> str:
+    """Content hash of a sparse operand — the schedule-cache key and the
+    graph half of the on-disk store key.
+
+    Hashes shape, true nnz, and the index/value bytes of real (non-PAD)
+    entries, so two COOs describing the same matrix — padded or not — map
+    to the same converged configuration.
+    """
+    row = np.asarray(a.row)
+    col = np.asarray(a.col)
+    val = np.asarray(a.val)
+    if (row == fmt.PAD_IDX).any():
+        keep = row != fmt.PAD_IDX
+        row, col, val = row[keep], col[keep], val[keep]
+    h = hashlib.blake2b(digest_size=16)
+    h.update(repr((a.shape, int(row.shape[0]))).encode())
+    h.update(row.tobytes())
+    h.update(col.tobytes())
+    h.update(val.tobytes())
+    return h.hexdigest()
+
+
+def mesh_fingerprint(mesh=None, n_devices: Optional[int] = None):
+    """Hashable identity of the requested device mesh — the second half of
+    the ``(graph fingerprint, mesh)`` executor-cache key.
+
+    ``None`` (no mesh, no device count) means the plain single-device
+    ``ScheduleExecutor``; ``n_devices=1`` is a *distinct* entry (a 1-device
+    sharded executor), so single- and multi-device executors coexist in the
+    cache. Device ids are part of the key: the same shape on different
+    devices is a different placement.
+    """
+    import jax
+
+    if mesh is None and n_devices is None:
+        return None
+    if mesh is not None:
+        if n_devices is not None and n_devices != mesh.devices.size:
+            raise ValueError(
+                f"n_devices={n_devices} contradicts the given mesh of "
+                f"{mesh.devices.size} device(s); pass one or the other")
+        return (tuple(mesh.axis_names), tuple(mesh.devices.shape),
+                tuple(int(d.id) for d in mesh.devices.flat))
+    devs = jax.devices()
+    if not 1 <= n_devices <= len(devs):
+        raise ValueError(
+            f"n_devices={n_devices} but this host exposes "
+            f"{len(devs)} device(s)")
+    devs = devs[:n_devices]
+    return (("dev",), (len(devs),), tuple(int(d.id) for d in devs))
+
+
+_SCHEDULE_CACHE: dict = {}
+_EXECUTOR_CACHE: dict = {}
+_EXEC_BY_SCHEDULE: "OrderedDict[tuple, _ExecutorBase]" = OrderedDict()
+_EXEC_BY_SCHEDULE_CAP = 32
+
+
+def clear_caches() -> None:
+    """Drop every cached schedule/executor/tuning result (tests; also the
+    closest thing to simulating a process restart in-process)."""
+    from repro.tuning import runner
+
+    _SCHEDULE_CACHE.clear()
+    _EXECUTOR_CACHE.clear()
+    _EXEC_BY_SCHEDULE.clear()
+    _exe._DEVICE_STEPS.clear()
+    runner._AUTOTUNE_CACHE.clear()
+
+
+def _sched_key(fp: str, nnz_per_step, rows_per_window, cols_per_block,
+               window_nnz, balanced):
+    return (fp, nnz_per_step, rows_per_window, str(cols_per_block),
+            window_nnz, balanced)
+
+
+def release_graph(fingerprint: str) -> None:
+    """Drop every cached schedule/executor of one graph.
+
+    The fingerprint caches are deliberately unbounded for long-lived
+    serving graphs; a caller that sweeps *many* configurations of a graph
+    it will not serve through the registry (the serving engine's cold
+    autotune measures ~a dozen device-resident candidate executors) calls
+    this afterwards so the sweep's uploads don't pin device memory
+    forever."""
+    for key in [k for k in _SCHEDULE_CACHE if k[0] == fingerprint]:
+        # also drop the schedule's memoized device step arrays (one-hot
+        # executors share them through the executor module's LRU)
+        _exe.release_device_steps(_SCHEDULE_CACHE.pop(key))
+    for key in [k for k in _EXECUTOR_CACHE if k[0][0] == fingerprint]:
+        del _EXECUTOR_CACHE[key]
+
+
+def get_schedule(a: fmt.COO, *, nnz_per_step: int = 256,
+                 rows_per_window: int = 64,
+                 cols_per_block=None, window_nnz: Optional[int] = None,
+                 balanced: bool = True,
+                 fingerprint: Optional[str] = None) -> Schedule:
+    """Fingerprint-cached schedule build — the 'reuse the converged
+    configuration' entry point."""
+    fp = fingerprint or graph_fingerprint(a)
+    key = _sched_key(fp, nnz_per_step, rows_per_window, cols_per_block,
+                     window_nnz, balanced)
+    sched = _SCHEDULE_CACHE.get(key)
+    if sched is None:
+        if balanced:
+            sched = _schedule.build_balanced_schedule(
+                a, nnz_per_step, rows_per_window,
+                cols_per_block=cols_per_block, window_nnz=window_nnz)
+        else:
+            sched = _schedule.build_naive_schedule(
+                a, nnz_per_step, rows_per_window,
+                cols_per_block=cols_per_block)
+        _SCHEDULE_CACHE[key] = sched
+    return sched
+
+
+def adopt_schedule(fingerprint: str, cfg, sched: Schedule) -> None:
+    """Seed the schedule cache with a deserialized store entry, so the
+    subsequent ``get_executor(a, **cfg.as_executor_kwargs())`` is a pure
+    cache hit — **zero** ``build_balanced_schedule`` calls on the
+    warm-start path."""
+    key = _sched_key(fingerprint, cfg.nnz_per_step, cfg.rows_per_window,
+                     cfg.cols_per_block, cfg.window_nnz, True)
+    _SCHEDULE_CACHE.setdefault(key, sched)
+
+
+def get_spmm_schedules(a: fmt.COO, *, nnz_per_step: int = 256,
+                       rows_per_window: int = 64,
+                       cols_per_block=None) -> Tuple[Schedule, Schedule]:
+    """(schedule for A, schedule for Aᵀ), both fingerprint-cached — what a
+    differentiable SpMM needs (d(A@B)/dB = Aᵀ @ dC). Call sites stop
+    rebuilding both schedules per invocation."""
+    fwd = get_schedule(a, nnz_per_step=nnz_per_step,
+                       rows_per_window=rows_per_window,
+                       cols_per_block=cols_per_block)
+    a_t = fmt.transpose_coo(a)
+    bwd = get_schedule(a_t, nnz_per_step=nnz_per_step,
+                       rows_per_window=rows_per_window,
+                       cols_per_block=cols_per_block)
+    return fwd, bwd
+
+
+def get_executor(a: fmt.COO, *, nnz_per_step: int = 256,
+                 rows_per_window: int = 64, cols_per_block=None,
+                 window_nnz: Optional[int] = None, ktile: int = 128,
+                 routing: Optional[str] = None,
+                 balanced: bool = True,
+                 bf16_accumulate: bool = False,
+                 n_devices: Optional[int] = None,
+                 mesh=None) -> _ExecutorBase:
+    """Fingerprint-cached executor: the first call converges (builds the
+    schedule, uploads it); every later call with the same graph + config is
+    a pure cache hit — no rebuild, no host→device transfer.
+
+    Pass ``n_devices`` (or a 1-D ``mesh``) for a ``ShardedScheduleExecutor``
+    whose schedule shards live one-per-device; the cache keys on
+    ``(graph fingerprint, mesh)``, so single- and multi-device executors of
+    the same graph coexist.
+    """
+    fp = graph_fingerprint(a)
+    mkey = mesh_fingerprint(mesh, n_devices)
+    key = (_sched_key(fp, nnz_per_step, rows_per_window, cols_per_block,
+                      window_nnz, balanced), ktile, routing, bf16_accumulate,
+           mkey)
+    ex = _EXECUTOR_CACHE.get(key)
+    if ex is None:
+        sched = get_schedule(a, nnz_per_step=nnz_per_step,
+                             rows_per_window=rows_per_window,
+                             cols_per_block=cols_per_block,
+                             window_nnz=window_nnz, balanced=balanced,
+                             fingerprint=fp)
+        if mkey is None:
+            ex = ScheduleExecutor(sched, ktile=ktile, routing=routing,
+                                  bf16_accumulate=bf16_accumulate)
+        else:
+            ex = ShardedScheduleExecutor(sched, n_devices=n_devices,
+                                         mesh=mesh, ktile=ktile,
+                                         routing=routing,
+                                         bf16_accumulate=bf16_accumulate)
+        _EXECUTOR_CACHE[key] = ex
+    return ex
+
+
+def executor_for_schedule(sched: Schedule, *, ktile: int = 128,
+                          routing: Optional[str] = None,
+                          bf16_accumulate: bool = False,
+                          n_devices: Optional[int] = None,
+                          mesh=None) -> _ExecutorBase:
+    """Executor for a caller-built schedule, memoized per (schedule
+    instance, ktile, routing, mesh) — identity-keyed, so rebuilding a
+    schedule re-uploads while reusing one doesn't, and asking for a
+    different routing/ktile/mesh never returns a mismatched cached
+    executor."""
+    routing = routing or select_routing(
+        sched.nnz_per_step, sched.cols_per_block, sched.rows_per_window,
+        ktile)
+    mkey = mesh_fingerprint(mesh, n_devices)
+    key = (id(sched), ktile, routing, bf16_accumulate, mkey)
+    ex = _EXEC_BY_SCHEDULE.get(key)
+    if ex is not None and ex.sched is sched:
+        _EXEC_BY_SCHEDULE.move_to_end(key)
+        return ex
+    if mkey is None:
+        ex = ScheduleExecutor(sched, ktile=ktile, routing=routing,
+                              bf16_accumulate=bf16_accumulate)
+    else:
+        ex = ShardedScheduleExecutor(sched, n_devices=n_devices, mesh=mesh,
+                                     ktile=ktile, routing=routing,
+                                     bf16_accumulate=bf16_accumulate)
+    _EXEC_BY_SCHEDULE[key] = ex
+    if len(_EXEC_BY_SCHEDULE) > _EXEC_BY_SCHEDULE_CAP:
+        _EXEC_BY_SCHEDULE.popitem(last=False)
+    return ex

@@ -1,0 +1,162 @@
+"""The autotune candidate space and its converged artifact (``TunedConfig``).
+
+A candidate is a plain dict with the executor-configuration axes the sweep
+explores:
+
+    nnz_per_step, rows_per_window, cols_per_block, window_nnz, routing,
+    and optionally ktile, bf16_accumulate, n_devices.
+
+``default_sweep`` spans the single-device space — the gather path at a few
+step granularities, capped one-hot points with density-matched K, **ktile**
+variants (the kernel's k-tile width), and **bf16-accumulate** twins of the
+strongest gather geometries (ROADMAP "Autotune breadth"). ``sharded_sweep``
+adds multi-device gather candidates at power-of-two device counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core import csc as fmt
+from repro.core.executor import GATHER, ONEHOT
+from repro.core.schedule import auto_cols_per_block
+
+DEFAULT_KTILE = 128
+#: ktile widths the sweep explores. On the XLA executor twin ktile only
+#: steers the routing cost model; on TPU it is the Pallas kernel's k-tile,
+#: so the sweep carries it through to ``TunedConfig`` for the kernel path.
+KTILE_CANDIDATES = (64, 128)
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedConfig:
+    """A measured-fastest executor configuration for one (graph, width).
+
+    ``cols_per_block`` holds the sweep candidate's *request* verbatim
+    (None | int | "auto") so ``get_executor(**as_executor_kwargs())``
+    reproduces exactly the measured executor; ``cols_per_block_resolved``
+    is the block width the schedule actually used. ``n_devices`` is None
+    for the single-device executor and a device count for the sharded
+    one (sharded candidates enter the sweep whenever the host exposes a
+    multi-device mesh). ``bf16_accumulate`` selects the reduced-precision
+    accumulation path; ``bf16_max_err`` reports max |f32 − bf16| of the
+    winning geometry on the tuning probe (attached by the runner whether
+    or not the bf16 twin won)."""
+    nnz_per_step: int
+    rows_per_window: int
+    cols_per_block: Union[int, str, None]
+    window_nnz: Optional[int]
+    ktile: int
+    routing: str
+    measured_us: float
+    utilization: float
+    cols_per_block_resolved: int = 0
+    n_devices: Optional[int] = None
+    bf16_accumulate: bool = False
+    bf16_max_err: Optional[float] = None
+
+    def as_executor_kwargs(self) -> dict:
+        return dict(nnz_per_step=self.nnz_per_step,
+                    rows_per_window=self.rows_per_window,
+                    cols_per_block=self.cols_per_block,
+                    window_nnz=self.window_nnz, ktile=self.ktile,
+                    routing=self.routing, n_devices=self.n_devices,
+                    bf16_accumulate=self.bf16_accumulate)
+
+    def as_schedule_kwargs(self) -> dict:
+        """The schedule-geometry subset — what ``get_schedule`` needs to
+        reproduce (or cache-seed) the winning schedule."""
+        return dict(nnz_per_step=self.nnz_per_step,
+                    rows_per_window=self.rows_per_window,
+                    cols_per_block=self.cols_per_block,
+                    window_nnz=self.window_nnz)
+
+
+def candidate_executor_kwargs(cand: dict,
+                              default_ktile: int = DEFAULT_KTILE) -> dict:
+    """Normalize a sweep candidate into ``get_executor`` keyword arguments
+    (optional axes fall back to their defaults)."""
+    return dict(nnz_per_step=cand["nnz_per_step"],
+                rows_per_window=cand["rows_per_window"],
+                cols_per_block=cand["cols_per_block"],
+                window_nnz=cand["window_nnz"],
+                routing=cand["routing"],
+                ktile=cand.get("ktile", default_ktile),
+                bf16_accumulate=cand.get("bf16_accumulate", False),
+                n_devices=cand.get("n_devices"))
+
+
+def density_matched_k(a: fmt.COO, rows_per_window: int,
+                      cols_per_block: int) -> int:
+    """nnz_per_step for a capped one-hot schedule: the expected non-zero
+    count of one (rows_per_window × cols_per_block) tile, rounded to a
+    power of two ≥ 8 — each (window, block) step then carries ~K real
+    slots instead of fragmenting."""
+    m, n = a.shape
+    nnz = int(np.asarray(a.row).shape[0])
+    expect = max(1.0, nnz / m * rows_per_window * cols_per_block / n)
+    return max(8, int(2 ** np.round(np.log2(expect))))
+
+
+def default_sweep(a: fmt.COO, rows_per_window=(32, 64),
+                  ktiles=KTILE_CANDIDATES,
+                  include_bf16: bool = True) -> list:
+    """Single-device candidate points.
+
+    Gather-path geometries at a few step granularities × the ktile axis,
+    bf16-accumulate twins of every widest-ktile gather point, plus capped
+    one-hot points whose nnz_per_step is density-matched
+    (≈ nnz/m · r · cb / n rounded to a lane multiple)."""
+    m, n = a.shape
+    cand = []
+    for k in (128, 256):
+        for r in rows_per_window:
+            for kt in ktiles:
+                cand.append(dict(nnz_per_step=k, rows_per_window=r,
+                                 cols_per_block=None, window_nnz=None,
+                                 routing=GATHER, ktile=kt))
+            if include_bf16:
+                cand.append(dict(nnz_per_step=k, rows_per_window=r,
+                                 cols_per_block=None, window_nnz=None,
+                                 routing=GATHER, ktile=max(ktiles),
+                                 bf16_accumulate=True))
+    cb = auto_cols_per_block(n)
+    if cb < n:
+        for r in rows_per_window:
+            cand.append(dict(nnz_per_step=density_matched_k(a, r, cb),
+                             rows_per_window=r,
+                             cols_per_block="auto", window_nnz=None,
+                             routing=ONEHOT))
+    return cand
+
+
+def sharded_device_counts(max_devices: Optional[int] = None) -> Tuple[int, ...]:
+    """Device counts the sharded sweep covers: powers of two in
+    (1, available], capped at ``max_devices``. Empty on a single-device
+    host — the sweep then degenerates to the single-device candidates."""
+    import jax
+
+    n_avail = len(jax.devices())
+    cap = n_avail if max_devices is None else min(max_devices, n_avail)
+    counts = []
+    d = 2
+    while d <= cap:
+        counts.append(d)
+        d *= 2
+    return tuple(counts)
+
+
+def sharded_sweep(a: fmt.COO, device_counts: tuple,
+                  rows_per_window=(32, 64)) -> list:
+    """Sharded-executor candidates: the gather path at each device count
+    (one-hot shards identically but is never competitive off-TPU, and on
+    TPU the kernel sweep covers it)."""
+    cand = []
+    for d in device_counts:
+        for r in rows_per_window:
+            cand.append(dict(nnz_per_step=256, rows_per_window=r,
+                             cols_per_block=None, window_nnz=None,
+                             routing=GATHER, n_devices=d))
+    return cand

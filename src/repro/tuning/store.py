@@ -1,0 +1,168 @@
+"""Persistent on-disk store of converged tuning artifacts.
+
+The paper's engine "after converging, reuses the ideal configuration"; this
+module makes that reuse survive process restarts. One entry holds a
+``TunedConfig`` plus the winning schedule's prebuilt arrays, so a serving
+restart warm-starts with **zero measured sweeps and zero schedule rebuilds**
+— deserialize, upload, serve.
+
+Layout
+------
+One ``.npz`` file per entry under ``<root>/v<version>/<key>.npz`` where
+``root`` is, in priority order: the ``root`` argument, ``$REPRO_TUNING_STORE``,
+``~/.cache/repro-awb-gcn/tuning``. The key is a blake2b hash of
+
+    (graph fingerprint, probe width kdim, device kind, mesh descriptor,
+     store version, schedule format version)
+
+— a config tuned on one device kind or mesh never masquerades as another's,
+and format bumps miss cleanly instead of deserializing stale bytes.
+
+Durability
+----------
+Writes are atomic: the entry is serialized to a same-directory temp file and
+``os.replace``d into place, so a crashed writer never leaves a torn entry.
+Reads treat *any* malformed entry (truncated, garbage, inconsistent
+geometry) as a miss: ``load`` returns ``None`` and unlinks the corpse, and
+the caller re-tunes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+import warnings
+from pathlib import Path
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.schedule import (SCHEDULE_FORMAT_VERSION, Schedule,
+                                 schedule_from_arrays, schedule_to_arrays)
+from repro.tuning.space import TunedConfig
+
+#: bump when the entry layout (not the schedule format) changes.
+STORE_VERSION = 1
+
+ENV_ROOT = "REPRO_TUNING_STORE"
+
+
+def default_root() -> Path:
+    env = os.environ.get(ENV_ROOT)
+    if env:
+        return Path(env)
+    return Path.home() / ".cache" / "repro-awb-gcn" / "tuning"
+
+
+def device_kind() -> str:
+    """Identity of the device the measurements ran on — measured wall-clock
+    on one device kind says nothing about another."""
+    import jax
+
+    d = jax.devices()[0]
+    return f"{d.platform}:{getattr(d, 'device_kind', d.platform)}"
+
+
+def mesh_descriptor(max_devices: Optional[int] = None) -> str:
+    """The mesh half of the store key: how many devices the sweep was
+    allowed to span. ``max_devices=1`` pins the single-device sweep (what
+    the serving engine uses); ``None`` means every visible device."""
+    import jax
+
+    n_avail = len(jax.devices())
+    n = n_avail if max_devices is None else min(max_devices, n_avail)
+    return f"{max(1, n)}dev"
+
+
+class TuningStore:
+    """Filesystem-backed map: store key → (TunedConfig, Schedule)."""
+
+    def __init__(self, root=None):
+        self.root = Path(root) if root is not None else default_root()
+        self.dir = self.root / f"v{STORE_VERSION}"
+
+    # ---- keys --------------------------------------------------------------
+
+    def key(self, fingerprint: str, kdim: int, *,
+            device: Optional[str] = None,
+            mesh: Optional[str] = None) -> str:
+        """Entry key for (graph fingerprint, probe width) on this device/
+        mesh at the current code version."""
+        ident = json.dumps(
+            [fingerprint, int(kdim), device or device_kind(),
+             mesh or mesh_descriptor(), STORE_VERSION,
+             SCHEDULE_FORMAT_VERSION])
+        return hashlib.blake2b(ident.encode(), digest_size=16).hexdigest()
+
+    def path(self, key: str) -> Path:
+        return self.dir / f"{key}.npz"
+
+    # ---- IO ----------------------------------------------------------------
+
+    def save(self, key: str, cfg: TunedConfig, sched: Schedule) -> Path:
+        """Atomically persist one converged configuration + its schedule."""
+        payload = schedule_to_arrays(sched)
+        payload["config_json"] = np.asarray(
+            json.dumps(dataclasses.asdict(cfg)))
+        self.dir.mkdir(parents=True, exist_ok=True)
+        dst = self.path(key)
+        fd, tmp = tempfile.mkstemp(dir=self.dir, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.savez(f, **payload)
+            os.replace(tmp, dst)  # atomic on POSIX: never a torn entry
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        return dst
+
+    def load(self, key: str) -> Optional[Tuple[TunedConfig, Schedule]]:
+        """The entry for ``key``, or None. A *malformed* entry (garbage
+        bytes, truncated arrays, inconsistent geometry, unknown config
+        fields) is dropped and reported as a miss — the caller re-tunes
+        instead of crashing. A transient I/O failure (EACCES, a flaky
+        network mount) is also a miss but the entry is **kept**: healthy
+        bytes must not be deleted for a read hiccup."""
+        path = self.path(key)
+        if not path.exists():
+            return None
+        try:
+            with np.load(path, allow_pickle=False) as z:
+                cfg_d = json.loads(str(z["config_json"]))
+                cfg = TunedConfig(**cfg_d)
+                sched = schedule_from_arrays(z)
+        except OSError as e:
+            warnings.warn(f"tuning store: unreadable entry {path.name} "
+                          f"(kept): {type(e).__name__}: {e}")
+            return None
+        except Exception as e:  # malformed entry → drop + re-tune
+            warnings.warn(f"tuning store: dropping corrupted entry "
+                          f"{path.name}: {type(e).__name__}: {e}")
+            try:
+                path.unlink()
+            except OSError:
+                pass
+            return None
+        return cfg, sched
+
+    def invalidate(self, key: str) -> None:
+        try:
+            self.path(key).unlink()
+        except OSError:
+            pass
+
+    def entries(self) -> list:
+        """Keys currently on disk (current version only)."""
+        if not self.dir.is_dir():
+            return []
+        return sorted(p.stem for p in self.dir.glob("*.npz"))
+
+    def nbytes(self) -> int:
+        if not self.dir.is_dir():
+            return 0
+        return sum(p.stat().st_size for p in self.dir.glob("*.npz"))

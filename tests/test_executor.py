@@ -122,7 +122,9 @@ def test_schedule_pair_cache_dedupes_builds(monkeypatch):
         calls.append(1)
         return orig(*args, **kw)
 
-    monkeypatch.setattr(exe, "build_balanced_schedule", counting)
+    # the registry resolves the builder through the schedule module, so
+    # patching it there intercepts every build path
+    monkeypatch.setattr(schedule, "build_balanced_schedule", counting)
     exe.get_spmm_schedules(a, nnz_per_step=32, rows_per_window=16)
     assert len(calls) == 2  # one for A, one for Aᵀ
     # a second call site on the same graph rebuilds nothing

@@ -1,0 +1,260 @@
+"""GCNServingEngine acceptance: process-restart warm-start performs zero
+measured sweeps and zero schedule rebuilds; corrupted store entries fall
+back to re-tuning; LRU eviction keeps device-resident schedule bytes under
+the budget with allclose results after re-admission; same-graph requests
+batch into one jitted forward."""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import executor as exe, gcn, schedule  # noqa: E402
+from repro.graphs import synth  # noqa: E402
+from repro.serving.gcn_engine import FlushError, GCNServingEngine  # noqa: E402
+from repro.tuning import registry, runner  # noqa: E402
+from repro.tuning.store import TuningStore  # noqa: E402
+
+N_NODES = 220
+N_FEATS = 20
+N_CLASSES = 5
+
+# a tiny 2-candidate sweep keeps engine tests fast; the engine folds the
+# sweep identity into its store key, so warm-starts still hit
+FAST_SWEEP = [
+    dict(nnz_per_step=64, rows_per_window=32, cols_per_block=None,
+         window_nnz=None, routing=exe.GATHER),
+    dict(nnz_per_step=128, rows_per_window=64, cols_per_block=None,
+         window_nnz=None, routing=exe.GATHER),
+]
+FAST_KW = dict(iters=1, warmup=1, sweep=FAST_SWEEP, bf16_report=False)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    registry.clear_caches()
+    yield
+    registry.clear_caches()
+
+
+def _workload(seed):
+    a = synth.power_law_adjacency(N_NODES, 0.03, 0.9, seed=seed)
+    cfg = gcn.GCNConfig(N_FEATS, 16, N_CLASSES)
+    params = gcn.init_params(cfg, jax.random.PRNGKey(seed))
+    x = np.random.default_rng(seed).random((N_NODES, N_FEATS),
+                                           ).astype(np.float32)
+    return a, params, x
+
+
+def _engine(root, **kw):
+    kw.setdefault("autotune_kwargs", FAST_KW)
+    return GCNServingEngine(store_root=root, **kw)
+
+
+def test_add_and_serve_matches_reference(tmp_path):
+    a, params, x = _workload(0)
+    eng = _engine(tmp_path)
+    rep = eng.add_graph("g", a, params)
+    assert not rep.warm_start and rep.tune_seconds > 0
+    ref = np.asarray(gcn.forward(params, a, jnp.asarray(x)))
+    got = np.asarray(eng.infer("g", x))
+    np.testing.assert_allclose(got, ref, atol=1e-3)
+    # batch of perturbed requests: one jitted vmapped forward
+    xs = [x, x * 0.5, x + 0.1]
+    out = np.asarray(eng.serve_batch("g", xs))
+    assert out.shape == (3, N_NODES, N_CLASSES)
+    for i, xi in enumerate(xs):
+        np.testing.assert_allclose(
+            out[i], np.asarray(gcn.forward(params, a, jnp.asarray(xi))),
+            atol=1e-3)
+    with pytest.raises(ValueError, match="already registered"):
+        eng.add_graph("g", a, params)
+
+
+def test_restart_warm_start_zero_sweeps_zero_rebuilds(tmp_path, monkeypatch):
+    """Acceptance: with a populated store, a fresh engine (fresh process
+    simulated by cleared in-process caches) performs zero measured sweeps
+    and zero schedule rebuilds — asserted by intercepting the runner and
+    ``build_balanced_schedule``."""
+    a, params, x = _workload(1)
+    eng = _engine(tmp_path)
+    eng.add_graph("g", a, params)
+    ref = np.asarray(eng.infer("g", x))
+    assert eng.counters["store_misses"] == 1
+
+    registry.clear_caches()  # ≈ restart
+    monkeypatch.setattr(runner, "measure_candidate",
+                        lambda *a_, **k: pytest.fail("sweep on warm start"))
+    monkeypatch.setattr(schedule, "build_balanced_schedule",
+                        lambda *a_, **k: pytest.fail("rebuild on warm start"))
+    eng2 = _engine(tmp_path)
+    rep = eng2.add_graph("g", a, params)
+    assert rep.warm_start and rep.tune_seconds == 0.0
+    assert eng2.counters["store_hits"] == 1
+    assert eng2.counters["store_misses"] == 0
+    np.testing.assert_allclose(np.asarray(eng2.infer("g", x)), ref,
+                               atol=1e-5)
+
+
+def test_corrupted_store_entry_falls_back_to_retune(tmp_path):
+    a, params, x = _workload(2)
+    eng = _engine(tmp_path)
+    eng.add_graph("g", a, params)
+    ref = np.asarray(eng.infer("g", x))
+    st = TuningStore(tmp_path)
+    (entry,) = st.entries()
+    st.path(entry).write_bytes(b"not an npz at all")
+
+    registry.clear_caches()
+    eng2 = _engine(tmp_path)
+    with pytest.warns(UserWarning, match="corrupted"):
+        rep = eng2.add_graph("g", a, params)
+    assert not rep.warm_start          # re-tuned, did not crash
+    assert eng2.counters["store_misses"] == 1
+    np.testing.assert_allclose(np.asarray(eng2.infer("g", x)), ref,
+                               atol=1e-5)
+    assert st.entries()                # re-persisted for the next restart
+
+
+def test_lru_eviction_respects_byte_budget(tmp_path, monkeypatch):
+    """Acceptance: device-resident schedule bytes stay under the budget;
+    evicted graphs re-admit (re-upload, never re-build) with allclose
+    results."""
+    graphs = {f"g{i}": _workload(10 + i) for i in range(3)}
+    eng = _engine(tmp_path)
+    refs = {}
+    for gid, (a, params, x) in graphs.items():
+        eng.add_graph(gid, a, params)
+        refs[gid] = np.asarray(eng.infer(gid, x))
+    per_graph = max(r.bytes for r in eng._graphs.values())
+
+    registry.clear_caches()
+    budget = int(per_graph * 2.2)  # room for ~2 of 3
+    eng2 = _engine(tmp_path, device_budget_bytes=budget)
+    for gid, (a, params, x) in graphs.items():
+        eng2.add_graph(gid, a, params)
+        assert eng2.device_bytes_in_use <= budget
+    assert eng2.counters["evictions"] >= 1
+    assert 1 <= len(eng2.resident_graphs) < 3
+    # eviction drops device weights too (the budget meters both)
+    victim = next(r for r in eng2._graphs.values() if r.executor is None)
+    assert victim.params is None and victim.params_host is not None
+    assert all(r.bytes > sum(np.asarray(w).nbytes
+                             for w in r.params_host.values())
+               for r in eng2._graphs.values() if r.executor is not None)
+
+    # serving an evicted graph re-admits it — no schedule rebuild — and
+    # the budget still holds afterwards
+    monkeypatch.setattr(schedule, "build_balanced_schedule",
+                        lambda *a_, **k: pytest.fail("rebuild on re-admit"))
+    for gid, (a, params, x) in graphs.items():
+        np.testing.assert_allclose(np.asarray(eng2.infer(gid, x)),
+                                   refs[gid], atol=1e-5)
+        assert eng2.device_bytes_in_use <= budget
+    assert eng2.counters["readmissions"] >= 1
+    assert eng2.stats()["n_resident"] == len(eng2.resident_graphs)
+
+
+def test_budget_smaller_than_one_graph_keeps_active_resident(tmp_path):
+    a, params, x = _workload(20)
+    eng = _engine(tmp_path, device_budget_bytes=1)  # absurdly small
+    eng.add_graph("g", a, params)
+    # the active graph is never evicted, even over budget
+    assert eng.resident_graphs == ["g"]
+    out = np.asarray(eng.infer("g", x))
+    np.testing.assert_allclose(
+        out, np.asarray(gcn.forward(params, a, jnp.asarray(x))), atol=1e-3)
+
+
+def test_submit_flush_batches_per_graph(tmp_path):
+    g1, g2 = _workload(30), _workload(31)
+    eng = _engine(tmp_path)
+    eng.add_graph("g1", g1[0], g1[1])
+    eng.add_graph("g2", g2[0], g2[1])
+    with pytest.raises(KeyError):
+        eng.submit("nope", g1[2])
+    eng.submit("g1", g1[2])
+    eng.submit("g1", g1[2] * 0.5)
+    eng.submit("g2", g2[2])
+    before = eng.counters["batches"]
+    outs = eng.flush()
+    assert eng.counters["batches"] == before + 2   # one batch per graph
+    assert eng.counters["requests"] >= 3
+    assert outs["g1"].shape == (2, N_NODES, N_CLASSES)
+    assert outs["g2"].shape == (1, N_NODES, N_CLASSES)
+    np.testing.assert_allclose(
+        np.asarray(outs["g1"][1]),
+        np.asarray(gcn.forward(g1[1], g1[0], jnp.asarray(g1[2] * 0.5))),
+        atol=1e-3)
+    assert eng.flush() == {}           # queue drained
+    # malformed requests are rejected at submit time, never poisoning a
+    # later flush
+    with pytest.raises(ValueError, match="must be"):
+        eng.submit("g1", g1[2][:-1])
+
+
+def test_flush_failure_preserves_unserved_queues(tmp_path, monkeypatch):
+    g1, g2 = _workload(32), _workload(33)
+    eng = _engine(tmp_path)
+    eng.add_graph("g1", g1[0], g1[1])
+    eng.add_graph("g2", g2[0], g2[1])
+    eng.submit("g1", g1[2])
+    eng.submit("g2", g2[2])
+    orig = eng.serve_batch
+
+    def failing(graph_id, xs):
+        if graph_id == "g2":
+            raise RuntimeError("device fell over")
+        return orig(graph_id, xs)
+
+    monkeypatch.setattr(eng, "serve_batch", failing)
+    with pytest.raises(FlushError) as exc_info:
+        eng.flush()
+    err = exc_info.value
+    # nothing lost: g1's computed logits ride on the exception, g2's
+    # queue survived for retry
+    assert err.partial["g1"].shape == (1, N_NODES, N_CLASSES)
+    assert set(err.failures) == {"g2"}
+    assert "g1" not in eng._pending
+    assert len(eng._pending["g2"]) == 1
+    monkeypatch.undo()
+    outs = eng.flush()
+    assert outs["g2"].shape == (1, N_NODES, N_CLASSES)
+
+
+def test_cold_admission_does_not_pin_registry_caches(tmp_path):
+    """Regression: the cold autotune sweep measures device-resident
+    candidate executors through the registry; the engine must release them
+    so its byte budget is the only thing pinning device memory."""
+    a, params, x = _workload(60)
+    eng = _engine(tmp_path)
+    eng.add_graph("g", a, params)
+    fp = registry.graph_fingerprint(a)
+    for cache in (registry._EXECUTOR_CACHE, registry._SCHEDULE_CACHE):
+        leaked = [k for k in cache
+                  if (k[0] if isinstance(k[0], str) else k[0][0]) == fp]
+        assert leaked == []
+    # the engine still serves correctly from its own executor
+    np.testing.assert_allclose(
+        np.asarray(eng.infer("g", x)),
+        np.asarray(gcn.forward(params, a, jnp.asarray(x))), atol=1e-3)
+
+
+def test_remove_graph_releases_budget(tmp_path):
+    a, params, x = _workload(40)
+    eng = _engine(tmp_path)
+    eng.add_graph("g", a, params)
+    assert eng.device_bytes_in_use > 0
+    eng.remove_graph("g")
+    assert eng.device_bytes_in_use == 0
+    assert eng.graphs == []
+    with pytest.raises(KeyError):
+        eng.infer("g", x)
+
+
+def test_wrong_feature_rows_rejected(tmp_path):
+    a, params, x = _workload(50)
+    eng = _engine(tmp_path)
+    eng.add_graph("g", a, params)
+    with pytest.raises(ValueError, match="nodes"):
+        eng.serve_batch("g", [x[:-1]])
