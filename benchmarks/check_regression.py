@@ -1,0 +1,151 @@
+"""CI perf-regression gate: compare a bench-smoke JSON against the
+committed reference trajectory (``BENCH_spmm.json``).
+
+    python -m benchmarks.check_regression --smoke bench_ci.json \
+        [--reference BENCH_spmm.json] [--tolerance 3.0]
+
+Smoke graphs are tiny, so absolute latencies are meaningless; the gate
+checks only quantities that survive the size change, each with a generous
+tolerance so it trips on **order-of-magnitude** regressions (a broken
+cache, a dropped routing path, an accidentally-quadratic rebuild) and
+never on timer noise:
+
+* **crash gate** -- any ``*/FAILED`` row in the smoke JSON fails the PR
+  (the harness converts suite exceptions into those rows);
+* **warm-vs-cold admission speedup** -- dimensionless; the smoke ratio
+  must stay within ``tolerance x`` of the reference's *worst* per-graph
+  speedup. A regression here means store warm-starts stopped skipping
+  the sweep/rebuild;
+* **spmm latency** -- smoke ``autotune/<graph>`` measurements run on
+  *smaller* graphs than the reference's, so they must come in **under**
+  ``tolerance x`` the reference latency for the same graph; exceeding
+  the reference at a fraction of the size is an order-of-magnitude
+  executor regression.
+
+Exit code 0 = green, 1 = regression (messages on stdout, one per check).
+
+This file is on the CI lint job's ``ruff format --check`` ratchet list:
+keep every statement on one line under 88 columns (compose long messages
+from parts) so the formatter has no wrapping decisions to disagree with.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+_SPEEDUP_RE = re.compile(r"speedup=([0-9.]+)x")
+_WARM_RE = re.compile(r"serving/(\w+)/warm_start")
+
+_NO_SERVING = "MISSING: no serving/*/warm_start rows in the smoke JSON"
+_NO_TUNING = "MISSING: no autotune/* rows shared between smoke and reference"
+_GATE_BLIND = " -- the suite did not run; the gate cannot vouch for the PR"
+_NOT_SMOKE = "MISMATCH: --smoke JSON was not produced by run.py --smoke"
+_REF_SMOKE = "MISMATCH: the reference JSON is itself a smoke run"
+_REGIME = " -- the latency check needs smoke graphs smaller than reference"
+
+
+def _rows(payload: dict) -> dict:
+    return {r["name"]: r for r in payload.get("rows", [])}
+
+
+def _warm_speedups(rows: dict) -> dict:
+    """{graph: warm-vs-cold speedup} parsed from serving warm_start rows."""
+    out = {}
+    for name, row in rows.items():
+        m = _WARM_RE.fullmatch(name)
+        if not m:
+            continue
+        sp = _SPEEDUP_RE.search(row.get("derived", ""))
+        if sp:
+            out[m.group(1)] = float(sp.group(1))
+    return out
+
+
+def check(smoke: dict, reference: dict, tolerance: float) -> list:
+    """Every failed gate as a human-readable message (empty = green)."""
+    problems = []
+    s_rows, r_rows = _rows(smoke), _rows(reference)
+
+    # 0. regime gate: check #3's under-the-reference reasoning only holds
+    #    when the smoke run really used the tiny preset and the reference
+    #    really is full-scale (run.py stamps the flag into the JSON)
+    if not smoke.get("smoke"):
+        problems.append(_NOT_SMOKE + _REGIME)
+    if reference.get("smoke"):
+        problems.append(_REF_SMOKE + _REGIME)
+
+    # 1. crash gate
+    for name in sorted(s_rows):
+        if not name.endswith("/FAILED"):
+            continue
+        detail = s_rows[name].get("derived", "")
+        suite = name.split("/")[0]
+        problems.append(f"CRASH: benchmark suite {suite!r} raised: {detail}")
+
+    # 2. warm-vs-cold admission speedup (dimensionless)
+    s_warm = _warm_speedups(s_rows)
+    r_warm = _warm_speedups(r_rows)
+    if not s_warm:
+        problems.append(_NO_SERVING + _GATE_BLIND)
+    elif r_warm:
+        floor = min(r_warm.values()) / tolerance
+        worst = min(s_warm, key=s_warm.get)
+        if s_warm[worst] < floor:
+            got = f"warm-start speedup {s_warm[worst]:.0f}x ({worst})"
+            ref = f"{min(r_warm.values()):.0f}x reference worst"
+            want = f"floor {floor:.0f}x ({ref} / tolerance {tolerance:g})"
+            why = "store warm-starts are no longer skipping the sweep"
+            problems.append(f"REGRESSION: {got} fell below {want} -- {why}")
+
+    # 3. spmm latency: smoke graphs are smaller, so smoke us/spmm must be
+    #    under tolerance x the reference for the same graph
+    compared = 0
+    for name in sorted(s_rows):
+        if not name.startswith("autotune/") or name not in r_rows:
+            continue
+        compared += 1
+        ref_us = r_rows[name]["us_per_call"]
+        ceiling = ref_us * tolerance
+        smoke_us = s_rows[name]["us_per_call"]
+        if smoke_us > ceiling:
+            got = f"{name} at {smoke_us:.0f}us/spmm on a smoke-sized graph"
+            ref = f"{tolerance:g}x the full-scale reference {ref_us:.0f}us"
+            problems.append(f"REGRESSION: {got} exceeds {ceiling:.0f}us ({ref})")
+    if not compared:
+        problems.append(_NO_TUNING + _GATE_BLIND)
+    return problems
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    smoke_help = "bench JSON produced by run.py --smoke --json"
+    ap.add_argument("--smoke", required=True, help=smoke_help)
+    ref_help = "committed full-scale reference JSON"
+    ap.add_argument("--reference", default="BENCH_spmm.json", help=ref_help)
+    tol_help = "slack: trip on order-of-magnitude regressions only"
+    ap.add_argument("--tolerance", type=float, default=3.0, help=tol_help)
+    args = ap.parse_args()
+
+    with open(args.smoke) as f:
+        smoke = json.load(f)
+    with open(args.reference) as f:
+        reference = json.load(f)
+    problems = check(smoke, reference, args.tolerance)
+    if problems:
+        for p in problems:
+            print(p)
+        n = len(problems)
+        tol = f"tolerance {args.tolerance:g}x vs {args.reference}"
+        print(f"\nperf gate: {n} check(s) failed ({tol})")
+        return 1
+    warm = _warm_speedups(_rows(smoke))
+    summary = {g: round(v) for g, v in sorted(warm.items())}
+    print(f"perf gate: OK -- warm-start speedups {summary},")
+    print(f"spmm latencies within {args.tolerance:g}x of {args.reference}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,17 +1,30 @@
 """Shared benchmark plumbing: dataset loading (cached), the four-SpMM GCN
 cycle model (paper §III.D: PEs allocated ∝ kernel ops, kernels pipelined),
-and CSV row helpers."""
+CSV row helpers, and the ``--smoke`` size preset (``BENCH_SMOKE=1``)."""
 from __future__ import annotations
 
 import functools
+import os
 
 import numpy as np
 
 from repro.core import autotuner
 from repro.graphs import synth
 
-# full scale where tractable; reddit scaled (23M-edge build is minutes)
-BENCH_SCALE = {"cora": 1, "citeseer": 1, "pubmed": 1, "nell": 1, "reddit": 4}
+#: ``benchmarks/run.py --smoke`` sets BENCH_SMOKE=1 before importing the
+#: suites: every dataset shrinks to a tiny synthetic preset so the full
+#: measurement *pipeline* runs in CI minutes. Smoke numbers gate only
+#: size-insensitive ratios (see benchmarks/check_regression.py) — absolute
+#: latencies at these scales mean nothing.
+SMOKE = os.environ.get("BENCH_SMOKE", "") == "1"
+
+if SMOKE:
+    BENCH_SCALE = {"cora": 8, "citeseer": 8, "pubmed": 16, "nell": 64,
+                   "reddit": 128}
+else:
+    # full scale where tractable; reddit scaled (23M-edge build is minutes)
+    BENCH_SCALE = {"cora": 1, "citeseer": 1, "pubmed": 1, "nell": 1,
+                   "reddit": 4}
 X2_DENSITY = {"cora": 0.78, "citeseer": 0.891, "pubmed": 0.776,
               "nell": 0.864, "reddit": 0.60}
 

@@ -3,7 +3,6 @@ roofline with dominant bottleneck and MODEL_FLOPS ratio."""
 from __future__ import annotations
 
 import json
-import time
 from pathlib import Path
 
 from repro import configs as cfgs

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 
@@ -21,7 +22,17 @@ def main() -> None:
     ap.add_argument("--pe", type=int, default=1024)
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as machine-readable JSON")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny synthetic size preset (CI bench-smoke): "
+                         "exercises the full measurement pipeline in "
+                         "minutes; gate only ratios, never absolutes")
     args = ap.parse_args()
+
+    if args.smoke:
+        # must land before the suite imports below: benchmarks.common
+        # freezes its dataset scales at import time
+        os.environ["BENCH_SMOKE"] = "1"
+        print("[smoke] tiny synthetic preset active")
 
     from benchmarks import (convergence, latency, moe_imbalance, order_ops,
                             roofline_table, scaling, schedule_tuning,
@@ -63,6 +74,7 @@ def main() -> None:
         payload = {
             "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
             "backend": jax.default_backend(),
+            "smoke": bool(args.smoke),
             "rows": [{"name": name, "us_per_call": round(float(us), 1),
                       "derived": derived} for name, us, derived in rows],
         }

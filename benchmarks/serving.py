@@ -10,23 +10,46 @@ tuning store:
   upload only, zero sweeps, zero rebuilds;
 * **multi-graph batched throughput** — every resident graph serving a
   batch of perturbed-feature requests through one jitted vmapped forward
-  per graph.
+  per graph;
+* **deadline-aware serving** — ``submit(..., deadline_s=)`` + a ``poll``
+  loop instead of manual ``flush``: per-request latency and the
+  deadline-miss rate under a tight SLA;
+* **mesh throughput** — an 8-way forced host-platform mesh (subprocess,
+  same harness as the sharded/distributed suites) serving the same
+  multi-graph workload with graphs bin-packed across devices, vs the
+  single-device engine above.
 """
 from __future__ import annotations
 
 import shutil
+import subprocess
+import sys
 import tempfile
 import time
+from pathlib import Path
 
 import numpy as np
 
+from benchmarks import common
 from repro.core import gcn
 from repro.graphs import synth
 from repro.tuning import registry
 
-GRAPHS = {"cora": 2, "citeseer": 2, "pubmed": 8}
-BATCH = 8
-N_FLUSHES = 5
+if common.SMOKE:
+    GRAPHS = {"cora": 8, "citeseer": 8, "pubmed": 32}
+    BATCH = 4
+    N_FLUSHES = 2
+else:
+    GRAPHS = {"cora": 2, "citeseer": 2, "pubmed": 8}
+    BATCH = 8
+    N_FLUSHES = 5
+
+# the SLA tracks the workload size: full-scale pubmed batches take a few
+# hundred ms on CPU, so a 250 ms deadline would measure misses-by-design
+DEADLINE_S = 0.25 if common.SMOKE else 1.5
+N_MESH_DEVICES = 8
+
+_SRC = str(Path(__file__).resolve().parents[1] / "src")
 
 
 def _workloads():
@@ -39,6 +62,117 @@ def _workloads():
         params = gcn.init_params(cfg, jax.random.PRNGKey(0))
         out[name] = (ds, params)
     return out
+
+
+def _run_deadline(eng, feats) -> list:
+    """Deadline-driven serving: every request carries a tight SLA; the
+    poll loop auto-flushes queues as their deadlines come due."""
+    rows = []
+    eng.reset_stats()  # isolate this section's latency/miss numbers
+    rng = np.random.default_rng(1)
+    n_rounds = 2 * N_FLUSHES
+    t0 = time.perf_counter()
+    n_req = 0
+    for _ in range(n_rounds):
+        for name, x in feats.items():
+            for _ in range(BATCH):
+                mask = (rng.random(x.shape) < 0.9).astype(np.float32)
+                eng.submit(name, x * mask, deadline_s=DEADLINE_S)
+                n_req += 1
+        deadline_at = time.monotonic() + DEADLINE_S
+        while eng.stats()["pending_requests"]:
+            eng.poll()
+            if time.monotonic() > deadline_at + 1.0:
+                eng.flush()  # never hang the bench on a scheduling bug
+    dt = time.perf_counter() - t0
+    st = eng.stats()
+    judged = st["deadline_met"] + st["deadline_misses"]
+    miss_rate = st["deadline_misses"] / max(1, judged)
+    print(f"deadline serving: {n_req} requests (SLA {DEADLINE_S * 1e3:.0f}ms)"
+          f" in {dt:.2f}s = {n_req / dt:.1f} req/s; "
+          f"latency mean {st['latency_us_mean'] / 1e3:.1f}ms "
+          f"max {st['latency_us_max'] / 1e3:.1f}ms; "
+          f"misses {st['deadline_misses']}/{judged} ({miss_rate:.1%})")
+    rows.append(("serving/deadline/latency", st["latency_us_mean"],
+                 f"sla_ms={DEADLINE_S * 1e3:.0f};"
+                 f"max_us={st['latency_us_max']:.0f};"
+                 f"req_per_s={n_req / dt:.1f}"))
+    rows.append(("serving/deadline/miss_rate", miss_rate * 1e2,
+                 f"misses={st['deadline_misses']};served={judged}"))
+    return rows
+
+
+_MESH_SCRIPT = r"""
+import os, time
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(n_dev)d"
+os.environ["BENCH_SMOKE"] = %(smoke)r
+import sys
+sys.path.insert(0, %(src)r)
+sys.path.insert(0, %(root)r)
+import numpy as np, jax
+from benchmarks import serving as bench_serving
+from repro.serving.gcn_engine import GCNServingEngine
+
+loads = bench_serving._workloads()
+eng = GCNServingEngine(store_root=%(store)r, devices=%(n_dev)d,
+                       autotune_iters=2)
+for name, (ds, params) in loads.items():
+    rep = eng.add_graph(name, ds.adj, params)
+    print("PLACED %%s kind=%%s dev=%%s" %% (
+        name, rep.placement.kind, rep.placement.device_index))
+feats = {name: np.asarray(ds.features, np.float32)
+         for name, (ds, params) in loads.items()}
+rng = np.random.default_rng(0)
+
+def one_flush():
+    for name, x in feats.items():
+        for _ in range(bench_serving.BATCH):
+            mask = (rng.random(x.shape) < 0.9).astype(np.float32)
+            eng.submit(name, x * mask)
+    for v in eng.flush().values():
+        jax.block_until_ready(v)
+
+one_flush()  # warmup/compile
+t0 = time.perf_counter()
+for _ in range(bench_serving.N_FLUSHES):
+    one_flush()
+dt = time.perf_counter() - t0
+n_req = bench_serving.N_FLUSHES * bench_serving.BATCH * len(feats)
+n_distinct = len({r.executor.device for r in eng._graphs.values()
+                  if r.executor is not None and r.executor.device
+                  is not None})
+print("ROW mesh_throughput %%f req_per_s=%%.1f;devices=%%d;"
+      "distinct_placements=%%d"
+      %% (dt / n_req * 1e6, n_req / dt, %(n_dev)d, n_distinct))
+"""
+
+
+def _run_mesh(root) -> list:
+    """Multi-device engine throughput on a forced 8-way host mesh. The
+    subprocess reuses the store the single-device section populated only
+    for its own graphs' *single-device* keys — on an 8-dev mesh the small
+    graphs still take the single route, so admissions warm-start."""
+    rows = []
+    script = _MESH_SCRIPT % dict(
+        n_dev=N_MESH_DEVICES, src=_SRC,
+        root=str(Path(__file__).resolve().parents[1]),
+        store=str(root), smoke="1" if common.SMOKE else "")
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, timeout=900)
+    if r.returncode != 0:
+        raise RuntimeError(f"mesh serving subprocess failed: "
+                           f"{r.stderr[-800:]}")
+    for line in r.stdout.splitlines():
+        if line.startswith("PLACED "):
+            print(line)
+        if not line.startswith("ROW "):
+            continue
+        _, name, us, derived = line.split(" ", 3)
+        print(f"mesh throughput ({N_MESH_DEVICES} host devices): "
+              f"{float(us):.0f} us/req  {derived}")
+        rows.append((f"serving/mesh{N_MESH_DEVICES}/{name}", float(us),
+                     derived))
+    return rows
 
 
 def run() -> list:
@@ -100,6 +234,9 @@ def run() -> list:
         rows.append(("serving/batched_throughput", dt / n_req * 1e6,
                      f"req_per_s={rps:.1f};batch={BATCH};"
                      f"graphs={len(feats)}"))
+
+        rows.extend(_run_deadline(eng2, feats))
+        rows.extend(_run_mesh(root))
     finally:
         shutil.rmtree(root, ignore_errors=True)
     return rows

@@ -12,7 +12,6 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import configs
 from repro.core import moe_balance

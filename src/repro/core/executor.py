@@ -87,28 +87,37 @@ def select_routing(k: int, cb: int, r: int, ktile: int = 128) -> str:
 
 # step-major device copies of schedule arrays, shared between
 # ScheduleExecutor and the Pallas kernel wrapper so one schedule is
-# uploaded once no matter who consumes it. Identity-keyed, bounded LRU.
-_DEVICE_STEPS: "OrderedDict[int, tuple]" = OrderedDict()
+# uploaded once no matter who consumes it. Keyed on (schedule identity,
+# placement device), bounded LRU — the serving tier places executors on
+# specific mesh devices, and each placement owns its own copy.
+_DEVICE_STEPS: "OrderedDict[tuple, tuple]" = OrderedDict()
 _DEVICE_STEPS_CAP = 32
 
 
-def device_step_arrays(sched: Schedule) -> dict:
+def _placed(x, device):
+    """Upload ``x`` to ``device`` (None = jax's default placement)."""
+    if device is None:
+        return jnp.asarray(x)
+    return jax.device_put(jnp.asarray(x), device)
+
+
+def device_step_arrays(sched: Schedule, device=None) -> dict:
     """Step-major jnp arrays of one schedule — ``val``/``lrow``/``lcol``
     reshaped [n_steps, K], ``win``/``cblk`` per step, ``row_map`` — uploaded
-    to device once per schedule instance and memoized (bounded LRU)."""
-    key = id(sched)
+    once per (schedule instance, device) and memoized (bounded LRU)."""
+    key = (id(sched), device)
     hit = _DEVICE_STEPS.get(key)
     if hit is not None and hit[0] is sched:
         _DEVICE_STEPS.move_to_end(key)
         return hit[1]
     n_steps, k = sched.n_steps, sched.nnz_per_step
     arrs = {
-        "val": jnp.asarray(sched.val.reshape(n_steps, k)),
-        "lrow": jnp.asarray(sched.local_row.reshape(n_steps, k)),
-        "lcol": jnp.asarray(sched.local_col.reshape(n_steps, k)),
-        "win": jnp.asarray(sched.win_id),
-        "cblk": jnp.asarray(sched.col_block),
-        "row_map": jnp.asarray(sched.row_map),
+        "val": _placed(sched.val.reshape(n_steps, k), device),
+        "lrow": _placed(sched.local_row.reshape(n_steps, k), device),
+        "lcol": _placed(sched.local_col.reshape(n_steps, k), device),
+        "win": _placed(sched.win_id, device),
+        "cblk": _placed(sched.col_block, device),
+        "row_map": _placed(sched.row_map, device),
     }
     _DEVICE_STEPS[key] = (sched, arrs)
     if len(_DEVICE_STEPS) > _DEVICE_STEPS_CAP:
@@ -117,13 +126,15 @@ def device_step_arrays(sched: Schedule) -> dict:
 
 
 def release_device_steps(sched: Schedule) -> None:
-    """Drop the memoized device copy of one schedule's step arrays.
+    """Drop every memoized device copy of one schedule's step arrays.
 
     The serving engine's eviction and ``tuning.registry.release_graph``
     call this so a one-hot executor's uploads don't outlive their owner —
     without it the identity-keyed LRU above keeps the arrays resident
     until 32 unrelated schedules displace them."""
-    _DEVICE_STEPS.pop(id(sched), None)
+    sid = id(sched)
+    for key in [k for k in _DEVICE_STEPS if k[0] == sid]:
+        del _DEVICE_STEPS[key]
 
 
 def _gather_slots(sched: Schedule):
@@ -152,10 +163,23 @@ class _ExecutorBase:
     sched: Schedule
     routing: str
     bf16_accumulate: bool = False
+    #: placement handle: the specific mesh device this executor's arrays
+    #: live on (None = jax's default device; always None for the sharded
+    #: executor, whose mesh is the placement).
+    device = None
 
     @property
     def _acc_dtype(self):
         return jnp.bfloat16 if self.bf16_accumulate else jnp.float32
+
+    def commit(self, x: jax.Array) -> jax.Array:
+        """Commit a dense operand to this executor's placement device, so
+        the jitted closures run where the schedule arrays already live (an
+        uncommitted operand would pull the computation — and a copy of
+        every captured array — onto jax's default device)."""
+        if self.device is None:
+            return x
+        return jax.device_put(x, self.device)
 
     def spmm(self, b: jax.Array) -> jax.Array:
         """C = A @ b through the device-resident converged schedule."""
@@ -164,7 +188,7 @@ class _ExecutorBase:
                 f"operand has {b.shape[0]} rows; schedule expects "
                 f"{self.sched.shape[1]} (A is {self.sched.shape}) — XLA "
                 "would silently clamp gather indices otherwise")
-        return self._spmm(b)
+        return self._spmm(self.commit(b))
 
     __call__ = spmm
 
@@ -175,7 +199,9 @@ class _ExecutorBase:
             raise ValueError(
                 f"features have {x.shape[0]} rows; schedule expects "
                 f"{self.sched.shape[1]} (A is {self.sched.shape})")
-        return self._forward(params, x)
+        if self.device is not None:
+            params = jax.tree.map(self.commit, params)
+        return self._forward(params, self.commit(x))
 
     @property
     def utilization(self) -> float:
@@ -194,19 +220,27 @@ class _ExecutorBase:
 class ScheduleExecutor(_ExecutorBase):
     """Device-resident executor of one converged AWB schedule.
 
-    Construction uploads every schedule array to the default device once;
-    the jitted closures capture those arrays, so repeated ``spmm``/
-    ``forward`` calls move only the dense operand. ``device_bytes`` reports
-    the resident footprint — what the serving engine's LRU budget meters.
+    Construction uploads every schedule array to one device once; the
+    jitted closures capture those arrays, so repeated ``spmm``/``forward``
+    calls move only the dense operand. ``device_bytes`` reports the
+    resident footprint — what the serving engine's LRU budget meters.
+
+    ``device`` is the placement handle: pass a specific ``jax.Device`` to
+    pin the schedule arrays (and therefore the computation — operands are
+    committed there by ``spmm``/``forward``) to one device of a mesh; the
+    serving tier's ``MeshPlacer`` hands each graph such a handle. ``None``
+    keeps jax's default placement.
     """
 
     def __init__(self, sched: Schedule, *, ktile: int = 128,
                  routing: Optional[str] = None,
                  bf16_accumulate: bool = False,
-                 slot_chunk: int = 1 << 18):
+                 slot_chunk: int = 1 << 18,
+                 device=None):
         self.sched = sched
         self.ktile = ktile
         self.bf16_accumulate = bf16_accumulate
+        self.device = device
         k = sched.nnz_per_step
         r = sched.rows_per_window
         cb = sched.cols_per_block
@@ -225,9 +259,9 @@ class ScheduleExecutor(_ExecutorBase):
             self._n_chunks = (s_total + pad) // self._slot_chunk
 
             def _chunked(x, fill):
-                return jnp.asarray(
+                return _placed(
                     np.concatenate([x, np.full(pad, fill, x.dtype)])
-                    .reshape(self._n_chunks, self._slot_chunk))
+                    .reshape(self._n_chunks, self._slot_chunk), device)
 
             self._gcol = _chunked(gcol, 0)
             self._tgt = _chunked(tgt, 0)
@@ -236,8 +270,8 @@ class ScheduleExecutor(_ExecutorBase):
                                     + self._val.nbytes)
         else:
             # step-major arrays (shared with the Pallas kernel wrapper —
-            # one upload per schedule no matter who consumes it)
-            self._steps = device_step_arrays(sched)
+            # one upload per (schedule, device) no matter who consumes it)
+            self._steps = device_step_arrays(sched, device)
             self.device_bytes = int(sum(v.nbytes
                                         for v in self._steps.values()))
 

@@ -8,10 +8,8 @@ code lowers for the dry-run. ``default_backend()`` picks automatically.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import csc as fmt
 from repro.core import spmm as spmm_ref_mod

@@ -13,7 +13,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs as cfgs
 from repro.models import transformer as tr
@@ -37,7 +36,6 @@ def main(argv=None):
     if args.ckpt_dir:
         mgr = CheckpointManager(args.ckpt_dir)
         # train.py checkpoints store (params, opt_state); restore params only
-        import jax as _jax
         opt_template = None
         try:
             from repro.training import optimizer as opt_mod

@@ -6,7 +6,6 @@ the same objects serve real execution (CPU/TPU) and the multi-pod dry-run
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -14,7 +13,6 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro import configs as cfgs
 from repro.models import transformer as tr
 from repro.sharding import partition
 from repro.sharding.hints import hints

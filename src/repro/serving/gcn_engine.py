@@ -1,29 +1,42 @@
-"""Multi-graph GCN serving engine on the tuning store.
+"""Mesh-wide, deadline-aware GCN serving engine on the tuning store.
 
 The paper's workload is inference on a fixed graph; a serving system holds
 *many* such graphs — one converged configuration each — and rotates them
-through bounded device memory. ``GCNServingEngine`` composes the tuning
-subsystem into that shape:
+through bounded device memory across a mesh. ``GCNServingEngine`` composes
+the tuning subsystem into that shape:
 
 * **Warm starts.** ``add_graph`` keys the ``TuningStore`` by graph
-  fingerprint; a hit deserializes the ``TunedConfig`` *and* the prebuilt
-  schedule arrays, so a process restart performs **zero measured sweeps and
-  zero schedule rebuilds** — deserialize, upload, serve. A miss runs the
-  measured sweep once (single-device, pruned by the paper's cycle model)
-  and persists the winner, so the *next* restart is warm. A corrupted store
-  entry is dropped and re-tuned, never crashed on.
-* **Batching.** Same-graph feature requests batch into **one jitted
-  forward**: the executor's whole-GCN body under ``jax.vmap`` over the
-  request axis — one dispatch for the whole batch instead of one per
-  request. ``submit``/``flush`` accumulate a per-graph queue;
-  ``serve_batch`` is the direct path.
+  fingerprint *and mesh route*; a hit deserializes the ``TunedConfig`` and
+  the prebuilt schedule arrays, so a process restart performs **zero
+  measured sweeps and zero schedule rebuilds** — deserialize, upload,
+  serve. A miss runs the measured sweep once and persists the winner
+  (store keys already carry the mesh descriptor, so single-device and
+  sharded entries coexist). A corrupted entry is dropped and re-tuned,
+  never crashed on.
+* **Mesh placement.** A ``serving.placement.MeshPlacer`` bin-packs each
+  graph onto one device of a 1-D mesh (worst-fit by ``device_bytes``
+  footprint, per-device LRU byte budgets — the paper's per-PE workload
+  balancing at graph granularity). Graphs whose footprint exceeds any
+  single device's budget route to a ``ShardedScheduleExecutor`` spanning
+  the mesh. When eviction pressure concentrates on one device, the placer
+  nominates a migration and the engine moves a resident graph to the
+  coolest device (runtime rebalancing, lifted to placement).
+* **Deadline-aware batching.** ``submit(graph_id, x, deadline_s=...)``
+  queues a request; queues auto-flush when a graph reaches the
+  ``max_batch`` threshold, and ``poll()`` serves every queue whose
+  earliest deadline is due (earliest-deadline-first across graphs; all
+  batches are dispatched before any result is awaited, so batches placed
+  on different devices run concurrently). Each graph's queue serves
+  through **one jitted vmapped whole-GCN forward** — bit-identical to the
+  direct ``serve_batch`` path. Per-request latency and deadline
+  hits/misses surface in ``stats()``; ``flush()`` remains the serve-
+  everything-now path, in deterministic EDF order.
 * **Bounded residency.** Each resident graph's device footprint — its
   executor's schedule arrays (``device_bytes``) *plus* its uploaded
-  weights — counts against ``device_budget_bytes``. Admission beyond the
-  budget evicts least-recently-served graphs: device arrays, weights, and
-  jitted closures are dropped; the host-side schedule, config, and weight
-  copies are kept, so re-admission is a re-upload — still no rebuild, no
-  sweep — and thousands of graphs can rotate through a fixed HBM budget.
+  weights — counts against its device's budget. Admission beyond the
+  budget evicts least-recently-served graphs on that device; the host-side
+  schedule, config, and weight copies are kept, so re-admission is a
+  re-upload — still no rebuild, no sweep.
 
 The engine deliberately bypasses ``tuning.registry``'s unbounded
 fingerprint caches for its executors — eviction must actually free device
@@ -41,19 +54,35 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import csc as fmt
-from repro.core.executor import ScheduleExecutor, release_device_steps
+from repro.core.executor import (ScheduleExecutor, ShardedScheduleExecutor,
+                                 release_device_steps)
 from repro.core.schedule import Schedule
-from repro.tuning import registry, runner
+from repro.serving.placement import SHARDED, MeshPlacer, Placement
+from repro.tuning import registry, runner, space
 from repro.tuning.space import TunedConfig
 from repro.tuning.store import TuningStore
 
+#: pre-tune footprint estimate: ~16 bytes per non-zero covers the gather
+#: path's 12 bytes/slot plus schedule padding slack — only used to route
+#: giant graphs to the sharded path before their schedule exists.
+_BYTES_PER_NNZ_EST = 16
+
+#: deadline dispatch headroom: a queue is due at
+#: ``deadline - SAFETY * est - FLOOR``. Dispatching at exactly
+#: ``deadline - est`` lands completions *on* the deadline, where any
+#: jitter is a miss; 50% service-time headroom plus a small floor turns
+#: borderline batches into met deadlines at a modest batching cost.
+_SVC_SAFETY = 1.5
+_SVC_FLOOR_S = 0.010
+
 
 class FlushError(RuntimeError):
-    """One or more per-graph batches failed during ``flush``.
+    """One or more per-graph batches failed during a flush/poll.
 
     Nothing is lost: ``partial`` holds the successfully served
     ``{graph_id: logits}``, ``failures`` the ``{graph_id: exception}``,
-    and every failed graph's queue was restored for retry."""
+    and every failed graph's queue was restored (at the front, original
+    order) for retry."""
 
     def __init__(self, failures, partial):
         super().__init__(
@@ -72,6 +101,16 @@ class AdmitReport:
     tune_seconds: float       # 0.0 on the warm path
     device_bytes: int         # resident footprint (schedule + weights)
     config: TunedConfig
+    placement: Placement      # which device(s) the graph serves from
+
+
+@dataclasses.dataclass
+class _Request:
+    """One queued inference request."""
+    rid: int
+    x: jax.Array
+    submit_t: float                    # monotonic seconds
+    deadline: Optional[float]          # absolute monotonic; None = no SLA
 
 
 @dataclasses.dataclass
@@ -82,15 +121,31 @@ class _Resident:
     sched: Schedule                      # host copy — survives eviction
     params_host: dict                    # host copy — survives eviction
     params: Optional[dict] = None        # device-resident weight tree
-    executor: Optional[ScheduleExecutor] = None
+    #: ScheduleExecutor or ShardedScheduleExecutor (None while evicted)
+    executor: Optional[object] = None
     fwd: Optional[callable] = None       # jitted vmapped whole-GCN forward
     bytes: int = 0                       # schedule + weight device bytes
 
 
-class GCNServingEngine:
-    """Serve batched GCN inference over many resident graphs concurrently.
+def _earliest_deadline(queue: List[_Request]) -> float:
+    """Earliest deadline in a queue (+inf when no request carries one) —
+    the EDF sort key across graphs."""
+    dls = [r.deadline for r in queue if r.deadline is not None]
+    return min(dls) if dls else float("inf")
 
-    ``device_budget_bytes`` bounds the total device-resident schedule
+
+class GCNServingEngine:
+    """Serve batched GCN inference over many resident graphs on a mesh.
+
+    ``devices`` selects the mesh: None (default) serves on jax's first
+    device exactly like the old single-device engine; an int ``n`` takes
+    ``jax.devices()[:n]``; a list of ``jax.Device`` uses those. With a
+    multi-device mesh, each admitted graph is bin-packed onto one device
+    (``serving.placement.MeshPlacer``), and graphs too big for any single
+    device's ``device_budget_bytes`` serve through a
+    ``ShardedScheduleExecutor`` spanning the whole mesh.
+
+    ``device_budget_bytes`` bounds each device's resident schedule+weight
     bytes; the graph being served is always kept resident, even if it
     alone exceeds the budget (a budget smaller than one graph cannot be
     honoured — it degrades to one-graph-at-a-time rotation).
@@ -99,142 +154,261 @@ class GCNServingEngine:
     def __init__(self, *, store: Optional[TuningStore] = None,
                  store_root=None,
                  device_budget_bytes: int = 64 << 20,
+                 devices=None,
+                 max_batch: int = 32,
+                 rebalance_after: int = 4,
                  autotune_iters: int = 3, autotune_warmup: int = 1,
                  autotune_kwargs: Optional[dict] = None):
         self.store = store if store is not None else TuningStore(store_root)
         self.device_budget_bytes = int(device_budget_bytes)
+        self.max_batch = int(max_batch)
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if devices is None:
+            self.devices = [jax.devices()[0]]
+        elif isinstance(devices, int):
+            avail = jax.devices()
+            if not 1 <= devices <= len(avail):
+                raise ValueError(
+                    f"devices={devices} but this host exposes "
+                    f"{len(avail)} device(s)")
+            self.devices = list(avail[:devices])
+        else:
+            self.devices = list(devices)
+        self.n_devices = len(self.devices)
+        if self.n_devices > 1:
+            from jax.sharding import Mesh
+
+            self._mesh = Mesh(np.asarray(self.devices), ("dev",))
+        else:
+            self._mesh = None
+        self.placer = MeshPlacer(self.n_devices, self.device_budget_bytes,
+                                 rebalance_after=rebalance_after)
         self._autotune_kwargs = dict(autotune_kwargs or {})
         reserved = {"max_devices", "store"} & set(self._autotune_kwargs)
         if reserved:
             raise ValueError(
                 f"autotune_kwargs may not override {sorted(reserved)}: the "
-                "engine pins max_devices=1 and its own store")
+                "engine pins the mesh route and its own store")
         self._autotune_kwargs.setdefault("iters", autotune_iters)
         self._autotune_kwargs.setdefault("warmup", autotune_warmup)
         self._graphs: "OrderedDict[str, _Resident]" = OrderedDict()
-        self._pending: Dict[str, List[jax.Array]] = {}
+        self._pending: Dict[str, List[_Request]] = {}
+        #: batches completed by a threshold-triggered auto-flush, awaiting
+        #: pickup by the next poll()/flush()
+        self._ready: Dict[str, List[jax.Array]] = {}
+        self._svc_ewma: Dict[str, float] = {}  # per-graph batch seconds
+        self._next_rid = 0
         self.device_bytes_in_use = 0
+        self._lat_n, self._lat_total, self._lat_max = 0, 0.0, 0.0
         self.counters = {"store_hits": 0, "store_misses": 0,
                          "evictions": 0, "readmissions": 0,
-                         "batches": 0, "requests": 0}
+                         "rebalances": 0, "batches": 0, "requests": 0,
+                         "deadline_met": 0, "deadline_misses": 0}
 
     # ---- admission ---------------------------------------------------------
+
+    def _estimate_bytes(self, a: fmt.COO, params: dict) -> int:
+        """Pre-tune footprint estimate (schedule + weights) — routes giant
+        graphs to the sharded path before any sweep runs."""
+        nnz = int(np.asarray(a.row).shape[0])
+        weights = sum(int(np.asarray(w).nbytes)
+                      for w in jax.tree.leaves(params))
+        return nnz * _BYTES_PER_NNZ_EST + weights
+
+    def _sharded_autotune_kwargs(self, a: fmt.COO) -> dict:
+        """The autotune kwargs of the sharded route: every sweep candidate
+        pinned to the full mesh width (a caller-supplied sweep keeps its
+        geometries; the default uses the sharded gather candidates)."""
+        kw = dict(self._autotune_kwargs)
+        base = kw.pop("sweep", None)
+        if base is None:
+            kw["sweep"] = space.sharded_sweep(a, (self.n_devices,))
+        else:
+            kw["sweep"] = [dict(c, n_devices=self.n_devices) for c in base]
+        return kw
 
     def add_graph(self, graph_id: str, a: fmt.COO, params: dict, *,
                   kdim: Optional[int] = None) -> AdmitReport:
         """Register a graph + trained weights and make it servable.
 
-        ``kdim`` is the tuning probe width; it defaults to the first
-        layer's output width (the width every A×(XW) product in the
-        forward actually sees first)."""
+        The routing decision tree: estimate the footprint; if it exceeds
+        one device's budget on a multi-device mesh, the graph takes the
+        **sharded route** (store key + sweep at the full mesh width),
+        otherwise the **single-device route** (store key + sweep pinned to
+        one device, then bin-packed placement). Either route warm-starts
+        from the store when populated. ``kdim`` is the tuning probe width;
+        it defaults to the first layer's output width."""
         if graph_id in self._graphs:
             raise ValueError(f"graph {graph_id!r} already registered")
         if kdim is None:
             kdim = int(np.asarray(params["w0"]).shape[1])
         fp = registry.graph_fingerprint(a)
-        # the engine serves single-device executors: pin the 1-device sweep
-        # so the store key and the tuned mesh agree (and fold any custom
-        # sweep identity exactly as autotune will)
-        key = runner.store_key(self.store, fp, kdim, max_devices=1,
-                               **self._autotune_kwargs)
+        est = self._estimate_bytes(a, params)
+        sharded_route = (est > self.device_budget_bytes
+                         and self.n_devices > 1)
+        if sharded_route:
+            tune_kw = self._sharded_autotune_kwargs(a)
+            max_devices = self.n_devices
+        else:
+            tune_kw = self._autotune_kwargs
+            max_devices = 1
+        key = runner.store_key(self.store, fp, kdim,
+                               max_devices=max_devices, **tune_kw)
         t0 = time.perf_counter()
         entry = self.store.load(key)
         warm = entry is not None
         if warm:
             self.counters["store_hits"] += 1
             cfg, sched = entry
-            if cfg.n_devices is not None:
-                raise ValueError(
-                    f"GCNServingEngine serves single-device executors, but "
-                    f"the stored config for {graph_id!r} requests "
-                    f"n_devices={cfg.n_devices}")
+            self._check_route(graph_id, cfg, sharded_route, "stored")
             tune_s = 0.0
-        executor = None
-        if not warm:
+        else:
             self.counters["store_misses"] += 1
-            cfg = runner.autotune(a, (a.shape[1], kdim), max_devices=1,
-                                  store=self.store, **self._autotune_kwargs)
-            if cfg.n_devices is not None:
-                raise ValueError(
-                    f"GCNServingEngine serves single-device executors, but "
-                    f"the tuned config for {graph_id!r} requests "
-                    f"n_devices={cfg.n_devices} — remove sharded candidates "
-                    f"from autotune_kwargs['sweep']")
-            # take ownership of the winner's already-resident executor (the
-            # sweep just measured it — no second _gather_slots precompute,
-            # no second upload) ...
-            executor = registry.get_executor(a, **cfg.as_executor_kwargs())
-            sched = executor.sched
-            # ... then release the graph from the registry's unbounded
-            # caches: the sweep's ~dozen losing candidate executors must
-            # not pin device memory, and *this* engine's byte budget
-            # becomes the only thing keeping the winner resident
+            cfg = runner.autotune(a, (a.shape[1], kdim),
+                                  max_devices=max_devices,
+                                  store=self.store, **tune_kw)
+            self._check_route(graph_id, cfg, sharded_route, "tuned")
+            sched = registry.get_schedule(a, **cfg.as_schedule_kwargs(),
+                                          fingerprint=fp)
+            # release the graph from the registry's unbounded caches: the
+            # sweep's ~dozen losing candidate executors must not pin device
+            # memory, and *this* engine's per-device budgets become the
+            # only thing keeping anything resident
             registry.release_graph(fp)
             tune_s = time.perf_counter() - t0
         rec = _Resident(graph_id=graph_id, fingerprint=fp, config=cfg,
-                        sched=sched, executor=executor,
+                        sched=sched,
                         params_host=jax.tree.map(np.asarray, params))
         self._graphs[graph_id] = rec
+        placement = self.placer.place(graph_id, est)
         self._admit(rec)
         return AdmitReport(graph_id=graph_id, warm_start=warm,
                            tune_seconds=tune_s, device_bytes=rec.bytes,
-                           config=cfg)
+                           config=cfg, placement=placement)
+
+    def _check_route(self, graph_id: str, cfg: TunedConfig,
+                     sharded_route: bool, origin: str) -> None:
+        if sharded_route:
+            if cfg.n_devices != self.n_devices:
+                raise ValueError(
+                    f"graph {graph_id!r} takes the sharded route on this "
+                    f"{self.n_devices}-device mesh, but the {origin} config "
+                    f"requests n_devices={cfg.n_devices}")
+        elif cfg.n_devices is not None:
+            raise ValueError(
+                f"graph {graph_id!r} takes the single-device route, but "
+                f"the {origin} config requests n_devices={cfg.n_devices} — "
+                "remove sharded candidates from autotune_kwargs['sweep']")
 
     def remove_graph(self, graph_id: str) -> None:
         rec = self._graphs.pop(graph_id)
         self._pending.pop(graph_id, None)
+        self._ready.pop(graph_id, None)
+        self._svc_ewma.pop(graph_id, None)
         if rec.executor is not None:
             self.device_bytes_in_use -= rec.bytes
+        self.placer.forget(graph_id)
         release_device_steps(rec.sched)
 
-    # ---- residency / eviction ----------------------------------------------
+    # ---- residency / eviction / rebalance ----------------------------------
 
     def _admit(self, rec: _Resident) -> None:
-        """Ensure ``rec`` is device-resident (LRU-touch + budget sweep).
-        ``rec.executor`` may arrive pre-seeded (cold admission hands over
-        the sweep's winner) — then only weights upload and jit remain."""
+        """Ensure ``rec`` is device-resident on its placement (LRU-touch +
+        per-device budget sweep + rebalance check)."""
         if rec.fwd is None:
             first = rec.bytes == 0
             cfg = rec.config
-            ex = rec.executor
-            if ex is None:
+            p = self.placer.placement_of(rec.graph_id)
+            if p.kind == SHARDED:
+                ex = ShardedScheduleExecutor(
+                    rec.sched, mesh=self._mesh, ktile=cfg.ktile,
+                    routing=cfg.routing,
+                    bf16_accumulate=cfg.bf16_accumulate)
+                rec.params = jax.tree.map(jnp.asarray, rec.params_host)
+            else:
+                dev = self.devices[p.device_index]
+                # the process-default device keeps a None placement
+                # handle: executors the registry/kernel paths build for
+                # the same schedule share the (schedule, None) upload
+                # cache instead of paying a duplicate pinned copy, and
+                # the single-device engine behaves exactly as it always
+                # did; only non-default mesh devices pin
+                handle = None if dev == jax.devices()[0] else dev
                 ex = ScheduleExecutor(rec.sched, ktile=cfg.ktile,
                                       routing=cfg.routing,
-                                      bf16_accumulate=cfg.bf16_accumulate)
+                                      bf16_accumulate=cfg.bf16_accumulate,
+                                      device=handle)
+                if handle is None:
+                    rec.params = jax.tree.map(jnp.asarray, rec.params_host)
+                else:
+                    rec.params = jax.device_put(rec.params_host, dev)
             rec.executor = ex
-            rec.params = jax.tree.map(jnp.asarray, rec.params_host)
             # one jitted dispatch per (graph, batch size): the whole-GCN
             # body vmapped over the request axis
             rec.fwd = jax.jit(jax.vmap(ex._forward_impl, in_axes=(None, 0)))
             rec.bytes = ex.device_bytes + sum(
                 int(x.nbytes) for x in jax.tree.leaves(rec.params))
+            self.placer.account(rec.graph_id, rec.bytes)
             self.device_bytes_in_use += rec.bytes
             if not first:
                 self.counters["readmissions"] += 1
         self._graphs.move_to_end(rec.graph_id)
         self._evict_over_budget(keep=rec.graph_id)
+        self._maybe_rebalance(keep=rec.graph_id)
 
-    def _evict(self, rec: _Resident) -> None:
+    def _evict(self, rec: _Resident, *, pressure: bool = True) -> None:
         # dropping the executor, weights, and the jitted closure releases
         # the device arrays they capture; the host schedule/config/weights
         # stay for re-upload. One-hot executors also memoize their step
         # arrays in the executor module's LRU — purge that too, or the
-        # bytes survive the eviction.
+        # bytes survive the eviction. ``pressure=False`` is the rebalance
+        # migration: it must not feed the pressure counter it answers.
+        if pressure:
+            self.placer.note_eviction(rec.graph_id)
+            self.counters["evictions"] += 1
+        self.placer.unaccount(rec.graph_id)
         rec.executor = None
         rec.params = None
         rec.fwd = None
         release_device_steps(rec.sched)
         self.device_bytes_in_use -= rec.bytes
-        self.counters["evictions"] += 1
 
     def _evict_over_budget(self, keep: str) -> None:
-        while self.device_bytes_in_use > self.device_budget_bytes:
-            victim = next((r for r in self._graphs.values()
-                           if r.executor is not None and r.graph_id != keep),
-                          None)
-            if victim is None:
-                break  # only `keep` is resident; it is never evicted
-            self._evict(victim)
+        """Per-device budget sweep: every device sheds least-recently-
+        served graphs until under budget (the kept graph is never
+        evicted)."""
+        for d in range(self.n_devices):
+            while self.placer.used[d] > self.placer.budget:
+                victim = next(
+                    (r for r in self._graphs.values()
+                     if r.executor is not None and r.graph_id != keep
+                     and d in self.placer.placements[r.graph_id]
+                     .device_indices),
+                    None)
+                if victim is None:
+                    break  # only `keep` holds this device; never evicted
+                self._evict(victim)
+
+    def _maybe_rebalance(self, keep: str) -> None:
+        """When eviction pressure concentrates on one device, migrate its
+        least-recently-served single-device graph to the coolest device."""
+        target = self.placer.rebalance_target()
+        if target is None:
+            return
+        hot, cool = target
+        victim = next(
+            (r for r in self._graphs.values()
+             if r.graph_id != keep
+             and self.placer.placements[r.graph_id].kind != SHARDED
+             and self.placer.placements[r.graph_id].device_index == hot),
+            None)
+        if victim is None:
+            return
+        if victim.executor is not None:
+            self._evict(victim, pressure=False)
+        self.placer.move(victim.graph_id, cool)
+        self.counters["rebalances"] += 1
 
     @property
     def resident_graphs(self) -> List[str]:
@@ -244,13 +418,15 @@ class GCNServingEngine:
     def graphs(self) -> List[str]:
         return list(self._graphs)
 
-    # ---- serving -----------------------------------------------------------
+    # ---- direct serving ----------------------------------------------------
 
     def serve_batch(self, graph_id: str, xs) -> jax.Array:
         """One jitted forward over a batch of same-graph feature matrices.
 
         ``xs`` is a sequence of ``[n, f]`` arrays (or a stacked
-        ``[B, n, f]`` array); returns stacked ``[B, n, classes]`` logits."""
+        ``[B, n, f]`` array); returns stacked ``[B, n, classes]`` logits.
+        The deadline scheduler serves queues through this same path, so
+        auto-flushed batches are bit-identical to direct calls."""
         rec = self._graphs[graph_id]
         xb = xs if hasattr(xs, "ndim") and xs.ndim == 3 else jnp.stack(
             [jnp.asarray(x) for x in xs])
@@ -260,7 +436,7 @@ class GCNServingEngine:
                 f"features have {xb.shape[1]} rows; graph {graph_id!r} "
                 f"has {n} nodes")
         self._admit(rec)  # LRU touch + re-upload if evicted
-        out = rec.fwd(rec.params, xb)
+        out = rec.fwd(rec.params, rec.executor.commit(xb))
         # count only completed batches — a failed/retried batch must not
         # inflate the served-work stats
         self.counters["batches"] += 1
@@ -271,10 +447,17 @@ class GCNServingEngine:
         """Single-request forward (a batch of one)."""
         return self.serve_batch(graph_id, [x])[0]
 
-    def submit(self, graph_id: str, x) -> None:
-        """Queue one request; ``flush`` serves every queue in one jitted
-        forward per graph. Shape is validated here so one malformed
-        request can never poison a later ``flush``."""
+    # ---- deadline-aware queueing -------------------------------------------
+
+    def submit(self, graph_id: str, x, *,
+               deadline_s: Optional[float] = None) -> int:
+        """Queue one request; returns its request id.
+
+        ``deadline_s`` is the SLA in seconds from now (None = no deadline;
+        the request serves on the next ``flush()`` or when its graph's
+        queue reaches ``max_batch`` — which auto-flushes that graph
+        immediately). Shape is validated here so one malformed request can
+        never poison a later flush."""
         rec = self._graphs.get(graph_id)
         if rec is None:
             raise KeyError(f"unknown graph {graph_id!r}")
@@ -284,31 +467,162 @@ class GCNServingEngine:
             raise ValueError(
                 f"request for graph {graph_id!r} must be [n={n}, features]; "
                 f"got shape {x.shape}")
-        self._pending.setdefault(graph_id, []).append(x)
+        now = time.monotonic()
+        rid = self._next_rid
+        self._next_rid += 1
+        deadline = None if deadline_s is None else now + float(deadline_s)
+        self._pending.setdefault(graph_id, []).append(
+            _Request(rid=rid, x=x, submit_t=now, deadline=deadline))
+        if len(self._pending[graph_id]) >= self.max_batch:
+            served = self._serve_queues([graph_id])
+            for gid, out in served.items():
+                self._ready.setdefault(gid, []).append(out)
+        return rid
+
+    def poll(self, now: Optional[float] = None) -> Dict[str, jax.Array]:
+        """Serve every queue that is *due* and return its batched logits
+        (merged with any batches a ``max_batch`` threshold already
+        auto-flushed).
+
+        A queue is due when its earliest deadline, minus 1.5× the
+        *cumulative* smoothed service time of everything EDF-ahead of it
+        on its device (plus a small floor), has arrived — co-located
+        batches serialize on their device, so the tail graph's dispatch
+        must leave room for the queue ahead of it, not just its own
+        batch. When a queue is due, every EDF-predecessor serves with it
+        (they would block the device anyway). Call this from the serving
+        loop; ``now`` defaults to ``time.monotonic()`` (tests inject a
+        clock)."""
+        if now is None:
+            now = time.monotonic()
+        order = sorted(((g, q) for g, q in self._pending.items() if q),
+                       key=lambda t: (_earliest_deadline(t[1]), t[0]))
+        load: Dict[int, float] = {}  # device -> cumulative est seconds
+        threshold, due_upto = [], -1
+        for i, (gid, q) in enumerate(order):
+            est = self._svc_ewma.get(gid, 0.0)
+            devs = self.placer.placement_of(gid).device_indices
+            ahead = max((load.get(d, 0.0) for d in devs), default=0.0)
+            for d in devs:
+                load[d] = ahead + est
+            if len(q) >= self.max_batch:
+                threshold.append(gid)
+            slack = _SVC_SAFETY * (ahead + est) + _SVC_FLOOR_S
+            if _earliest_deadline(q) - slack <= now:
+                due_upto = i
+        due = {g for g, _ in order[:due_upto + 1]} | set(threshold)
+        return self._drain(self._serve_queues(list(due)))
 
     def flush(self) -> Dict[str, jax.Array]:
         """Serve all queued requests, batched per graph. Returns
-        ``{graph_id: [B, n, classes] logits}`` in submission order.
+        ``{graph_id: [B, n, classes] logits}``.
 
-        A failing batch never takes the others down: every remaining
-        graph is still served, the failed graphs' queues are restored for
-        retry, and the raised ``FlushError`` carries the successful
-        results in ``.partial`` — no computed logits are lost."""
-        out, failures = {}, {}
-        pending, self._pending = self._pending, {}
-        for graph_id, xs in pending.items():
+        Queues serve in deterministic earliest-deadline-first order
+        (deadline-free graphs last, ties broken by graph id — never by
+        insertion order). A failing batch never takes the others down:
+        every remaining graph is still served, the failed graphs' queues
+        are restored **at the front, in original order** for retry (safe
+        when multiple graphs fail in one flush), and the raised
+        ``FlushError`` carries the successful results in ``.partial`` —
+        no computed logits are lost."""
+        return self._drain(
+            self._serve_queues([g for g, q in self._pending.items() if q]))
+
+    def _drain(self, served: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+        """Merge freshly served batches with threshold-auto-flushed ones
+        awaiting pickup."""
+        ready, self._ready = self._ready, {}
+        for gid, parts in ready.items():
+            if gid in served:
+                parts = parts + [served[gid]]
+            served[gid] = parts[0] if len(parts) == 1 else jnp.concatenate(
+                parts, axis=0)
+        return served
+
+    def _serve_queues(self, graph_ids) -> Dict[str, jax.Array]:
+        """Serve the named graphs' queues: EDF dispatch order, then await.
+
+        All batches are **dispatched** (async jit calls) before any result
+        is awaited, so batches placed on different mesh devices execute
+        concurrently; awaiting then happens in the same EDF order. Failed
+        graphs get their queue restored at the front and are reported
+        together in one ``FlushError`` after every healthy graph was
+        served."""
+        order = sorted(
+            (g for g in graph_ids if self._pending.get(g)),
+            key=lambda g: (_earliest_deadline(self._pending[g]), g))
+        served: Dict[str, jax.Array] = {}
+        failures: Dict[str, Exception] = {}
+        inflight = []
+
+        def restore(gid, reqs):
+            self._pending[gid] = reqs + self._pending.get(gid, [])
+
+        for gid in order:
+            reqs = self._pending.pop(gid)
+            t_disp = time.monotonic()
             try:
-                out[graph_id] = self.serve_batch(graph_id, xs)
+                out = self.serve_batch(gid, [r.x for r in reqs])
             except Exception as e:
-                failures[graph_id] = e
-                self._pending.setdefault(graph_id, []).extend(xs)
+                failures[gid] = e
+                restore(gid, reqs)
+                continue
+            inflight.append((gid, reqs, out, t_disp))
+        for gid, reqs, out, t_disp in inflight:
+            try:
+                jax.block_until_ready(out)
+            except Exception as e:
+                failures[gid] = e
+                # serve_batch counted this batch at dispatch; it produced
+                # nothing and will be retried — keep the served-work
+                # counters honest (their count-only-completed invariant)
+                self.counters["batches"] -= 1
+                self.counters["requests"] -= len(reqs)
+                restore(gid, reqs)
+                continue
+            t_done = time.monotonic()
+            self._note_served(gid, reqs, t_disp, t_done)
+            served[gid] = out
         if failures:
-            raise FlushError(failures, out)
-        return out
+            raise FlushError(failures, served)
+        return served
+
+    def _note_served(self, gid: str, reqs: List[_Request],
+                     t_disp: float, t_done: float) -> None:
+        """Record per-request latency + deadline outcome, and fold the
+        batch service time into the graph's EWMA (what ``poll`` subtracts
+        from deadlines to dispatch early enough)."""
+        for r in reqs:
+            lat = t_done - r.submit_t
+            self._lat_n += 1
+            self._lat_total += lat
+            self._lat_max = max(self._lat_max, lat)
+            if r.deadline is not None:
+                key = ("deadline_met" if t_done <= r.deadline
+                       else "deadline_misses")
+                self.counters[key] += 1
+        svc = t_done - t_disp
+        old = self._svc_ewma.get(gid)
+        self._svc_ewma[gid] = svc if old is None else 0.5 * old + 0.5 * svc
+
+    def reset_stats(self) -> None:
+        """Zero the counters and latency aggregates (benchmark sections
+        and ops dashboards measure deltas; residency state is untouched)."""
+        self.counters = {k: 0 for k in self.counters}
+        self._lat_n, self._lat_total, self._lat_max = 0, 0.0, 0.0
 
     def stats(self) -> dict:
-        return dict(self.counters,
-                    device_bytes_in_use=self.device_bytes_in_use,
-                    device_budget_bytes=self.device_budget_bytes,
-                    n_graphs=len(self._graphs),
-                    n_resident=len(self.resident_graphs))
+        return dict(
+            self.counters,
+            device_bytes_in_use=self.device_bytes_in_use,
+            device_budget_bytes=self.device_budget_bytes,
+            n_devices=self.n_devices,
+            n_graphs=len(self._graphs),
+            n_resident=len(self.resident_graphs),
+            pending_requests=sum(len(q) for q in self._pending.values()),
+            latency_n=self._lat_n,
+            latency_us_mean=(self._lat_total / self._lat_n * 1e6
+                             if self._lat_n else 0.0),
+            latency_us_max=self._lat_max * 1e6,
+            per_device=self.placer.device_report(),
+        )

@@ -1,0 +1,205 @@
+"""Mesh-wide graph placement: which device serves which resident graph.
+
+AWB-GCN balances workload across the PE array *within* one graph; a serving
+mesh faces the same problem one level up — many resident graphs, each a
+fixed ``device_bytes`` footprint, competing for a row of devices with
+bounded HBM. ``MeshPlacer`` is the single owner of that decision:
+
+* **Bin-packing admission.** ``place`` assigns each graph to the device
+  with the most free budget (worst-fit — the packing rule that *spreads*
+  load, which is the goal here: idle devices are the wasted resource, not
+  fragmentation). Per-device byte budgets mirror the engine's old
+  single-device LRU budget, one per mesh device.
+* **Sharded fallback for giant graphs.** A graph whose footprint exceeds
+  any single device's budget cannot be packed; ``place`` routes it to a
+  ``ShardedScheduleExecutor`` spanning the whole mesh instead. Its
+  measured footprint is accounted as an even (ceil) split across every
+  device — shards are padded to a common step count, so the even split
+  *is* the per-device slice (``schedule_shard.shard_payload_bytes``
+  models that slice and the tests pin it to the executor's real
+  ``device_bytes``).
+* **Eviction-pressure rebalancing.** The placer counts evictions per
+  device; when pressure concentrates on one device (≥ ``rebalance_after``
+  evictions there and ≥ 2× the coolest device), ``rebalance_target``
+  nominates a (hot, cool) device pair and the engine migrates one resident
+  graph — the runtime-rebalancing loop of the paper, applied to placement
+  instead of per-PE rows.
+
+The placer is pure host-side bookkeeping over device *indices* — no jax
+imports — so placement policy is unit-testable without a mesh; the engine
+maps index → ``jax.Device``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+SINGLE = "single"
+SHARDED = "sharded"
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """Where one graph lives on the mesh.
+
+    ``kind == "single"``: the graph's executor and weights are pinned to
+    ``mesh[device_index]``. ``kind == "sharded"``: the graph spans all
+    ``n_devices`` mesh devices through a ``ShardedScheduleExecutor`` and
+    ``device_index`` is None.
+    """
+    kind: str
+    device_index: Optional[int]
+    n_devices: int
+
+    @property
+    def device_indices(self) -> Tuple[int, ...]:
+        """Every mesh device this placement touches."""
+        if self.kind == SINGLE:
+            return (self.device_index,)
+        return tuple(range(self.n_devices))
+
+
+class MeshPlacer:
+    """Bin-packs admitted graphs onto a 1-D mesh under per-device budgets.
+
+    The placer records decisions and byte accounting; the engine owns the
+    executors, the LRU order, and performs the actual evictions/uploads.
+    ``used[d]`` meters *resident* bytes only — an evicted graph keeps its
+    placement (re-admission returns to the same device) until a rebalance
+    moves it.
+    """
+
+    def __init__(self, n_devices: int, per_device_budget_bytes: int, *,
+                 rebalance_after: int = 4):
+        if n_devices < 1:
+            raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+        self.n_devices = int(n_devices)
+        self.budget = int(per_device_budget_bytes)
+        self.rebalance_after = int(rebalance_after)
+        self.used: List[int] = [0] * self.n_devices
+        self.evictions: List[int] = [0] * self.n_devices
+        self.placements: Dict[str, Placement] = {}
+        self._resident_bytes: Dict[str, int] = {}
+        self.n_rebalances = 0
+
+    # ---- admission decisions ----------------------------------------------
+
+    def free_bytes(self, device_index: int) -> int:
+        return self.budget - self.used[device_index]
+
+    def place(self, graph_id: str, nbytes: int) -> Placement:
+        """Decide (and record) where a new graph goes.
+
+        Giant graphs — footprint over any single device's budget — go
+        sharded across the whole mesh when it has more than one device;
+        on a 1-device mesh they stay single (the engine's keep-active
+        rule already degrades that to one-graph-at-a-time rotation).
+        Everything else is worst-fit packed: the device with the most
+        free budget, ties to the lowest index (deterministic).
+        """
+        if graph_id in self.placements:
+            raise ValueError(f"graph {graph_id!r} already placed")
+        if nbytes > self.budget and self.n_devices > 1:
+            p = Placement(SHARDED, None, self.n_devices)
+        else:
+            d = max(range(self.n_devices),
+                    key=lambda i: (self.free_bytes(i), -i))
+            p = Placement(SINGLE, d, 1)
+        self.placements[graph_id] = p
+        return p
+
+    def placement_of(self, graph_id: str) -> Optional[Placement]:
+        return self.placements.get(graph_id)
+
+    # ---- byte accounting (engine calls on upload/evict/remove) ------------
+
+    def account(self, graph_id: str, nbytes: int) -> None:
+        """Record ``nbytes`` device-resident for a placed graph (sharded
+        graphs spread evenly across the mesh)."""
+        p = self.placements[graph_id]
+        if graph_id in self._resident_bytes:
+            raise ValueError(f"graph {graph_id!r} already accounted")
+        self._resident_bytes[graph_id] = int(nbytes)
+        for d, share in zip(p.device_indices, self._shares(p, nbytes)):
+            self.used[d] += share
+
+    def unaccount(self, graph_id: str) -> None:
+        """Release a graph's resident bytes (eviction or removal)."""
+        nbytes = self._resident_bytes.pop(graph_id, None)
+        if nbytes is None:
+            return
+        p = self.placements[graph_id]
+        for d, share in zip(p.device_indices, self._shares(p, nbytes)):
+            self.used[d] -= share
+
+    def forget(self, graph_id: str) -> None:
+        """Drop a graph entirely (engine ``remove_graph``)."""
+        self.unaccount(graph_id)
+        self.placements.pop(graph_id, None)
+
+    def is_resident(self, graph_id: str) -> bool:
+        return graph_id in self._resident_bytes
+
+    @staticmethod
+    def _shares(p: Placement, nbytes: int) -> List[int]:
+        n = len(p.device_indices)
+        share = -(-int(nbytes) // n)  # ceil: never under-account a device
+        return [share] * n
+
+    # ---- eviction pressure + rebalancing -----------------------------------
+
+    def note_eviction(self, graph_id: str) -> None:
+        """Count one eviction against every device the victim occupied."""
+        for d in self.placements[graph_id].device_indices:
+            self.evictions[d] += 1
+
+    def rebalance_target(self) -> Optional[Tuple[int, int]]:
+        """(hot_device, cool_device) when eviction pressure has concentrated
+        — the hot device has absorbed ≥ ``rebalance_after`` evictions since
+        the last rebalance *and* at least twice the coolest device's count —
+        else None. The engine migrates one resident graph hot → cool and
+        calls ``move``."""
+        if self.n_devices < 2:
+            return None
+        hot = max(range(self.n_devices), key=lambda d: (self.evictions[d], d))
+        cool = min(range(self.n_devices),
+                   key=lambda d: (self.evictions[d], self.used[d], d))
+        if hot == cool:
+            return None
+        if self.evictions[hot] < self.rebalance_after:
+            return None
+        if self.evictions[hot] < 2 * max(1, self.evictions[cool]):
+            return None
+        return hot, cool
+
+    def move(self, graph_id: str, device_index: int) -> Placement:
+        """Re-place a single-device graph onto ``device_index`` (the
+        rebalance migration; also resets the pressure window so one hot
+        stretch triggers one move, not a cascade)."""
+        old = self.placements[graph_id]
+        if old.kind != SINGLE:
+            raise ValueError(f"cannot move sharded graph {graph_id!r}")
+        nbytes = self._resident_bytes.get(graph_id)
+        self.unaccount(graph_id)
+        new = Placement(SINGLE, int(device_index), 1)
+        self.placements[graph_id] = new
+        if nbytes is not None:
+            self.account(graph_id, nbytes)
+        self.evictions = [0] * self.n_devices
+        self.n_rebalances += 1
+        return new
+
+    # ---- reporting ---------------------------------------------------------
+
+    def device_report(self) -> List[dict]:
+        """Per-device occupancy snapshot for ``stats()``."""
+        graphs: List[List[str]] = [[] for _ in range(self.n_devices)]
+        for gid, p in sorted(self.placements.items()):
+            if gid not in self._resident_bytes:
+                continue
+            for d in p.device_indices:
+                graphs[d].append(gid)
+        return [{"device": d, "used_bytes": self.used[d],
+                 "budget_bytes": self.budget,
+                 "evictions": self.evictions[d], "resident": graphs[d]}
+                for d in range(self.n_devices)]

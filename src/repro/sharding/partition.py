@@ -17,7 +17,6 @@ segment params get a leading None.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 from jax.sharding import PartitionSpec as P

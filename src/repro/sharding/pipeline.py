@@ -16,12 +16,10 @@ per-device memory is 1/S of the stack — the PP memory win.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 

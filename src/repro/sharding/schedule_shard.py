@@ -89,6 +89,21 @@ class ScheduleShards:
         return int(self.ranges.shape[0])
 
 
+def shard_payload_bytes(sched: "Schedule", n_devices: int) -> np.ndarray:
+    """Per-device byte footprint of the stacked gather-path shards —
+    what each mesh device pays to host its slice of one sharded schedule
+    (``[n_devices]`` int64). Shards are padded to a common step count, so
+    every device carries ``steps_per_shard * K`` slots at 12 bytes each
+    (f32 value + i32 target row + i32 gather column). This is the model
+    behind the placer's even-split accounting of sharded graphs; the
+    tests pin it to ``ShardedScheduleExecutor.device_bytes`` so the two
+    cannot drift."""
+    ranges = split_step_ranges(sched.n_steps, n_devices)
+    s_max = max(1, int((ranges[:, 1] - ranges[:, 0]).max()))
+    per_dev = s_max * sched.nnz_per_step * 12
+    return np.full(n_devices, per_dev, np.int64)
+
+
 def shard_schedule(sched: "Schedule", n_devices: int) -> ScheduleShards:
     """Split ``sched`` into ``n_devices`` stacked step shards."""
     ranges = split_step_ranges(sched.n_steps, n_devices)

@@ -1,6 +1,5 @@
 """Checkpoint manager: atomicity, keep-k, resume equality, preemption,
 pipeline determinism / elastic resharding."""
-import shutil
 
 import jax.numpy as jnp
 import numpy as np

@@ -1,5 +1,4 @@
 """MoE: AWB placement properties + dispatch-layer invariants."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
