@@ -20,7 +20,16 @@ never on timer noise:
   *smaller* graphs than the reference's, so they must come in **under**
   ``tolerance x`` the reference latency for the same graph; exceeding
   the reference at a fraction of the size is an order-of-magnitude
-  executor regression.
+  executor regression;
+* **8-way mesh throughput ratio** -- dimensionless: us/req on the forced
+  8-device mesh over us/req on the single-device engine. The smoke ratio
+  must stay within ``tolerance x`` of the reference ratio, so mesh
+  serving cannot silently become relatively slower than single-device;
+* **hot-graph replica scaling** -- the replicated-vs-single-replica
+  speedup of the saturation section must stay above the reference's
+  speedup divided by ``tolerance``, and the replicated engine's logits
+  must be bit-identical to the single-replica engine's
+  (``bit_identical=1`` is a hard correctness gate, not a perf ratio).
 
 Exit code 0 = green, 1 = regression (messages on stdout, one per check).
 
@@ -38,8 +47,14 @@ import sys
 _SPEEDUP_RE = re.compile(r"speedup=([0-9.]+)x")
 _WARM_RE = re.compile(r"serving/(\w+)/warm_start")
 
+_MESH_ROW = "serving/mesh8/mesh_throughput"
+_SINGLE_ROW = "serving/batched_throughput"
+_REPLICA_ROW = "serving/mesh8/hot_replicated"
+
 _NO_SERVING = "MISSING: no serving/*/warm_start rows in the smoke JSON"
 _NO_TUNING = "MISSING: no autotune/* rows shared between smoke and reference"
+_NO_MESH = f"MISSING: no {_MESH_ROW} + {_SINGLE_ROW} rows in the smoke JSON"
+_NO_REPLICA = f"MISSING: no {_REPLICA_ROW} row in the smoke JSON"
 _GATE_BLIND = " -- the suite did not run; the gate cannot vouch for the PR"
 _NOT_SMOKE = "MISMATCH: --smoke JSON was not produced by run.py --smoke"
 _REF_SMOKE = "MISMATCH: the reference JSON is itself a smoke run"
@@ -115,6 +130,45 @@ def check(smoke: dict, reference: dict, tolerance: float) -> list:
             problems.append(f"REGRESSION: {got} exceeds {ceiling:.0f}us ({ref})")
     if not compared:
         problems.append(_NO_TUNING + _GATE_BLIND)
+
+    # 4. 8-way mesh throughput ratio (dimensionless: mesh us/req over
+    #    single-device us/req); a missing *reference* pair is skipped so
+    #    the gate still runs against pre-trajectory references
+    if _MESH_ROW not in s_rows or _SINGLE_ROW not in s_rows:
+        problems.append(_NO_MESH + _GATE_BLIND)
+    elif _MESH_ROW in r_rows and _SINGLE_ROW in r_rows:
+        s_ratio = s_rows[_MESH_ROW]["us_per_call"]
+        s_ratio /= s_rows[_SINGLE_ROW]["us_per_call"]
+        r_ratio = r_rows[_MESH_ROW]["us_per_call"]
+        r_ratio /= r_rows[_SINGLE_ROW]["us_per_call"]
+        ceiling = r_ratio * tolerance
+        if s_ratio > ceiling:
+            got = f"mesh/single us-per-req ratio {s_ratio:.2f}"
+            ref = f"reference {r_ratio:.2f} x tolerance {tolerance:g}"
+            why = "mesh serving got relatively slower than 1-device"
+            msg = f"{got} exceeds {ceiling:.2f} ({ref}) -- {why}"
+            problems.append(f"REGRESSION: {msg}")
+
+    # 5. hot-graph replica scaling + bit-identity
+    if _REPLICA_ROW not in s_rows:
+        problems.append(_NO_REPLICA + _GATE_BLIND)
+    else:
+        derived = s_rows[_REPLICA_ROW].get("derived", "")
+        if "bit_identical=1" not in derived:
+            why = "replica clones no longer produce identical logits"
+            msg = f"{_REPLICA_ROW} lacks bit_identical=1 -- {why}"
+            problems.append(f"CORRECTNESS: {msg}")
+        sp = _SPEEDUP_RE.search(derived)
+        ref_row = r_rows.get(_REPLICA_ROW)
+        rp = _SPEEDUP_RE.search(ref_row.get("derived", "")) if ref_row else None
+        if sp and rp:
+            floor = float(rp.group(1)) / tolerance
+            if float(sp.group(1)) < floor:
+                got = f"replica speedup {float(sp.group(1)):.2f}x"
+                ref = f"{float(rp.group(1)):.2f}x ref / tol {tolerance:g}"
+                why = "batches stopped scaling across replicas"
+                msg = f"{got} fell below {floor:.2f}x ({ref}) -- {why}"
+                problems.append(f"REGRESSION: {msg}")
     return problems
 
 

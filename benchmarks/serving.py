@@ -17,7 +17,17 @@ tuning store:
 * **mesh throughput** — an 8-way forced host-platform mesh (subprocess,
   same harness as the sharded/distributed suites) serving the same
   multi-graph workload with graphs bin-packed across devices, vs the
-  single-device engine above.
+  single-device engine above;
+* **hot-graph saturation** — ONE graph hammered hard enough that its
+  per-request-EWMA × queue-depth backlog trips the engine's replication
+  policy: throughput with ``max_replicas=1`` (the pre-replica engine) vs
+  the same workload after the engine has grown replicas and splits each
+  batch across them, with a bit-identity check between the two engines'
+  logits. The subprocess pins XLA's CPU intra-op parallelism to one
+  thread: on a real mesh each device is its own silicon, but 8 forced
+  host devices share this machine's cores, and without the pin a single
+  device's execution already consumes them — hiding exactly the
+  device-level concurrency this section measures.
 """
 from __future__ import annotations
 
@@ -147,6 +157,117 @@ print("ROW mesh_throughput %%f req_per_s=%%.1f;devices=%%d;"
 """
 
 
+#: hot-graph saturation workload: scatter-heavy (high-nnz, narrow
+#: features), the regime where one replica's execution is serial enough
+#: that splitting a batch across clones buys real concurrency
+if common.SMOKE:
+    SAT = dict(n=600, density=0.02, feats=32, hidden=32, classes=8,
+               batch=8, rounds=2, replicas=2)
+else:
+    SAT = dict(n=3000, density=0.012, feats=64, hidden=64, classes=8,
+               batch=32, rounds=4, replicas=4)
+
+_SAT_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=%(n_dev)d "
+    "--xla_cpu_multi_thread_eigen=false intra_op_parallelism_threads=1")
+import sys, time
+sys.path.insert(0, %(src)r)
+import numpy as np, jax
+from repro.core import executor as exe, gcn
+from repro.graphs import synth
+from repro.serving.gcn_engine import GCNServingEngine
+from repro.tuning import registry
+
+SAT = %(sat)r
+SWEEP = [dict(nnz_per_step=128, rows_per_window=64, cols_per_block=None,
+              window_nnz=None, routing=exe.GATHER),
+         dict(nnz_per_step=256, rows_per_window=64, cols_per_block=None,
+              window_nnz=None, routing=exe.GATHER)]
+KW = dict(iters=1, warmup=1, sweep=SWEEP, bf16_report=False)
+
+a = synth.power_law_adjacency(SAT["n"], SAT["density"], 0.9, seed=7)
+cfg = gcn.GCNConfig(SAT["feats"], SAT["hidden"], SAT["classes"])
+params = gcn.init_params(cfg, jax.random.PRNGKey(7))
+x = np.random.default_rng(7).random((SAT["n"], SAT["feats"]),
+                                    ).astype(np.float32)
+feats = [x * (1.0 - 0.01 * i) for i in range(SAT["batch"])]
+
+
+def throughput(eng):
+    def one_flush():
+        for xi in feats:
+            eng.submit("hot", xi)
+        (out,) = eng.flush().values()
+        jax.block_until_ready(out)
+        return np.asarray(out)
+
+    ref = one_flush()                       # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(SAT["rounds"]):
+        out = one_flush()
+    dt = time.perf_counter() - t0
+    n_req = SAT["rounds"] * SAT["batch"]
+    return n_req / dt, dt / n_req * 1e6, out
+
+
+# --- baseline: replication capped at 1 (the pre-replica engine) ----------
+eng1 = GCNServingEngine(store_root=%(store)r, devices=%(n_dev)d,
+                        max_batch=2 * SAT["batch"], max_replicas=1,
+                        autotune_kwargs=KW)
+eng1.add_graph("hot", a, params)
+rps1, us1, ref = throughput(eng1)
+assert eng1.stats()["replicas"] == {}
+print("ROW hot_single %%f req_per_s=%%.2f;replicas=1" %% (us1, rps1))
+
+# --- replicated: saturation grows clones, batches split across them ------
+registry.clear_caches()
+eng2 = GCNServingEngine(store_root=%(store)r, devices=%(n_dev)d,
+                        max_batch=2 * SAT["batch"],
+                        max_replicas=SAT["replicas"],
+                        replicate_after_s=1e-6, autotune_kwargs=KW)
+rep = eng2.add_graph("hot", a, params)
+assert rep.warm_start                   # same store entry as the baseline
+eng2.serve_batch("hot", feats[:2])      # prime the saturation signal
+while (len(eng2.placer.placement_of("hot").device_indices)
+       < SAT["replicas"]):
+    for xi in feats:
+        eng2.submit("hot", xi)
+    eng2.poll()                         # backlog > threshold: grow one
+eng2.flush()
+n_rep = len(eng2.placer.placement_of("hot").device_indices)
+rps2, us2, out = throughput(eng2)
+identical = bool(np.array_equal(out, ref))
+assert identical, "replica logits diverged from the single-replica engine"
+print("ROW hot_replicated %%f req_per_s=%%.2f;replicas=%%d;"
+      "speedup=%%.2fx;bit_identical=%%d"
+      %% (us2, rps2, n_rep, rps2 / rps1, int(identical)))
+"""
+
+
+def _run_saturation(root) -> list:
+    """Hot-graph replica scaling on the forced 8-way mesh: one graph,
+    ``max_replicas=1`` vs grown replicas, bit-identity asserted."""
+    rows = []
+    script = _SAT_SCRIPT % dict(n_dev=N_MESH_DEVICES, src=_SRC,
+                                store=str(root), sat=SAT)
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, timeout=900)
+    if r.returncode != 0:
+        raise RuntimeError(f"saturation subprocess failed: "
+                           f"{r.stderr[-800:]}")
+    for line in r.stdout.splitlines():
+        if not line.startswith("ROW "):
+            continue
+        _, name, us, derived = line.split(" ", 3)
+        print(f"hot-graph {name.replace('hot_', '')}: {float(us):.0f} "
+              f"us/req  {derived}")
+        rows.append((f"serving/mesh{N_MESH_DEVICES}/{name}", float(us),
+                     derived))
+    return rows
+
+
 def _run_mesh(root) -> list:
     """Multi-device engine throughput on a forced 8-way host mesh. The
     subprocess reuses the store the single-device section populated only
@@ -237,6 +358,7 @@ def run() -> list:
 
         rows.extend(_run_deadline(eng2, feats))
         rows.extend(_run_mesh(root))
+        rows.extend(_run_saturation(root))
     finally:
         shutil.rmtree(root, ignore_errors=True)
     return rows

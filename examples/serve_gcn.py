@@ -21,18 +21,25 @@ On a multi-device host the same engine takes ``devices=N`` and bin-packs
 graphs across the mesh (giant graphs shard across all of it); see
 ``tests/test_placement.py`` for the 8-way forced-host-mesh drive.
 """
-import shutil
-import tempfile
-import time
+import os
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+# the replication demo needs a mesh: if the host would expose a single
+# CPU device, force 4 host-platform devices (must land before jax loads)
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=4")
 
-from repro.core import gcn, schedule
-from repro.graphs import synth
-from repro.serving.gcn_engine import GCNServingEngine
-from repro.tuning import registry
+import shutil  # noqa: E402
+import tempfile  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import gcn, schedule  # noqa: E402
+from repro.graphs import synth  # noqa: E402
+from repro.serving.gcn_engine import GCNServingEngine  # noqa: E402
+from repro.tuning import registry  # noqa: E402
 
 
 def train_workload(name: str, scale: int, seed: int):
@@ -78,7 +85,10 @@ def main():
         # ---- restart: warm start from the store ------------------------
         print("\nsimulated restart (fresh engine, same store):")
         registry.clear_caches()  # drop every in-process cache
-        engine = GCNServingEngine(store_root=store_root)
+        engine = GCNServingEngine(store_root=store_root,
+                                  devices=len(jax.devices()),
+                                  max_replicas=2, replicate_after_s=0.05,
+                                  replica_shrink_after=2)
         for name, (ds, params) in loads.items():
             t0 = time.time()
             rep = engine.add_graph(name, ds.adj, params)
@@ -126,6 +136,28 @@ def main():
               f"{st['deadline_met']}/{judged} met, latency mean "
               f"{st['latency_us_mean'] / 1e3:.0f}ms "
               f"max {st['latency_us_max'] / 1e3:.0f}ms")
+
+        # ---- one hot graph saturates its device: replicate it ----------
+        # hammer a single graph until its backlog (per-request service
+        # EWMA x queue depth) trips the replication policy; the clone is
+        # warm (same store entry: one upload, zero sweeps) and batches
+        # split across replicas behind a least-outstanding-work balancer
+        hot = "pubmed"
+        ds, params = loads[hot]
+        x = np.asarray(ds.features, np.float32)
+        for _ in range(3 * batch):
+            mask = (rng.random(x.shape) < 0.9).astype(np.float32)
+            engine.submit(hot, x * mask, deadline_s=0.0)
+        engine.poll()  # due now; the backlog grows a replica first
+        st = engine.stats()
+        print(f"\nhot-graph replication: {hot!r} now on devices "
+              f"{st['replicas'].get(hot, '— (already drained)')} "
+              f"(+{st['replicas_added']} replica)")
+        for _ in range(3):
+            engine.poll()  # idle polls: pressure gone, replicas shed
+        st = engine.stats()
+        print(f"after idle polls: replicas={st['replicas']} "
+              f"(dropped {st['replicas_dropped']})")
 
         # engine output matches the reference forward
         for name, (ds, params) in loads.items():

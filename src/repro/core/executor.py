@@ -125,15 +125,29 @@ def device_step_arrays(sched: Schedule, device=None) -> dict:
     return arrs
 
 
-def release_device_steps(sched: Schedule) -> None:
-    """Drop every memoized device copy of one schedule's step arrays.
+#: sentinel for ``release_device_steps``: drop the copies on *every*
+#: device (``None`` is a real placement handle — jax's default device —
+#: so it cannot double as the catch-all)
+ALL_DEVICES = object()
+
+
+def release_device_steps(sched: Schedule, device=ALL_DEVICES) -> None:
+    """Drop memoized device copies of one schedule's step arrays.
 
     The serving engine's eviction and ``tuning.registry.release_graph``
     call this so a one-hot executor's uploads don't outlive their owner —
     without it the identity-keyed LRU above keeps the arrays resident
-    until 32 unrelated schedules displace them."""
+    until 32 unrelated schedules displace them. Pass ``device`` (a
+    placement handle, ``None`` meaning the default device) to drop only
+    that device's copy — what dropping **one replica** of a multi-replica
+    graph needs: the surviving replicas' uploads on other devices must
+    stay resident."""
     sid = id(sched)
-    for key in [k for k in _DEVICE_STEPS if k[0] == sid]:
+    if device is ALL_DEVICES:
+        keys = [k for k in _DEVICE_STEPS if k[0] == sid]
+    else:
+        keys = [(sid, device)] if (sid, device) in _DEVICE_STEPS else []
+    for key in keys:
         del _DEVICE_STEPS[key]
 
 
@@ -542,6 +556,7 @@ class ShardedScheduleExecutor(_ExecutorBase):
 _TUNING_EXPORTS = {
     "graph_fingerprint": "repro.tuning.registry",
     "mesh_fingerprint": "repro.tuning.registry",
+    "device_fingerprint": "repro.tuning.registry",
     "clear_caches": "repro.tuning.registry",
     "get_schedule": "repro.tuning.registry",
     "get_spmm_schedules": "repro.tuning.registry",

@@ -21,22 +21,36 @@ the tuning subsystem into that shape:
   the mesh. When eviction pressure concentrates on one device, the placer
   nominates a migration and the engine moves a resident graph to the
   coolest device (runtime rebalancing, lifted to placement).
+* **Multi-replica hot graphs.** When a single graph saturates its
+  device's throughput — detected from the per-request service-time EWMA ×
+  queue depth the deadline scheduler already tracks — the engine **clones
+  the graph onto the coolest device**: the replica reuses the
+  already-deserialized ``TunedConfig`` and host schedule from the same
+  ``TuningStore`` entry, so growth costs one upload and **zero sweeps,
+  zero rebuilds**. Batches then split across replicas (least outstanding
+  work first) and the sub-batches run concurrently; every replica is a
+  bit-identical clone, so which replica serves a request is unobservable
+  in the logits. When pressure subsides the replica set shrinks back
+  (AWB-GCN's remote switching from a congested PE to an underloaded one,
+  lifted to placement).
 * **Deadline-aware batching.** ``submit(graph_id, x, deadline_s=...)``
   queues a request; queues auto-flush when a graph reaches the
   ``max_batch`` threshold, and ``poll()`` serves every queue whose
   earliest deadline is due (earliest-deadline-first across graphs; all
   batches are dispatched before any result is awaited, so batches placed
   on different devices run concurrently). Each graph's queue serves
-  through **one jitted vmapped whole-GCN forward** — bit-identical to the
-  direct ``serve_batch`` path. Per-request latency and deadline
-  hits/misses surface in ``stats()``; ``flush()`` remains the serve-
-  everything-now path, in deterministic EDF order.
+  through **one jitted vmapped whole-GCN forward** per replica —
+  bit-identical to the direct ``serve_batch`` path. Per-request latency
+  and deadline hits/misses surface in ``stats()``; ``flush()`` remains
+  the serve-everything-now path, in deterministic EDF order.
 * **Bounded residency.** Each resident graph's device footprint — its
   executor's schedule arrays (``device_bytes``) *plus* its uploaded
-  weights — counts against its device's budget. Admission beyond the
-  budget evicts least-recently-served graphs on that device; the host-side
-  schedule, config, and weight copies are kept, so re-admission is a
-  re-upload — still no rebuild, no sweep.
+  weights — counts against its device's budget, one full footprint per
+  replica. Admission beyond the budget evicts least-recently-served
+  graphs on that device (a hot graph's secondary replica is shed before
+  any whole graph is evicted); the host-side schedule, config, and weight
+  copies are kept, so re-admission is a re-upload — still no rebuild, no
+  sweep.
 
 The engine deliberately bypasses ``tuning.registry``'s unbounded
 fingerprint caches for its executors — eviction must actually free device
@@ -47,6 +61,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import OrderedDict
+from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional
 
 import jax
@@ -57,7 +72,8 @@ from repro.core import csc as fmt
 from repro.core.executor import (ScheduleExecutor, ShardedScheduleExecutor,
                                  release_device_steps)
 from repro.core.schedule import Schedule
-from repro.serving.placement import SHARDED, MeshPlacer, Placement
+from repro.serving.placement import (REPLICATED, SHARDED, SINGLE,
+                                     MeshPlacer, Placement)
 from repro.tuning import registry, runner, space
 from repro.tuning.space import TunedConfig
 from repro.tuning.store import TuningStore
@@ -74,6 +90,11 @@ _BYTES_PER_NNZ_EST = 16
 #: borderline batches into met deadlines at a modest batching cost.
 _SVC_SAFETY = 1.5
 _SVC_FLOOR_S = 0.010
+
+#: test seam: the await used by the completion path (monkeypatched to
+#: simulate an asynchronously-failing computation without a real device
+#: fault).
+_block_until_ready = jax.block_until_ready
 
 
 class FlushError(RuntimeError):
@@ -114,6 +135,31 @@ class _Request:
 
 
 @dataclasses.dataclass
+class _Unit:
+    """One device-resident serving clone of a graph (the primary or a
+    replica): a pinned executor, the uploaded weights, and the jitted
+    vmapped whole-GCN forward that serves batches through them."""
+    device_index: Optional[int]          # None: sharded (spans the mesh)
+    executor: object
+    fwd: callable
+    params: dict
+    bytes: int
+
+
+@dataclasses.dataclass
+class _Part:
+    """One dispatched sub-batch of a serve call: either an async
+    jit dispatch (``out``) or a thread-pool future (``future``) when the
+    batch split across replicas. ``est`` is the outstanding-work charge
+    held against ``device_index`` until completion."""
+    device_index: Optional[int]
+    n: int
+    est: float
+    out: object = None
+    future: object = None
+
+
+@dataclasses.dataclass
 class _Resident:
     graph_id: str
     fingerprint: str
@@ -125,6 +171,9 @@ class _Resident:
     executor: Optional[object] = None
     fwd: Optional[callable] = None       # jitted vmapped whole-GCN forward
     bytes: int = 0                       # schedule + weight device bytes
+    #: secondary replicas by device index (the primary lives in the
+    #: fields above, on the placement's ``device_index``)
+    replicas: Dict[int, _Unit] = dataclasses.field(default_factory=dict)
 
 
 def _earliest_deadline(queue: List[_Request]) -> float:
@@ -141,9 +190,14 @@ class GCNServingEngine:
     device exactly like the old single-device engine; an int ``n`` takes
     ``jax.devices()[:n]``; a list of ``jax.Device`` uses those. With a
     multi-device mesh, each admitted graph is bin-packed onto one device
-    (``serving.placement.MeshPlacer``), and graphs too big for any single
+    (``serving.placement.MeshPlacer``), graphs too big for any single
     device's ``device_budget_bytes`` serve through a
-    ``ShardedScheduleExecutor`` spanning the whole mesh.
+    ``ShardedScheduleExecutor`` spanning the whole mesh, and a graph hot
+    enough to saturate its device replicates onto up to ``max_replicas``
+    devices (grown when its queue backlog — per-request service-time EWMA
+    × queue depth — exceeds ``replicate_after_s`` seconds; shrunk after
+    ``replica_shrink_after`` consecutive calm ``poll``s below a quarter of
+    that).
 
     ``device_budget_bytes`` bounds each device's resident schedule+weight
     bytes; the graph being served is always kept resident, even if it
@@ -157,6 +211,9 @@ class GCNServingEngine:
                  devices=None,
                  max_batch: int = 32,
                  rebalance_after: int = 4,
+                 max_replicas: Optional[int] = None,
+                 replicate_after_s: float = 0.25,
+                 replica_shrink_after: int = 3,
                  autotune_iters: int = 3, autotune_warmup: int = 1,
                  autotune_kwargs: Optional[dict] = None):
         self.store = store if store is not None else TuningStore(store_root)
@@ -184,6 +241,13 @@ class GCNServingEngine:
             self._mesh = None
         self.placer = MeshPlacer(self.n_devices, self.device_budget_bytes,
                                  rebalance_after=rebalance_after)
+        if max_replicas is not None and max_replicas < 1:
+            raise ValueError(
+                f"max_replicas must be >= 1, got {max_replicas}")
+        self.max_replicas = (self.n_devices if max_replicas is None
+                             else min(int(max_replicas), self.n_devices))
+        self.replicate_after_s = float(replicate_after_s)
+        self.replica_shrink_after = int(replica_shrink_after)
         self._autotune_kwargs = dict(autotune_kwargs or {})
         reserved = {"max_devices", "store"} & set(self._autotune_kwargs)
         if reserved:
@@ -198,13 +262,23 @@ class GCNServingEngine:
         #: pickup by the next poll()/flush()
         self._ready: Dict[str, List[jax.Array]] = {}
         self._svc_ewma: Dict[str, float] = {}  # per-graph batch seconds
+        #: per-graph per-*request* EWMA seconds — the saturation signal
+        #: (× queue depth = backlog a single replica would need)
+        self._svc_req_ewma: Dict[str, float] = {}
+        #: consecutive calm polls per replicated graph (shrink hysteresis)
+        self._calm_polls: Dict[str, int] = {}
+        #: device index → estimated seconds of dispatched-but-incomplete
+        #: work (the least-outstanding-work replica balancer's meter)
+        self._dev_outstanding: Dict[int, float] = {}
+        self._pool: Optional[ThreadPoolExecutor] = None
         self._next_rid = 0
         self.device_bytes_in_use = 0
         self._lat_n, self._lat_total, self._lat_max = 0, 0.0, 0.0
         self.counters = {"store_hits": 0, "store_misses": 0,
                          "evictions": 0, "readmissions": 0,
                          "rebalances": 0, "batches": 0, "requests": 0,
-                         "deadline_met": 0, "deadline_misses": 0}
+                         "deadline_met": 0, "deadline_misses": 0,
+                         "replicas_added": 0, "replicas_dropped": 0}
 
     # ---- admission ---------------------------------------------------------
 
@@ -303,15 +377,51 @@ class GCNServingEngine:
 
     def remove_graph(self, graph_id: str) -> None:
         rec = self._graphs.pop(graph_id)
+        for d in list(rec.replicas):
+            self._drop_replica(rec, d, shrink=False)
         self._pending.pop(graph_id, None)
         self._ready.pop(graph_id, None)
         self._svc_ewma.pop(graph_id, None)
+        self._svc_req_ewma.pop(graph_id, None)
+        self._calm_polls.pop(graph_id, None)
         if rec.executor is not None:
             self.device_bytes_in_use -= rec.bytes
         self.placer.forget(graph_id)
         release_device_steps(rec.sched)
 
-    # ---- residency / eviction / rebalance ----------------------------------
+    # ---- residency / eviction / replication / rebalance --------------------
+
+    def _unit_handle(self, device_index: int):
+        """(jax device, placement handle) of one mesh device. The
+        process-default device keeps a None placement handle: executors
+        the registry/kernel paths build for the same schedule share the
+        (schedule, None) upload cache instead of paying a duplicate
+        pinned copy, and the single-device engine behaves exactly as it
+        always did; only non-default mesh devices pin."""
+        dev = self.devices[device_index]
+        return dev, (None if dev == jax.devices()[0] else dev)
+
+    def _build_unit(self, rec: _Resident, device_index: int) -> _Unit:
+        """One serving clone of ``rec`` on a specific mesh device — built
+        from the already-converged config and the host schedule, so it
+        costs one upload and zero sweeps, zero rebuilds (what makes a
+        replica cheap)."""
+        cfg = rec.config
+        dev, handle = self._unit_handle(device_index)
+        ex = ScheduleExecutor(rec.sched, ktile=cfg.ktile,
+                              routing=cfg.routing,
+                              bf16_accumulate=cfg.bf16_accumulate,
+                              device=handle)
+        if handle is None:
+            params = jax.tree.map(jnp.asarray, rec.params_host)
+        else:
+            params = jax.device_put(rec.params_host, dev)
+        # one jitted dispatch per (clone, batch size): the whole-GCN body
+        # vmapped over the request axis
+        fwd = jax.jit(jax.vmap(ex._forward_impl, in_axes=(None, 0)))
+        nbytes = ex.device_bytes + sum(int(x.nbytes)
+                                       for x in jax.tree.leaves(params))
+        return _Unit(device_index, ex, fwd, params, nbytes)
 
     def _admit(self, rec: _Resident) -> None:
         """Ensure ``rec`` is device-resident on its placement (LRU-touch +
@@ -326,29 +436,15 @@ class GCNServingEngine:
                     routing=cfg.routing,
                     bf16_accumulate=cfg.bf16_accumulate)
                 rec.params = jax.tree.map(jnp.asarray, rec.params_host)
+                rec.executor = ex
+                rec.fwd = jax.jit(jax.vmap(ex._forward_impl,
+                                           in_axes=(None, 0)))
+                rec.bytes = ex.device_bytes + sum(
+                    int(x.nbytes) for x in jax.tree.leaves(rec.params))
             else:
-                dev = self.devices[p.device_index]
-                # the process-default device keeps a None placement
-                # handle: executors the registry/kernel paths build for
-                # the same schedule share the (schedule, None) upload
-                # cache instead of paying a duplicate pinned copy, and
-                # the single-device engine behaves exactly as it always
-                # did; only non-default mesh devices pin
-                handle = None if dev == jax.devices()[0] else dev
-                ex = ScheduleExecutor(rec.sched, ktile=cfg.ktile,
-                                      routing=cfg.routing,
-                                      bf16_accumulate=cfg.bf16_accumulate,
-                                      device=handle)
-                if handle is None:
-                    rec.params = jax.tree.map(jnp.asarray, rec.params_host)
-                else:
-                    rec.params = jax.device_put(rec.params_host, dev)
-            rec.executor = ex
-            # one jitted dispatch per (graph, batch size): the whole-GCN
-            # body vmapped over the request axis
-            rec.fwd = jax.jit(jax.vmap(ex._forward_impl, in_axes=(None, 0)))
-            rec.bytes = ex.device_bytes + sum(
-                int(x.nbytes) for x in jax.tree.leaves(rec.params))
+                unit = self._build_unit(rec, p.device_index)
+                rec.executor, rec.fwd = unit.executor, unit.fwd
+                rec.params, rec.bytes = unit.params, unit.bytes
             self.placer.account(rec.graph_id, rec.bytes)
             self.device_bytes_in_use += rec.bytes
             if not first:
@@ -362,8 +458,13 @@ class GCNServingEngine:
         # the device arrays they capture; the host schedule/config/weights
         # stay for re-upload. One-hot executors also memoize their step
         # arrays in the executor module's LRU — purge that too, or the
-        # bytes survive the eviction. ``pressure=False`` is the rebalance
-        # migration: it must not feed the pressure counter it answers.
+        # bytes survive the eviction. A replicated victim first sheds its
+        # secondary replicas (collapsing its placement to SINGLE, so
+        # re-admission restores one clone and replication re-grows on
+        # demand). ``pressure=False`` is the rebalance migration: it must
+        # not feed the pressure counter it answers.
+        for d in list(rec.replicas):
+            self._drop_replica(rec, d, shrink=False)
         if pressure:
             self.placer.note_eviction(rec.graph_id)
             self.counters["evictions"] += 1
@@ -374,17 +475,102 @@ class GCNServingEngine:
         release_device_steps(rec.sched)
         self.device_bytes_in_use -= rec.bytes
 
+    def _grow_replica(self, rec: _Resident) -> bool:
+        """Clone ``rec`` onto the coolest device that doesn't yet host it
+        AND has budget room for the clone — replication never evicts
+        resident graphs to make space (a replica is a luxury; forcing it
+        onto a full device would just get it shed by the next budget
+        sweep and re-grown by the next poll, one upload per cycle). Warm
+        by construction: the clone reuses the converged config and host
+        schedule already in memory (same ``TuningStore`` entry), so
+        growth is one upload — no sweep, no rebuild."""
+        if rec.fwd is None:
+            return False
+        d = self.placer.replica_candidate(rec.graph_id, rec.bytes)
+        if d is None:
+            return False
+        unit = self._build_unit(rec, d)
+        self.placer.add_replica(rec.graph_id, unit.bytes, device_index=d)
+        rec.replicas[d] = unit
+        self.device_bytes_in_use += unit.bytes
+        self.counters["replicas_added"] += 1
+        return True
+
+    def _drop_replica(self, rec: _Resident, device_index: int, *,
+                      shrink: bool = True) -> None:
+        """Release one secondary replica: its executor, weights, jitted
+        closure, and — for one-hot executors — exactly its own device's
+        memoized step arrays (surviving replicas keep theirs)."""
+        unit = rec.replicas.pop(device_index)
+        self.placer.drop_replica(rec.graph_id, device_index)
+        _, handle = self._unit_handle(device_index)
+        release_device_steps(rec.sched, device=handle)
+        self.device_bytes_in_use -= unit.bytes
+        if shrink:
+            self.counters["replicas_dropped"] += 1
+
+    def _update_replication(self) -> None:
+        """Grow hot graphs' replica sets, shrink idle ones (runs at every
+        ``poll`` and threshold auto-flush).
+
+        Saturation signal: **per-request service-time EWMA × queue
+        depth** — the backlog seconds a single replica would need to
+        drain the queue. Above ``replicate_after_s`` the graph grows one
+        replica (onto the coolest device); below a quarter of that for
+        ``replica_shrink_after`` consecutive polls, a replicated graph
+        sheds one (from the fullest device, relieving the most memory
+        pressure). Sharded graphs never replicate — they already span the
+        mesh."""
+        if self.n_devices < 2:
+            return
+        for gid, rec in list(self._graphs.items()):
+            p = self.placer.placement_of(gid)
+            if p is None or p.kind == SHARDED:
+                continue
+            depth = len(self._pending.get(gid) or ())
+            backlog = self._svc_req_ewma.get(gid, 0.0) * depth
+            n_rep = len(p.device_indices)
+            if backlog > self.replicate_after_s and n_rep < self.max_replicas:
+                self._grow_replica(rec)
+                self._calm_polls.pop(gid, None)
+            elif n_rep > 1 and backlog <= self.replicate_after_s / 4:
+                calm = self._calm_polls.get(gid, 0) + 1
+                if calm >= self.replica_shrink_after:
+                    shed = max(
+                        (d for d in p.device_indices
+                         if d != p.device_index),
+                        key=lambda d: (self.placer.used[d], d))
+                    self._drop_replica(rec, shed)
+                    calm = 0
+                self._calm_polls[gid] = calm
+            else:
+                self._calm_polls.pop(gid, None)
+
     def _evict_over_budget(self, keep: str) -> None:
-        """Per-device budget sweep: every device sheds least-recently-
-        served graphs until under budget (the kept graph is never
-        evicted)."""
+        """Per-device budget sweep: every over-budget device sheds
+        resident graphs, least-recently-served first, until under budget
+        (the kept graph is never evicted). ``self._graphs`` is maintained
+        in least-recently-*served* order — every serve and (re)admission
+        ``move_to_end``s its graph — so scanning it front-to-back visits
+        true LRU order, not insertion order. A replicated victim whose
+        stake on the device is a secondary replica sheds just that
+        replica (cheaper than evicting a whole graph; its other clones
+        keep serving)."""
         for d in range(self.n_devices):
             while self.placer.used[d] > self.placer.budget:
+                # cheapest first: shed a secondary replica living on this
+                # device (LRU graph first) — its graph's other clones
+                # keep serving, no re-admission cost for anyone
+                rep = next((r for r in self._graphs.values()
+                            if r.graph_id != keep and d in r.replicas),
+                           None)
+                if rep is not None:
+                    self._drop_replica(rep, d)
+                    continue
                 victim = next(
                     (r for r in self._graphs.values()
                      if r.executor is not None and r.graph_id != keep
-                     and d in self.placer.placements[r.graph_id]
-                     .device_indices),
+                     and self.placer.resident_on(r.graph_id, d)),
                     None)
                 if victim is None:
                     break  # only `keep` holds this device; never evicted
@@ -392,7 +578,9 @@ class GCNServingEngine:
 
     def _maybe_rebalance(self, keep: str) -> None:
         """When eviction pressure concentrates on one device, migrate its
-        least-recently-served single-device graph to the coolest device."""
+        least-recently-served single-device graph to the coolest device
+        (replicated graphs are pinned by their own heat; sharded ones
+        span the mesh — neither migrates)."""
         target = self.placer.rebalance_target()
         if target is None:
             return
@@ -400,7 +588,7 @@ class GCNServingEngine:
         victim = next(
             (r for r in self._graphs.values()
              if r.graph_id != keep
-             and self.placer.placements[r.graph_id].kind != SHARDED
+             and self.placer.placements[r.graph_id].kind == SINGLE
              and self.placer.placements[r.graph_id].device_index == hot),
             None)
         if victim is None:
@@ -418,15 +606,48 @@ class GCNServingEngine:
     def graphs(self) -> List[str]:
         return list(self._graphs)
 
-    # ---- direct serving ----------------------------------------------------
+    # ---- dispatch machinery (replica routing + async/threaded execution) ---
 
-    def serve_batch(self, graph_id: str, xs) -> jax.Array:
-        """One jitted forward over a batch of same-graph feature matrices.
+    def _units(self, rec: _Resident) -> List[_Unit]:
+        """All resident serving clones of one admitted graph, primary
+        first."""
+        p = self.placer.placement_of(rec.graph_id)
+        primary_dev = None if p.kind == SHARDED else p.device_index
+        primary = _Unit(primary_dev, rec.executor, rec.fwd, rec.params,
+                        rec.bytes)
+        return [primary] + [rec.replicas[d] for d in sorted(rec.replicas)]
 
-        ``xs`` is a sequence of ``[n, f]`` arrays (or a stacked
-        ``[B, n, f]`` array); returns stacked ``[B, n, classes]`` logits.
-        The deadline scheduler serves queues through this same path, so
-        auto-flushed batches are bit-identical to direct calls."""
+    def _outstanding_key(self, unit: _Unit):
+        d = unit.device_index
+        return (self._dev_outstanding.get(d, 0.0) if d is not None else 0.0,
+                -1 if d is None else d)
+
+    def _pool_run(self, unit: _Unit, chunk):
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=self.n_devices, thread_name_prefix="awb-replica")
+
+        def run():
+            out = unit.fwd(unit.params, unit.executor.commit(chunk))
+            _block_until_ready(out)
+            return out
+
+        return self._pool.submit(run)
+
+    def _dispatch_batch(self, graph_id: str, xs) -> List[_Part]:
+        """Validate + stack ``xs``, ensure residency (LRU touch,
+        re-upload if evicted), route across replicas, and dispatch —
+        **counting nothing**: served-work counters and service EWMAs move
+        only when the completion path proves the computation finished.
+
+        A single-clone graph dispatches one async jit call (awaited
+        later, so batches of different graphs still overlap). A
+        replicated graph splits the batch into contiguous even chunks —
+        one per replica, least-outstanding-work replicas first — and runs
+        each chunk on its own thread: sub-batches of the *same* graph
+        then execute concurrently on their devices, which is where
+        replica throughput scaling comes from. Every replica is a
+        bit-identical clone, so the split is invisible in the logits."""
         rec = self._graphs[graph_id]
         xb = xs if hasattr(xs, "ndim") and xs.ndim == 3 else jnp.stack(
             [jnp.asarray(x) for x in xs])
@@ -436,11 +657,96 @@ class GCNServingEngine:
                 f"features have {xb.shape[1]} rows; graph {graph_id!r} "
                 f"has {n} nodes")
         self._admit(rec)  # LRU touch + re-upload if evicted
-        out = rec.fwd(rec.params, rec.executor.commit(xb))
-        # count only completed batches — a failed/retried batch must not
-        # inflate the served-work stats
+        b = int(xb.shape[0])
+        units = sorted(self._units(rec), key=self._outstanding_key)
+        per_req = self._svc_req_ewma.get(graph_id, 0.0)
+        if len(units) == 1 or b == 1:
+            unit = units[0]
+            out = unit.fwd(unit.params, unit.executor.commit(xb))
+            part = _Part(unit.device_index, b, per_req * b, out=out)
+            self._charge(part, +1)
+            return [part]
+        units = units[:min(len(units), b)]
+        base, rem = divmod(b, len(units))
+        parts, offset = [], 0
+        for i, unit in enumerate(units):
+            size = base + (1 if i < rem else 0)
+            chunk = xb[offset:offset + size]
+            offset += size
+            part = _Part(unit.device_index, size, per_req * size,
+                         future=self._pool_run(unit, chunk))
+            self._charge(part, +1)
+            parts.append(part)
+        return parts
+
+    def _charge(self, part: _Part, sign: int) -> None:
+        d = part.device_index
+        if d is not None and part.est:
+            self._dev_outstanding[d] = max(
+                0.0, self._dev_outstanding.get(d, 0.0) + sign * part.est)
+
+    def _await_batch(self, graph_id: str, parts: List[_Part]):
+        """Block until every part of one dispatched batch completes, then
+        merge the sub-batch logits back in request order (on the primary
+        replica's device). Outstanding-work charges settle whether the
+        parts succeed or fail; a failure surfaces to the caller with the
+        served-work counters untouched."""
+        outs = []
+        try:
+            for part in parts:
+                out = (part.future.result() if part.future is not None
+                       else part.out)
+                _block_until_ready(out)
+                outs.append(out)
+        finally:
+            for part in parts:
+                self._charge(part, -1)
+        p = self.placer.placement_of(graph_id)
+        if len(outs) == 1:
+            # a replicated graph's output always lands committed to the
+            # primary's device, even when a single least-loaded secondary
+            # served the whole batch — which replica served must stay
+            # unobservable, placement included
+            if (p.kind == REPLICATED
+                    and parts[0].device_index != p.device_index):
+                return jax.device_put(outs[0],
+                                      self.devices[p.device_index])
+            return outs[0]
+        target = self.devices[p.device_index]
+        return jnp.concatenate(
+            [jax.device_put(o, target) for o in outs], axis=0)
+
+    def _note_service(self, gid: str, svc_s: float, n_requests: int) -> None:
+        """Fold one completed batch into the per-batch and per-request
+        service-time EWMAs (the deadline scheduler's dispatch estimate
+        and the replication saturation signal)."""
+        old = self._svc_ewma.get(gid)
+        self._svc_ewma[gid] = (svc_s if old is None
+                               else 0.5 * old + 0.5 * svc_s)
+        per = svc_s / max(1, n_requests)
+        old = self._svc_req_ewma.get(gid)
+        self._svc_req_ewma[gid] = (per if old is None
+                                   else 0.5 * old + 0.5 * per)
+
+    # ---- direct serving ----------------------------------------------------
+
+    def serve_batch(self, graph_id: str, xs) -> jax.Array:
+        """One jitted forward over a batch of same-graph feature matrices.
+
+        ``xs`` is a sequence of ``[n, f]`` arrays (or a stacked
+        ``[B, n, f]`` array); returns stacked ``[B, n, classes]`` logits.
+        The deadline scheduler serves queues through this same dispatch
+        path, so auto-flushed batches are bit-identical to direct calls.
+        ``batches``/``requests`` count **only after the computation
+        completes** — a dispatch that fails asynchronously leaves the
+        served-work stats untouched (same invariant as the queue path)."""
+        t0 = time.monotonic()
+        parts = self._dispatch_batch(graph_id, xs)
+        out = self._await_batch(graph_id, parts)
         self.counters["batches"] += 1
-        self.counters["requests"] += int(xb.shape[0])
+        self.counters["requests"] += sum(p.n for p in parts)
+        self._note_service(graph_id, time.monotonic() - t0,
+                           sum(p.n for p in parts))
         return out
 
     def infer(self, graph_id: str, x) -> jax.Array:
@@ -474,6 +780,10 @@ class GCNServingEngine:
         self._pending.setdefault(graph_id, []).append(
             _Request(rid=rid, x=x, submit_t=now, deadline=deadline))
         if len(self._pending[graph_id]) >= self.max_batch:
+            # a queue hot enough to hit the threshold is the saturation
+            # signal's strongest form — give replication a chance to grow
+            # before the batch serves
+            self._update_replication()
             served = self._serve_queues([graph_id])
             for gid, out in served.items():
                 self._ready.setdefault(gid, []).append(out)
@@ -484,30 +794,50 @@ class GCNServingEngine:
         (merged with any batches a ``max_batch`` threshold already
         auto-flushed).
 
-        A queue is due when its earliest deadline, minus 1.5× the
-        *cumulative* smoothed service time of everything EDF-ahead of it
-        on its device (plus a small floor), has arrived — co-located
-        batches serialize on their device, so the tail graph's dispatch
-        must leave room for the queue ahead of it, not just its own
-        batch. When a queue is due, every EDF-predecessor serves with it
-        (they would block the device anyway). Call this from the serving
-        loop; ``now`` defaults to ``time.monotonic()`` (tests inject a
-        clock)."""
+        A queue is due when its earliest deadline, minus 1.5× its
+        estimated completion time (plus a small floor), has arrived. The
+        completion estimate walks the queues in EDF order over a
+        **per-device load map** — each device's cumulative busy seconds:
+
+        * a single-device queue stacks onto its device (co-located
+          queues serialize, so the tail queue's dispatch must absorb
+          everything EDF-ahead of it on that device);
+        * a sharded queue starts when its *busiest* mesh device frees and
+          advances every device to the common completion time (the psum
+          synchronizes them);
+        * a replicated queue splits across its clones: its completion
+          anchors on its **least-loaded replica**, and each replica
+          absorbs an even share — never the whole batch on every clone.
+
+        When a queue is due, every EDF-predecessor serves with it. Call
+        this from the serving loop; ``now`` defaults to
+        ``time.monotonic()`` (tests inject a clock). Replica sets grow or
+        shrink here too (see ``_update_replication``)."""
         if now is None:
             now = time.monotonic()
+        self._update_replication()
         order = sorted(((g, q) for g, q in self._pending.items() if q),
                        key=lambda t: (_earliest_deadline(t[1]), t[0]))
-        load: Dict[int, float] = {}  # device -> cumulative est seconds
+        load: Dict[int, float] = {}  # device -> cumulative busy seconds
         threshold, due_upto = [], -1
         for i, (gid, q) in enumerate(order):
             est = self._svc_ewma.get(gid, 0.0)
-            devs = self.placer.placement_of(gid).device_indices
-            ahead = max((load.get(d, 0.0) for d in devs), default=0.0)
-            for d in devs:
-                load[d] = ahead + est
+            p = self.placer.placement_of(gid)
+            devs = p.device_indices
+            if p.kind == REPLICATED:
+                start = min(load.get(d, 0.0) for d in devs)
+                done = start + est
+                share = est / len(devs)
+                for d in devs:
+                    load[d] = load.get(d, 0.0) + share
+            else:
+                start = max((load.get(d, 0.0) for d in devs), default=0.0)
+                done = start + est
+                for d in devs:
+                    load[d] = done
             if len(q) >= self.max_batch:
                 threshold.append(gid)
-            slack = _SVC_SAFETY * (ahead + est) + _SVC_FLOOR_S
+            slack = _SVC_SAFETY * done + _SVC_FLOOR_S
             if _earliest_deadline(q) - slack <= now:
                 due_upto = i
         due = {g for g, _ in order[:due_upto + 1]} | set(threshold)
@@ -542,12 +872,15 @@ class GCNServingEngine:
     def _serve_queues(self, graph_ids) -> Dict[str, jax.Array]:
         """Serve the named graphs' queues: EDF dispatch order, then await.
 
-        All batches are **dispatched** (async jit calls) before any result
-        is awaited, so batches placed on different mesh devices execute
-        concurrently; awaiting then happens in the same EDF order. Failed
-        graphs get their queue restored at the front and are reported
-        together in one ``FlushError`` after every healthy graph was
-        served."""
+        All batches are **dispatched** (async jit calls; per-replica
+        sub-batches on worker threads) before any result is awaited, so
+        batches placed on different mesh devices execute concurrently;
+        awaiting then happens in the same EDF order. ``batches``/
+        ``requests`` count a batch only once its completion is proven —
+        a dispatch that fails later never inflates the served-work stats.
+        Failed graphs get their queue restored at the front and are
+        reported together in one ``FlushError`` after every healthy graph
+        was served."""
         order = sorted(
             (g for g in graph_ids if self._pending.get(g)),
             key=lambda g: (_earliest_deadline(self._pending[g]), g))
@@ -562,25 +895,22 @@ class GCNServingEngine:
             reqs = self._pending.pop(gid)
             t_disp = time.monotonic()
             try:
-                out = self.serve_batch(gid, [r.x for r in reqs])
+                parts = self._dispatch_batch(gid, [r.x for r in reqs])
             except Exception as e:
                 failures[gid] = e
                 restore(gid, reqs)
                 continue
-            inflight.append((gid, reqs, out, t_disp))
-        for gid, reqs, out, t_disp in inflight:
+            inflight.append((gid, reqs, parts, t_disp))
+        for gid, reqs, parts, t_disp in inflight:
             try:
-                jax.block_until_ready(out)
+                out = self._await_batch(gid, parts)
             except Exception as e:
                 failures[gid] = e
-                # serve_batch counted this batch at dispatch; it produced
-                # nothing and will be retried — keep the served-work
-                # counters honest (their count-only-completed invariant)
-                self.counters["batches"] -= 1
-                self.counters["requests"] -= len(reqs)
                 restore(gid, reqs)
                 continue
             t_done = time.monotonic()
+            self.counters["batches"] += 1
+            self.counters["requests"] += len(reqs)
             self._note_served(gid, reqs, t_disp, t_done)
             served[gid] = out
         if failures:
@@ -590,8 +920,9 @@ class GCNServingEngine:
     def _note_served(self, gid: str, reqs: List[_Request],
                      t_disp: float, t_done: float) -> None:
         """Record per-request latency + deadline outcome, and fold the
-        batch service time into the graph's EWMA (what ``poll`` subtracts
-        from deadlines to dispatch early enough)."""
+        batch service time into the graph's EWMAs (what ``poll`` subtracts
+        from deadlines to dispatch early enough, and what the replication
+        policy multiplies by queue depth)."""
         for r in reqs:
             lat = t_done - r.submit_t
             self._lat_n += 1
@@ -601,9 +932,7 @@ class GCNServingEngine:
                 key = ("deadline_met" if t_done <= r.deadline
                        else "deadline_misses")
                 self.counters[key] += 1
-        svc = t_done - t_disp
-        old = self._svc_ewma.get(gid)
-        self._svc_ewma[gid] = svc if old is None else 0.5 * old + 0.5 * svc
+        self._note_service(gid, t_done - t_disp, len(reqs))
 
     def reset_stats(self) -> None:
         """Zero the counters and latency aggregates (benchmark sections
@@ -612,6 +941,11 @@ class GCNServingEngine:
         self._lat_n, self._lat_total, self._lat_max = 0, 0.0, 0.0
 
     def stats(self) -> dict:
+        replicas = {
+            g: list(self.placer.placement_of(g).device_indices)
+            for g in self._graphs
+            if self.placer.placement_of(g) is not None
+            and self.placer.placement_of(g).kind == REPLICATED}
         return dict(
             self.counters,
             device_bytes_in_use=self.device_bytes_in_use,
@@ -624,5 +958,6 @@ class GCNServingEngine:
             latency_us_mean=(self._lat_total / self._lat_n * 1e6
                              if self._lat_n else 0.0),
             latency_us_max=self._lat_max * 1e6,
+            replicas=replicas,
             per_device=self.placer.device_report(),
         )

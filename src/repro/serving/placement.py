@@ -1,4 +1,4 @@
-"""Mesh-wide graph placement: which device serves which resident graph.
+"""Mesh-wide graph placement: which device(s) serve which resident graph.
 
 AWB-GCN balances workload across the PE array *within* one graph; a serving
 mesh faces the same problem one level up — many resident graphs, each a
@@ -18,6 +18,14 @@ bounded HBM. ``MeshPlacer`` is the single owner of that decision:
   *is* the per-device slice (``schedule_shard.shard_payload_bytes``
   models that slice and the tests pin it to the executor's real
   ``device_bytes``).
+* **Replication for hot graphs.** When one graph saturates its device's
+  throughput, the engine clones it: ``add_replica`` grows a
+  ``REPLICATED`` placement — the *same* graph resident on several devices
+  behind a load balancer (AWB-GCN's remote switching from a congested PE
+  to an underloaded one, lifted to placement). The replica lands on the
+  coolest device (most free budget, like admission), each replica's bytes
+  are accounted to its own device, and ``drop_replica`` shrinks the set
+  back — collapsing to ``SINGLE`` when only the primary remains.
 * **Eviction-pressure rebalancing.** The placer counts evictions per
   device; when pressure concentrates on one device (≥ ``rebalance_after``
   evictions there and ≥ 2× the coolest device), ``rebalance_target``
@@ -36,6 +44,7 @@ from typing import Dict, List, Optional, Tuple
 
 SINGLE = "single"
 SHARDED = "sharded"
+REPLICATED = "replicated"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,17 +54,23 @@ class Placement:
     ``kind == "single"``: the graph's executor and weights are pinned to
     ``mesh[device_index]``. ``kind == "sharded"``: the graph spans all
     ``n_devices`` mesh devices through a ``ShardedScheduleExecutor`` and
-    ``device_index`` is None.
+    ``device_index`` is None. ``kind == "replicated"``: independent full
+    clones of the graph live on each device in ``replicas`` (primary
+    first — ``device_index`` stays the primary, which is never dropped);
+    any one replica can serve any request.
     """
     kind: str
     device_index: Optional[int]
     n_devices: int
+    replicas: Tuple[int, ...] = ()
 
     @property
     def device_indices(self) -> Tuple[int, ...]:
         """Every mesh device this placement touches."""
         if self.kind == SINGLE:
             return (self.device_index,)
+        if self.kind == REPLICATED:
+            return self.replicas
         return tuple(range(self.n_devices))
 
 
@@ -66,7 +81,9 @@ class MeshPlacer:
     executors, the LRU order, and performs the actual evictions/uploads.
     ``used[d]`` meters *resident* bytes only — an evicted graph keeps its
     placement (re-admission returns to the same device) until a rebalance
-    moves it.
+    moves it. Byte accounting is per (graph, device): a replicated graph
+    carries one full footprint on **each** replica device, and dropping
+    one replica frees exactly that device's share.
     """
 
     def __init__(self, n_devices: int, per_device_budget_bytes: int, *,
@@ -79,7 +96,8 @@ class MeshPlacer:
         self.used: List[int] = [0] * self.n_devices
         self.evictions: List[int] = [0] * self.n_devices
         self.placements: Dict[str, Placement] = {}
-        self._resident_bytes: Dict[str, int] = {}
+        #: per-graph map of device index → resident bytes on that device
+        self._resident_bytes: Dict[str, Dict[int, int]] = {}
         self.n_rebalances = 0
 
     # ---- admission decisions ----------------------------------------------
@@ -115,21 +133,27 @@ class MeshPlacer:
 
     def account(self, graph_id: str, nbytes: int) -> None:
         """Record ``nbytes`` device-resident for a placed graph (sharded
-        graphs spread evenly across the mesh)."""
+        graphs spread evenly across the mesh). Replica growth never goes
+        through here — ``add_replica`` accounts its own device."""
         p = self.placements[graph_id]
         if graph_id in self._resident_bytes:
             raise ValueError(f"graph {graph_id!r} already accounted")
-        self._resident_bytes[graph_id] = int(nbytes)
-        for d, share in zip(p.device_indices, self._shares(p, nbytes)):
+        if p.kind == REPLICATED:
+            raise ValueError(
+                f"graph {graph_id!r} is replicated; replicas account "
+                "per-device through add_replica")
+        shares = self._shares(p, nbytes)
+        self._resident_bytes[graph_id] = dict(zip(p.device_indices, shares))
+        for d, share in zip(p.device_indices, shares):
             self.used[d] += share
 
     def unaccount(self, graph_id: str) -> None:
-        """Release a graph's resident bytes (eviction or removal)."""
-        nbytes = self._resident_bytes.pop(graph_id, None)
-        if nbytes is None:
+        """Release a graph's resident bytes on **every** device it
+        occupies (full eviction or removal)."""
+        per_dev = self._resident_bytes.pop(graph_id, None)
+        if per_dev is None:
             return
-        p = self.placements[graph_id]
-        for d, share in zip(p.device_indices, self._shares(p, nbytes)):
+        for d, share in per_dev.items():
             self.used[d] -= share
 
     def forget(self, graph_id: str) -> None:
@@ -140,11 +164,97 @@ class MeshPlacer:
     def is_resident(self, graph_id: str) -> bool:
         return graph_id in self._resident_bytes
 
+    def resident_on(self, graph_id: str, device_index: int) -> bool:
+        return device_index in self._resident_bytes.get(graph_id, {})
+
     @staticmethod
     def _shares(p: Placement, nbytes: int) -> List[int]:
         n = len(p.device_indices)
         share = -(-int(nbytes) // n)  # ceil: never under-account a device
         return [share] * n
+
+    # ---- replication (engine calls when one graph saturates a device) ------
+
+    def replica_candidate(self, graph_id: str,
+                          nbytes: Optional[int] = None) -> Optional[int]:
+        """The device the next replica of ``graph_id`` should land on —
+        the coolest (most free budget, ties to the lowest index) device
+        not already hosting a replica — or None when every mesh device
+        already hosts one. Pass ``nbytes`` (the clone's footprint) to
+        also require the device to have room for it: replication is a
+        luxury, so growth must never evict resident graphs to make
+        space (without the fit check a hot graph ping-pongs — grow onto
+        a full device, budget sweep drops the clone, next poll re-grows
+        it, one full upload per cycle). Sharded graphs cannot replicate
+        (they already span the mesh); nor can a graph that is not
+        resident."""
+        p = self.placements[graph_id]
+        if p.kind == SHARDED or not self.is_resident(graph_id):
+            return None
+        free = [d for d in range(self.n_devices)
+                if d not in p.device_indices
+                and (nbytes is None or self.free_bytes(d) >= nbytes)]
+        if not free:
+            return None
+        return max(free, key=lambda d: (self.free_bytes(d), -d))
+
+    def add_replica(self, graph_id: str, nbytes: int,
+                    device_index: Optional[int] = None) -> int:
+        """Grow ``graph_id``'s replica set by one device and account
+        ``nbytes`` (one full clone footprint) there. ``device_index``
+        defaults to ``replica_candidate``; raises when the graph cannot
+        replicate or the device already hosts it. Returns the device the
+        replica landed on."""
+        p = self.placements[graph_id]
+        if p.kind == SHARDED:
+            raise ValueError(
+                f"graph {graph_id!r} is sharded across the mesh; "
+                "sharded graphs cannot replicate")
+        if not self.is_resident(graph_id):
+            raise ValueError(
+                f"graph {graph_id!r} is not resident; admit it before "
+                "replicating")
+        if device_index is None:
+            device_index = self.replica_candidate(graph_id)
+            if device_index is None:
+                raise ValueError(
+                    f"graph {graph_id!r} already has a replica on every "
+                    f"device of this {self.n_devices}-device mesh")
+        device_index = int(device_index)
+        if device_index in p.device_indices:
+            raise ValueError(
+                f"graph {graph_id!r} already has a replica on device "
+                f"{device_index}")
+        replicas = tuple(p.device_indices) + (device_index,)
+        self.placements[graph_id] = Placement(
+            REPLICATED, p.device_index, 1, replicas)
+        self._resident_bytes[graph_id][device_index] = int(nbytes)
+        self.used[device_index] += int(nbytes)
+        return device_index
+
+    def drop_replica(self, graph_id: str, device_index: int) -> Placement:
+        """Shrink ``graph_id``'s replica set: free ``device_index``'s
+        clone bytes and collapse back to ``SINGLE`` when only the primary
+        remains. The primary replica can never be dropped (that is the
+        engine's eviction, not a shrink)."""
+        p = self.placements[graph_id]
+        if p.kind != REPLICATED:
+            raise ValueError(f"graph {graph_id!r} is not replicated")
+        if device_index == p.device_index:
+            raise ValueError(
+                f"device {device_index} holds graph {graph_id!r}'s "
+                "primary replica; evict the graph instead of dropping it")
+        if device_index not in p.replicas:
+            raise ValueError(
+                f"graph {graph_id!r} has no replica on device "
+                f"{device_index}")
+        nbytes = self._resident_bytes[graph_id].pop(device_index)
+        self.used[device_index] -= nbytes
+        rest = tuple(d for d in p.replicas if d != device_index)
+        new = (Placement(SINGLE, p.device_index, 1) if len(rest) == 1
+               else Placement(REPLICATED, p.device_index, 1, rest))
+        self.placements[graph_id] = new
+        return new
 
     # ---- eviction pressure + rebalancing -----------------------------------
 
@@ -178,8 +288,11 @@ class MeshPlacer:
         stretch triggers one move, not a cascade)."""
         old = self.placements[graph_id]
         if old.kind != SINGLE:
-            raise ValueError(f"cannot move sharded graph {graph_id!r}")
-        nbytes = self._resident_bytes.get(graph_id)
+            raise ValueError(
+                f"cannot move {old.kind} graph {graph_id!r}; only "
+                "single-device placements migrate")
+        per_dev = self._resident_bytes.get(graph_id)
+        nbytes = None if per_dev is None else per_dev[old.device_index]
         self.unaccount(graph_id)
         new = Placement(SINGLE, int(device_index), 1)
         self.placements[graph_id] = new
@@ -192,13 +305,14 @@ class MeshPlacer:
     # ---- reporting ---------------------------------------------------------
 
     def device_report(self) -> List[dict]:
-        """Per-device occupancy snapshot for ``stats()``."""
+        """Per-device occupancy snapshot for ``stats()`` — replicated
+        graphs appear on every device currently hosting one of their
+        replicas."""
         graphs: List[List[str]] = [[] for _ in range(self.n_devices)]
         for gid, p in sorted(self.placements.items()):
-            if gid not in self._resident_bytes:
-                continue
             for d in p.device_indices:
-                graphs[d].append(gid)
+                if self.resident_on(gid, d):
+                    graphs[d].append(gid)
         return [{"device": d, "used_bytes": self.used[d],
                  "budget_bytes": self.budget,
                  "evictions": self.evictions[d], "resident": graphs[d]}

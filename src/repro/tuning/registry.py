@@ -80,6 +80,19 @@ def mesh_fingerprint(mesh=None, n_devices: Optional[int] = None):
     return (("dev",), (len(devs),), tuple(int(d.id) for d in devs))
 
 
+def device_fingerprint(device) -> Optional[tuple]:
+    """Hashable identity of a single-device placement handle — the third
+    leg of the ``(graph fingerprint, mesh, device)`` executor-cache key.
+    ``None`` (jax's default placement) stays ``None``, so existing
+    un-pinned entries keep their keys; a pinned handle keys by platform +
+    device id, letting **same-graph replicas on different devices
+    coexist** in the cache instead of the last-built replica evicting the
+    others."""
+    if device is None:
+        return None
+    return (str(getattr(device, "platform", "?")), int(device.id))
+
+
 _SCHEDULE_CACHE: dict = {}
 _EXECUTOR_CACHE: dict = {}
 _EXEC_BY_SCHEDULE: "OrderedDict[tuple, _ExecutorBase]" = OrderedDict()
@@ -171,6 +184,16 @@ def get_spmm_schedules(a: fmt.COO, *, nnz_per_step: int = 256,
     return fwd, bwd
 
 
+def _placement_key(mesh, n_devices, device):
+    """(mesh fingerprint, device fingerprint) with the combination rules:
+    ``device`` pins a single-device executor, so it contradicts a mesh."""
+    if device is not None and (mesh is not None or n_devices is not None):
+        raise ValueError(
+            "device= pins a single-device executor to one placement; it "
+            "cannot be combined with n_devices/mesh")
+    return mesh_fingerprint(mesh, n_devices), device_fingerprint(device)
+
+
 def get_executor(a: fmt.COO, *, nnz_per_step: int = 256,
                  rows_per_window: int = 64, cols_per_block=None,
                  window_nnz: Optional[int] = None, ktile: int = 128,
@@ -178,21 +201,22 @@ def get_executor(a: fmt.COO, *, nnz_per_step: int = 256,
                  balanced: bool = True,
                  bf16_accumulate: bool = False,
                  n_devices: Optional[int] = None,
-                 mesh=None) -> _ExecutorBase:
+                 mesh=None, device=None) -> _ExecutorBase:
     """Fingerprint-cached executor: the first call converges (builds the
     schedule, uploads it); every later call with the same graph + config is
     a pure cache hit — no rebuild, no host→device transfer.
 
     Pass ``n_devices`` (or a 1-D ``mesh``) for a ``ShardedScheduleExecutor``
-    whose schedule shards live one-per-device; the cache keys on
-    ``(graph fingerprint, mesh)``, so single- and multi-device executors of
-    the same graph coexist.
+    whose schedule shards live one-per-device, or ``device`` (a
+    ``jax.Device``) for a ``ScheduleExecutor`` pinned to one mesh device.
+    The cache keys on ``(graph fingerprint, mesh, device)``, so single-,
+    multi-device, and per-replica executors of the same graph coexist.
     """
     fp = graph_fingerprint(a)
-    mkey = mesh_fingerprint(mesh, n_devices)
+    mkey, dkey = _placement_key(mesh, n_devices, device)
     key = (_sched_key(fp, nnz_per_step, rows_per_window, cols_per_block,
                       window_nnz, balanced), ktile, routing, bf16_accumulate,
-           mkey)
+           mkey, dkey)
     ex = _EXECUTOR_CACHE.get(key)
     if ex is None:
         sched = get_schedule(a, nnz_per_step=nnz_per_step,
@@ -202,7 +226,8 @@ def get_executor(a: fmt.COO, *, nnz_per_step: int = 256,
                              fingerprint=fp)
         if mkey is None:
             ex = ScheduleExecutor(sched, ktile=ktile, routing=routing,
-                                  bf16_accumulate=bf16_accumulate)
+                                  bf16_accumulate=bf16_accumulate,
+                                  device=device)
         else:
             ex = ShardedScheduleExecutor(sched, n_devices=n_devices,
                                          mesh=mesh, ktile=ktile,
@@ -216,24 +241,24 @@ def executor_for_schedule(sched: Schedule, *, ktile: int = 128,
                           routing: Optional[str] = None,
                           bf16_accumulate: bool = False,
                           n_devices: Optional[int] = None,
-                          mesh=None) -> _ExecutorBase:
+                          mesh=None, device=None) -> _ExecutorBase:
     """Executor for a caller-built schedule, memoized per (schedule
-    instance, ktile, routing, mesh) — identity-keyed, so rebuilding a
-    schedule re-uploads while reusing one doesn't, and asking for a
-    different routing/ktile/mesh never returns a mismatched cached
-    executor."""
+    instance, ktile, routing, mesh, device) — identity-keyed, so
+    rebuilding a schedule re-uploads while reusing one doesn't, and
+    asking for a different routing/ktile/mesh/device never returns a
+    mismatched cached executor."""
     routing = routing or select_routing(
         sched.nnz_per_step, sched.cols_per_block, sched.rows_per_window,
         ktile)
-    mkey = mesh_fingerprint(mesh, n_devices)
-    key = (id(sched), ktile, routing, bf16_accumulate, mkey)
+    mkey, dkey = _placement_key(mesh, n_devices, device)
+    key = (id(sched), ktile, routing, bf16_accumulate, mkey, dkey)
     ex = _EXEC_BY_SCHEDULE.get(key)
     if ex is not None and ex.sched is sched:
         _EXEC_BY_SCHEDULE.move_to_end(key)
         return ex
     if mkey is None:
         ex = ScheduleExecutor(sched, ktile=ktile, routing=routing,
-                              bf16_accumulate=bf16_accumulate)
+                              bf16_accumulate=bf16_accumulate, device=device)
     else:
         ex = ShardedScheduleExecutor(sched, n_devices=n_devices, mesh=mesh,
                                      ktile=ktile, routing=routing,

@@ -21,9 +21,10 @@ import jax.numpy as jnp  # noqa: E402
 
 from repro.core import executor as exe, gcn, schedule  # noqa: E402
 from repro.graphs import synth  # noqa: E402
-from repro.serving.gcn_engine import FlushError, GCNServingEngine  # noqa: E402
-from repro.serving.placement import (SHARDED, SINGLE,  # noqa: E402
-                                     MeshPlacer)
+from repro.serving.gcn_engine import (FlushError,  # noqa: E402
+                                      GCNServingEngine, _Request)
+from repro.serving.placement import (REPLICATED, SHARDED,  # noqa: E402
+                                     SINGLE, MeshPlacer, Placement)
 from repro.sharding import schedule_shard  # noqa: E402
 from repro.tuning import registry  # noqa: E402
 
@@ -161,6 +162,96 @@ def test_sharded_graph_cannot_be_moved():
         p.move("giant", 1)
 
 
+def test_replica_grow_and_shrink_accounting():
+    """add_replica lands on the coolest device, accounts one full clone
+    footprint per replica device, and drop_replica frees exactly its
+    device's share, collapsing to SINGLE at one remaining replica."""
+    p = MeshPlacer(4, 1000)
+    p.place("g", 300)
+    p.account("g", 300)                  # primary on dev0
+    assert p.replica_candidate("g") == 1
+    assert p.add_replica("g", 300) == 1
+    pl = p.placement_of("g")
+    assert pl.kind == REPLICATED and pl.device_indices == (0, 1)
+    assert pl.device_index == 0          # primary unchanged
+    assert p.used == [300, 300, 0, 0]    # per-replica byte accounting
+    p.place("other", 500)
+    p.account("other", 500)              # worst-fit -> dev2
+    assert p.replica_candidate("g") == 3  # coolest non-hosting device
+    p.add_replica("g", 300, device_index=3)
+    assert p.placement_of("g").device_indices == (0, 1, 3)
+    assert p.used == [300, 300, 500, 300]
+    pl = p.drop_replica("g", 1)
+    assert pl.device_indices == (0, 3)
+    assert p.used == [300, 0, 500, 300]
+    pl = p.drop_replica("g", 3)
+    assert pl.kind == SINGLE and pl.device_index == 0   # collapsed
+    assert p.used == [300, 0, 500, 0]
+    p.forget("g")
+    assert p.used == [0, 0, 500, 0]
+
+
+def test_replica_candidate_requires_room_for_the_clone():
+    """Growth never evicts resident graphs to make space: with the
+    clone's footprint passed, full devices are not candidates, and when
+    nothing fits the candidate is None (the unfiltered query still names
+    the coolest device)."""
+    p = MeshPlacer(3, 1000)
+    p.place("g", 400)
+    p.account("g", 400)                  # dev0
+    p.place("big", 900)
+    p.account("big", 900)                # worst-fit -> dev1
+    assert p.replica_candidate("g", 400) == 2    # dev1 has no room
+    p.place("mid", 700)
+    p.account("mid", 700)                # -> dev2
+    assert p.replica_candidate("g", 400) is None  # nothing fits now
+    assert p.replica_candidate("g") == 2          # unfiltered: coolest
+
+
+def test_replica_unaccount_clears_every_device():
+    p = MeshPlacer(3, 1000)
+    p.place("g", 200)
+    p.account("g", 200)
+    p.add_replica("g", 200)
+    p.add_replica("g", 200)
+    assert p.used == [200, 200, 200]
+    p.unaccount("g")
+    assert p.used == [0, 0, 0] and not p.is_resident("g")
+
+
+def test_replica_invariants_rejected():
+    p = MeshPlacer(2, 1000)
+    p.place("g", 100)
+    with pytest.raises(ValueError, match="not resident"):
+        p.add_replica("g", 100)          # must be admitted first
+    p.account("g", 100)
+    p.add_replica("g", 100)
+    with pytest.raises(ValueError, match="already has a replica"):
+        p.add_replica("g", 100)          # every device already hosts one
+    with pytest.raises(ValueError, match="primary"):
+        p.drop_replica("g", 0)
+    with pytest.raises(ValueError, match="cannot move"):
+        p.move("g", 1)                   # replicated graphs don't migrate
+    p2 = MeshPlacer(2, 10)
+    p2.place("giant", 50)                # sharded route
+    p2.account("giant", 50)
+    assert p2.replica_candidate("giant") is None
+    with pytest.raises(ValueError, match="sharded"):
+        p2.add_replica("giant", 50)
+
+
+def test_device_report_lists_replicas_per_device():
+    p = MeshPlacer(2, 1000)
+    p.place("g", 100)
+    p.account("g", 100)
+    p.add_replica("g", 100)
+    rep = p.device_report()
+    assert rep[0]["resident"] == ["g"] and rep[1]["resident"] == ["g"]
+    p.drop_replica("g", 1)
+    rep = p.device_report()
+    assert rep[0]["resident"] == ["g"] and rep[1]["resident"] == []
+
+
 def test_shard_payload_bytes_matches_executor_footprint():
     """The placer's even-split accounting rests on the 12-bytes/slot
     padded-shard model; pin it to the real uploaded footprint so the
@@ -260,13 +351,13 @@ def test_flush_order_is_edf_then_graph_id_not_insertion(tmp_path):
     eng.submit("g0", graphs["g0"][2], deadline_s=500.0)
     eng.submit("g1", graphs["g1"][2], deadline_s=100.0)
     order = []
-    orig = eng.serve_batch
+    orig = eng._dispatch_batch
 
     def recording(graph_id, xs):
         order.append(graph_id)
         return orig(graph_id, xs)
 
-    eng.serve_batch = recording
+    eng._dispatch_batch = recording
     eng.flush()
     assert order == ["g1", "g0", "g2"]
 
@@ -281,14 +372,14 @@ def test_flush_restores_multiple_failed_queues_in_order(tmp_path):
     for gid, (a, params, x) in graphs.items():
         eng.submit(gid, x)
         eng.submit(gid, x * 2.0)
-    orig = eng.serve_batch
+    orig = eng._dispatch_batch
 
     def failing(graph_id, xs):
         if graph_id in ("g0", "g2"):
             raise RuntimeError(f"{graph_id} device fell over")
         return orig(graph_id, xs)
 
-    eng.serve_batch = failing
+    eng._dispatch_batch = failing
     with pytest.raises(FlushError) as exc_info:
         eng.flush()
     err = exc_info.value
@@ -303,7 +394,7 @@ def test_flush_restores_multiple_failed_queues_in_order(tmp_path):
         np.testing.assert_array_equal(np.asarray(q[1].x),
                                       graphs[gid][2] * 2.0)
     assert "g1" not in eng._pending
-    eng.serve_batch = orig
+    eng._dispatch_batch = orig
     out = eng.flush()
     assert set(out) == {"g0", "g2"}
     assert all(v.shape == (2, N_NODES, N_CLASSES) for v in out.values())
@@ -316,18 +407,104 @@ def test_restored_queue_front_ordering_with_new_submissions(tmp_path):
     eng = _engine(tmp_path)
     eng.add_graph("g", a, params)
     eng.submit("g", x)
-    orig = eng.serve_batch
-    eng.serve_batch = lambda *a_, **k: (_ for _ in ()).throw(
+    orig = eng._dispatch_batch
+    eng._dispatch_batch = lambda *a_, **k: (_ for _ in ()).throw(
         RuntimeError("boom"))
     with pytest.raises(FlushError):
         eng.flush()
-    eng.serve_batch = orig
+    eng._dispatch_batch = orig
     eng.submit("g", x * 3.0)
     q = eng._pending["g"]
     np.testing.assert_array_equal(np.asarray(q[0].x), x)       # restored
     np.testing.assert_array_equal(np.asarray(q[1].x), x * 3.0)  # newer
     out = eng.flush()
     assert out["g"].shape == (2, N_NODES, N_CLASSES)
+
+
+# ---------------------------------------------------------------------------
+# poll()'s per-device load map (clock-injected, no real mesh: the map runs
+# on placer indices only, so a stubbed placer + hand-built queues pin the
+# dispatch decisions deterministically)
+# ---------------------------------------------------------------------------
+
+def _load_map_engine(tmp_path, placements):
+    """Engine whose scheduler state is hand-built: a stubbed 2-device
+    placer, injected service EWMAs, and a _serve_queues that records
+    instead of serving."""
+    eng = GCNServingEngine(store_root=tmp_path)
+    eng.placer = MeshPlacer(2, 1 << 30)
+    eng.placer.placements.update(placements)
+    eng._serve_queues = lambda gids: {g: None for g in gids}
+    return eng
+
+
+def _queue(eng, gid, deadline):
+    eng._pending.setdefault(gid, []).append(
+        _Request(rid=0, x=None, submit_t=0.0, deadline=deadline))
+
+
+def test_poll_load_map_stacks_colocated_queues(tmp_path):
+    """Two queues on ONE device serialize: the tail queue's slack must
+    absorb the cumulative service time of everything EDF-ahead of it on
+    that device, so it dispatches earlier than its own estimate alone
+    would suggest."""
+    eng = _load_map_engine(tmp_path, {"a": Placement(SINGLE, 0, 1),
+                                      "b": Placement(SINGLE, 0, 1)})
+    eng._svc_ewma.update(a=10.0, b=10.0)
+    _queue(eng, "a", deadline=1000.0)
+    _queue(eng, "b", deadline=1001.0)
+    # slack(a) = 1.5*10 + 0.01 -> due at 984.99
+    # slack(b) = 1.5*(10 + 10) + 0.01 -> due at 970.99 (stacked behind a)
+    assert eng.poll(now=969.0) == {}
+    assert set(eng.poll(now=975.0)) == {"a", "b"}  # b due; a rides along
+
+
+def test_poll_load_map_keeps_devices_independent(tmp_path):
+    """The same two queues on DIFFERENT devices do not stack: each
+    dispatches on its own estimate. A global (per-engine) accumulator
+    would serve both a full stacked-slack early."""
+    eng = _load_map_engine(tmp_path, {"a": Placement(SINGLE, 0, 1),
+                                      "b": Placement(SINGLE, 1, 1)})
+    eng._svc_ewma.update(a=10.0, b=10.0)
+    _queue(eng, "a", deadline=1000.0)
+    _queue(eng, "b", deadline=1001.0)
+    assert eng.poll(now=975.0) == {}              # neither due yet
+    assert set(eng.poll(now=985.5)) == {"a"}      # a due; b not (985.99)
+
+
+def test_poll_load_map_sharded_occupies_every_device(tmp_path):
+    """A sharded queue synchronizes the whole mesh at its psum: every
+    device advances to its completion time, so a single-device queue
+    behind it stacks even though they share no explicit device index."""
+    eng = _load_map_engine(
+        tmp_path, {"s": Placement(SHARDED, None, 2),
+                   "b": Placement(SINGLE, 1, 1)})
+    eng._svc_ewma.update(s=10.0, b=10.0)
+    _queue(eng, "s", deadline=1000.0)
+    _queue(eng, "b", deadline=1001.0)
+    # b stacks behind s on device 1: due at 1001 - (1.5*20 + 0.01)
+    assert set(eng.poll(now=975.0)) == {"s", "b"}
+
+
+def test_poll_load_map_replicated_follows_least_loaded_replica(tmp_path):
+    """Regression (ISSUE 5): the old load map overwrote every device of a
+    multi-device placement with the max-ahead estimate. For a REPLICATED
+    queue that is exactly wrong — the batch routes to the least-loaded
+    clone, so a busy co-replica device must not drag the dispatch
+    forward. Here the hot graph's replica on device 1 is idle: its queue
+    is due from its own estimate (due at 1084.99), not from device 0's
+    50 s backlog (which the old max-ahead rule would have turned into
+    dispatch at 1009.99 — an hour-early batch-splitting waste)."""
+    eng = _load_map_engine(
+        tmp_path, {"busy": Placement(SINGLE, 0, 1),
+                   "hot": Placement(REPLICATED, 0, 1, (0, 1))})
+    eng._svc_ewma.update(busy=50.0, hot=10.0)
+    _queue(eng, "busy", deadline=1000.0)
+    _queue(eng, "hot", deadline=1100.0)
+    out = eng.poll(now=1020.0)
+    assert set(out) == {"busy"}, (
+        "replicated queue dispatched off the busiest replica's backlog")
+    assert set(eng.poll(now=1090.0)) == {"busy", "hot"}
 
 
 def test_placement_survives_restart_warm_start(tmp_path):
@@ -517,4 +694,135 @@ def test_mesh_placement_sharded_giant_and_deadline_acceptance():
         f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
     for tag in ("DISTINCT OK", "SHARDED OK", "DEADLINE OK", "WARM OK",
                 "REBALANCE OK"):
+        assert tag in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# Multi-replica serving of a hot graph (8 forced host devices, subprocess)
+# ---------------------------------------------------------------------------
+
+SCRIPT_REPLICA = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, tempfile
+sys.path.insert(0, %r)
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import executor as exe, gcn, schedule
+from repro.graphs import synth
+from repro.serving.gcn_engine import GCNServingEngine
+from repro.serving.placement import REPLICATED, SINGLE
+from repro.tuning import registry, runner
+assert len(jax.devices()) == 8
+
+SWEEP = [dict(nnz_per_step=64, rows_per_window=32, cols_per_block=None,
+              window_nnz=None, routing=exe.GATHER)]
+KW = dict(iters=1, warmup=1, sweep=SWEEP, bf16_report=False)
+
+n = 300
+a = synth.power_law_adjacency(n, 0.03, 0.9, seed=5)
+cfg = gcn.GCNConfig(16, 16, 4)
+params = gcn.init_params(cfg, jax.random.PRNGKey(5))
+x = np.random.default_rng(5).random((n, 16)).astype(np.float32)
+reqs = [x * (1.0 - 0.02 * i) for i in range(12)]
+root = tempfile.mkdtemp(prefix="awb-replica-")
+
+# --- single-replica reference: max_replicas=1 pins the pre-replica path --
+ref_eng = GCNServingEngine(store_root=root, devices=8, max_replicas=1,
+                           replicate_after_s=1e-6, autotune_kwargs=KW)
+ref_eng.add_graph("hot", a, params)
+ref = np.asarray(ref_eng.serve_batch("hot", reqs))
+for r in reqs:
+    ref_eng.submit("hot", r, deadline_s=0.0)
+assert set(ref_eng.poll()) == {"hot"}
+assert ref_eng.stats()["replicas"] == {}
+assert ref_eng.counters["replicas_added"] == 0    # cap honoured
+print("SINGLE OK")
+
+# --- saturation grows replicas; growth is warm (no sweep, no rebuild) ----
+registry.clear_caches()
+eng = GCNServingEngine(store_root=root, devices=8, max_replicas=3,
+                       replicate_after_s=1e-6, replica_shrink_after=2,
+                       autotune_kwargs=KW)
+rep = eng.add_graph("hot", a, params)
+assert rep.warm_start
+eng.serve_batch("hot", reqs[:2])          # prime the service EWMA
+assert eng._svc_req_ewma["hot"] > 0
+orig_measure = runner.measure_candidate
+orig_build = schedule.build_balanced_schedule
+runner.measure_candidate = lambda *a_, **k: (_ for _ in ()).throw(
+    AssertionError("measured sweep during replica growth"))
+schedule.build_balanced_schedule = lambda *a_, **k: (_ for _ in ()).throw(
+    AssertionError("schedule rebuild during replica growth"))
+outs = []
+for _ in range(3):
+    for r in reqs:
+        eng.submit("hot", r, deadline_s=0.0)
+    outs.append(np.asarray(eng.poll()["hot"]))
+pl = eng.placer.placement_of("hot")
+assert pl.kind == REPLICATED and len(set(pl.device_indices)) == 3, pl
+assert eng.counters["replicas_added"] == 2
+st = eng.stats()
+assert st["replicas"] == {"hot": list(pl.device_indices)}
+per_dev = {d["device"]: d["resident"] for d in st["per_device"]}
+for d in pl.device_indices:
+    assert "hot" in per_dev[d]
+# secondary replicas are pinned executors on their own mesh devices
+for d, unit in eng._graphs["hot"].replicas.items():
+    assert unit.executor.device == eng.devices[d]
+print("GROW OK", pl.device_indices)
+
+# --- bit-identical logits no matter which replica served -----------------
+for out in outs:
+    assert out.shape == ref.shape
+    assert np.array_equal(out, ref), "replica outputs diverged"
+direct = np.asarray(eng.serve_batch("hot", reqs))  # splits across replicas
+assert np.array_equal(direct, ref)
+# a batch of one serves on the least-loaded clone, but the output still
+# lands committed to the PRIMARY's device — which replica served must be
+# unobservable, placement included
+one = eng.serve_batch("hot", [x])
+assert one.devices() == {eng.devices[0]}, one.devices()
+print("BITIDENTICAL OK")
+
+# --- budget sweep sheds a secondary replica before evicting a graph ------
+runner.measure_candidate = orig_measure
+schedule.build_balanced_schedule = orig_build
+a2 = synth.power_law_adjacency(260, 0.03, 0.9, seed=6)
+p2 = gcn.init_params(cfg, jax.random.PRNGKey(6))
+x2 = np.random.default_rng(6).random((260, 16)).astype(np.float32)
+eng.add_graph("cold", a2, p2)
+eng.infer("cold", x2)               # cold is most-recently-served
+sec = sorted(eng._graphs["hot"].replicas)[0]
+drops = eng.counters["replicas_dropped"]
+eng.placer.used[sec] += eng.placer.budget   # simulated pressure on sec
+eng._evict_over_budget(keep="cold")
+eng.placer.used[sec] -= eng.placer.budget
+assert eng.counters["replicas_dropped"] == drops + 1
+assert sec not in eng._graphs["hot"].replicas
+assert eng._graphs["hot"].executor is not None   # hot was NOT evicted
+assert eng.counters["evictions"] == 0            # nobody paid a full evict
+print("SHED OK")
+
+# --- shrink back under idle pressure -------------------------------------
+bytes_replicated = eng.device_bytes_in_use
+for _ in range(8):
+    eng.poll()                            # empty queues: calm accumulates
+pl = eng.placer.placement_of("hot")
+assert pl.kind == SINGLE, pl
+assert eng.counters["replicas_dropped"] == 2
+assert eng.device_bytes_in_use < bytes_replicated
+assert eng._graphs["hot"].replicas == {}
+assert np.array_equal(np.asarray(eng.serve_batch("hot", reqs)), ref)
+print("SHRINK OK")
+""" % (SRC,)
+
+
+@pytest.mark.distributed
+def test_replicated_hot_graph_acceptance():
+    r = subprocess.run([sys.executable, "-c", SCRIPT_REPLICA],
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, \
+        f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+    for tag in ("SINGLE OK", "GROW OK", "BITIDENTICAL OK", "SHED OK",
+                "SHRINK OK"):
         assert tag in r.stdout

@@ -200,14 +200,14 @@ def test_flush_failure_preserves_unserved_queues(tmp_path, monkeypatch):
     eng.add_graph("g2", g2[0], g2[1])
     eng.submit("g1", g1[2])
     eng.submit("g2", g2[2])
-    orig = eng.serve_batch
+    orig = eng._dispatch_batch
 
     def failing(graph_id, xs):
         if graph_id == "g2":
             raise RuntimeError("device fell over")
         return orig(graph_id, xs)
 
-    monkeypatch.setattr(eng, "serve_batch", failing)
+    monkeypatch.setattr(eng, "_dispatch_batch", failing)
     with pytest.raises(FlushError) as exc_info:
         eng.flush()
     err = exc_info.value
@@ -238,6 +238,103 @@ def test_cold_admission_does_not_pin_registry_caches(tmp_path):
     np.testing.assert_allclose(
         np.asarray(eng.infer("g", x)),
         np.asarray(gcn.forward(params, a, jnp.asarray(x))), atol=1e-3)
+
+
+def test_eviction_is_lru_not_insertion_order(tmp_path):
+    """Regression (ISSUE 5): the budget sweep must evict the least-
+    recently-SERVED graph, never the first-inserted one. Constructed so
+    the two orders disagree: g0 was admitted before g1, but serving g0
+    makes g1 the LRU victim when g2's admission overflows the budget."""
+    graphs = {f"g{i}": _workload(70 + i) for i in range(3)}
+    eng = _engine(tmp_path)
+    for gid, (a, params, x) in graphs.items():
+        eng.add_graph(gid, a, params)
+    per_graph = max(r.bytes for r in eng._graphs.values())
+
+    registry.clear_caches()
+    eng2 = _engine(tmp_path, device_budget_bytes=int(per_graph * 2.2))
+    eng2.add_graph("g0", *graphs["g0"][:2])
+    eng2.add_graph("g1", *graphs["g1"][:2])
+    eng2.infer("g0", graphs["g0"][2])   # LRU order is now g1 < g0
+    eng2.add_graph("g2", *graphs["g2"][:2])
+    assert "g1" not in eng2.resident_graphs   # least recently served
+    assert "g0" in eng2.resident_graphs       # served after g1: survives
+    assert "g2" in eng2.resident_graphs
+    # and the mirror scenario: touching g1 instead protects it
+    registry.clear_caches()
+    eng3 = _engine(tmp_path, device_budget_bytes=int(per_graph * 2.2))
+    eng3.add_graph("g0", *graphs["g0"][:2])
+    eng3.add_graph("g1", *graphs["g1"][:2])
+    eng3.infer("g1", graphs["g1"][2])
+    eng3.infer("g0", graphs["g0"][2])
+    eng3.add_graph("g2", *graphs["g2"][:2])
+    assert "g1" not in eng3.resident_graphs
+    assert "g0" in eng3.resident_graphs
+
+
+def test_direct_serve_batch_counts_only_completed(tmp_path, monkeypatch):
+    """Regression (ISSUE 5): ``serve_batch`` used to count batches/
+    requests at dispatch and never roll back when the async computation
+    failed afterwards — only the queue path compensated. The invariant
+    now holds on the direct path: a batch that fails after dispatch
+    leaves the served-work counters (and service EWMAs) untouched."""
+    import repro.serving.gcn_engine as ge
+
+    a, params, x = _workload(80)
+    eng = _engine(tmp_path)
+    eng.add_graph("g", a, params)
+    before = dict(eng.counters)
+
+    def async_fault(out):
+        raise RuntimeError("XlaRuntimeError stand-in: device OOM")
+
+    monkeypatch.setattr(ge, "_block_until_ready", async_fault)
+    with pytest.raises(RuntimeError, match="OOM"):
+        eng.serve_batch("g", [x, x * 0.5])
+    assert eng.counters["batches"] == before["batches"]
+    assert eng.counters["requests"] == before["requests"]
+    assert "g" not in eng._svc_ewma  # a failed batch is not a measurement
+    monkeypatch.undo()
+
+    eng.serve_batch("g", [x, x * 0.5])
+    assert eng.counters["batches"] == before["batches"] + 1
+    assert eng.counters["requests"] == before["requests"] + 2
+    assert eng._svc_ewma["g"] > 0.0
+
+    # dispatch-stage failure keeps the same invariant
+    before = dict(eng.counters)
+    monkeypatch.setattr(eng, "_dispatch_batch",
+                        lambda *a_, **k: (_ for _ in ()).throw(
+                            RuntimeError("bad dispatch")))
+    with pytest.raises(RuntimeError, match="bad dispatch"):
+        eng.serve_batch("g", [x])
+    assert eng.counters["batches"] == before["batches"]
+    assert eng.counters["requests"] == before["requests"]
+
+
+def test_async_failure_in_flush_keeps_counters_honest(tmp_path, monkeypatch):
+    """The queue path's counters obey the same count-only-completed rule
+    when the failure happens at await time (after dispatch succeeded):
+    queue restored, nothing counted, FlushError raised."""
+    import repro.serving.gcn_engine as ge
+
+    a, params, x = _workload(81)
+    eng = _engine(tmp_path)
+    eng.add_graph("g", a, params)
+    eng.submit("g", x)
+    before = dict(eng.counters)
+    monkeypatch.setattr(ge, "_block_until_ready",
+                        lambda out: (_ for _ in ()).throw(
+                            RuntimeError("async fault")))
+    with pytest.raises(FlushError):
+        eng.flush()
+    assert eng.counters["batches"] == before["batches"]
+    assert eng.counters["requests"] == before["requests"]
+    assert len(eng._pending["g"]) == 1   # restored for retry
+    monkeypatch.undo()
+    out = eng.flush()
+    assert out["g"].shape == (1, N_NODES, N_CLASSES)
+    assert eng.counters["batches"] == before["batches"] + 1
 
 
 def test_remove_graph_releases_budget(tmp_path):

@@ -362,6 +362,55 @@ def test_release_graph_purges_device_step_arrays():
     assert not [k for k in registry._EXECUTOR_CACHE if k[0][0] == fp]
 
 
+def test_executor_cache_keys_on_device_so_replicas_coexist():
+    """The executor cache keys on (graph fingerprint, mesh, device):
+    asking for the same graph pinned to a device is a different entry
+    from the unpinned one — same-graph replicas coexist instead of the
+    last-built replica evicting the others. Repeat requests per key are
+    pure hits."""
+    a = _graph(seed=18)
+    dev = jax.devices()[0]
+    unpinned = registry.get_executor(a, nnz_per_step=16, rows_per_window=8)
+    pinned = registry.get_executor(a, nnz_per_step=16, rows_per_window=8,
+                                   device=dev)
+    assert unpinned is not pinned
+    assert unpinned.device is None and pinned.device == dev
+    assert pinned.sched is unpinned.sched        # one schedule build
+    assert registry.get_executor(a, nnz_per_step=16, rows_per_window=8,
+                                 device=dev) is pinned
+    assert registry.get_executor(a, nnz_per_step=16,
+                                 rows_per_window=8) is unpinned
+    with pytest.raises(ValueError, match="cannot be combined"):
+        registry.get_executor(a, nnz_per_step=16, rows_per_window=8,
+                              device=dev, n_devices=1)
+    # the identity-keyed per-schedule cache honours the same axis
+    sched = unpinned.sched
+    by_sched = registry.executor_for_schedule(sched, routing=exe.GATHER)
+    by_sched_pinned = registry.executor_for_schedule(sched, device=dev,
+                                                     routing=exe.GATHER)
+    assert by_sched is not by_sched_pinned
+    assert registry.executor_for_schedule(
+        sched, device=dev, routing=exe.GATHER) is by_sched_pinned
+
+
+def test_release_device_steps_scoped_to_one_device():
+    """Dropping one replica's device copy must not purge the surviving
+    replicas': release_device_steps(sched, device=...) is scoped, the
+    no-argument form stays the catch-all."""
+    a = _graph(seed=19)
+    sched = registry.get_schedule(a, nnz_per_step=16, rows_per_window=8)
+    dev = jax.devices()[0]
+    exe.device_step_arrays(sched, None)
+    exe.device_step_arrays(sched, dev)
+    keys = [k for k in exe._DEVICE_STEPS if k[0] == id(sched)]
+    assert len(keys) == 2
+    exe.release_device_steps(sched, device=dev)
+    keys = [k for k in exe._DEVICE_STEPS if k[0] == id(sched)]
+    assert keys == [(id(sched), None)]
+    exe.release_device_steps(sched)
+    assert not [k for k in exe._DEVICE_STEPS if k[0] == id(sched)]
+
+
 def test_autotune_cache_hit_still_populates_store(tmp_path):
     """Regression: an in-process _AUTOTUNE_CACHE hit must not skip store
     persistence — a second store on the same graph (e.g. two engines with
