@@ -29,7 +29,19 @@ never on timer noise:
   speedup of the saturation section must stay above the reference's
   speedup divided by ``tolerance``, and the replicated engine's logits
   must be bit-identical to the single-replica engine's
-  (``bit_identical=1`` is a hard correctness gate, not a perf ratio).
+  (``bit_identical=1`` is a hard correctness gate, not a perf ratio);
+* **open-loop p99 latency ceiling** -- smoke graphs and SLAs are smaller
+  than the reference's, so the steady section's p99 must come in under
+  ``tolerance x`` the reference p99; exceeding a full-scale tail at a
+  fraction of the size means deadline scheduling or admission broke;
+* **open-loop goodput floor** -- the steady section's goodput-under-SLA
+  percentage must stay above the reference's divided by ``tolerance``
+  (a collapse means the engine stopped serving within deadlines at 60%
+  load);
+* **open-loop shed accounting** -- every ``openloop/*/goodput`` row must
+  carry ``identity=1`` and satisfy
+  ``served + shed + rejected == submitted`` (a hard correctness gate:
+  requests must never vanish or be double-counted under overload).
 
 Exit code 0 = green, 1 = regression (messages on stdout, one per check).
 
@@ -37,6 +49,7 @@ This file is on the CI lint job's ``ruff format --check`` ratchet list:
 keep every statement on one line under 88 columns (compose long messages
 from parts) so the formatter has no wrapping decisions to disagree with.
 """
+
 from __future__ import annotations
 
 import argparse
@@ -46,15 +59,19 @@ import sys
 
 _SPEEDUP_RE = re.compile(r"speedup=([0-9.]+)x")
 _WARM_RE = re.compile(r"serving/(\w+)/warm_start")
+_COUNT_RE = re.compile(r"(submitted|served|shed|rejected)=(\d+)")
 
 _MESH_ROW = "serving/mesh8/mesh_throughput"
 _SINGLE_ROW = "serving/batched_throughput"
 _REPLICA_ROW = "serving/mesh8/hot_replicated"
+_OL_P99_ROW = "openloop/steady/p99"
+_OL_GOODPUT_ROW = "openloop/steady/goodput"
 
 _NO_SERVING = "MISSING: no serving/*/warm_start rows in the smoke JSON"
 _NO_TUNING = "MISSING: no autotune/* rows shared between smoke and reference"
 _NO_MESH = f"MISSING: no {_MESH_ROW} + {_SINGLE_ROW} rows in the smoke JSON"
 _NO_REPLICA = f"MISSING: no {_REPLICA_ROW} row in the smoke JSON"
+_NO_OPENLOOP = "MISSING: no openloop/steady/* rows in the smoke JSON"
 _GATE_BLIND = " -- the suite did not run; the gate cannot vouch for the PR"
 _NOT_SMOKE = "MISMATCH: --smoke JSON was not produced by run.py --smoke"
 _REF_SMOKE = "MISMATCH: the reference JSON is itself a smoke run"
@@ -169,6 +186,54 @@ def check(smoke: dict, reference: dict, tolerance: float) -> list:
                 why = "batches stopped scaling across replicas"
                 msg = f"{got} fell below {floor:.2f}x ({ref}) -- {why}"
                 problems.append(f"REGRESSION: {msg}")
+
+    # 6. open-loop p99 latency ceiling: smoke graphs/SLAs are smaller than
+    #    the reference's, so the steady tail must come in under tolerance x
+    #    the full-scale reference tail
+    if _OL_P99_ROW not in s_rows or _OL_GOODPUT_ROW not in s_rows:
+        problems.append(_NO_OPENLOOP + _GATE_BLIND)
+    else:
+        if _OL_P99_ROW in r_rows:
+            ref_us = r_rows[_OL_P99_ROW]["us_per_call"]
+            ceiling = ref_us * tolerance
+            smoke_us = s_rows[_OL_P99_ROW]["us_per_call"]
+            if smoke_us > ceiling:
+                got = f"open-loop steady p99 {smoke_us / 1e3:.1f}ms on smoke"
+                ref = f"{tolerance:g}x full-scale reference {ref_us / 1e3:.1f}ms"
+                why = "the deadline scheduler's tail blew up under load"
+                msg = f"{got} exceeds {ceiling / 1e3:.1f}ms ({ref}) -- {why}"
+                problems.append(f"REGRESSION: {msg}")
+        # 7. goodput floor (percent served within SLA; dimensionless)
+        if _OL_GOODPUT_ROW in r_rows:
+            floor = r_rows[_OL_GOODPUT_ROW]["us_per_call"] / tolerance
+            got_pct = s_rows[_OL_GOODPUT_ROW]["us_per_call"]
+            if got_pct < floor:
+                got = f"open-loop steady goodput {got_pct:.0f}%"
+                ref_pct = r_rows[_OL_GOODPUT_ROW]["us_per_call"]
+                ref = f"reference {ref_pct:.0f}% / tolerance {tolerance:g}"
+                why = "the engine stopped meeting SLAs at 60% load"
+                msg = f"{got} fell below {floor:.0f}% ({ref}) -- {why}"
+                problems.append(f"REGRESSION: {msg}")
+
+    # 8. open-loop shed accounting (hard correctness gate): on every
+    #    goodput row, served + shed + rejected must equal submitted
+    for name in sorted(s_rows):
+        if not (name.startswith("openloop/") and name.endswith("/goodput")):
+            continue
+        derived = s_rows[name].get("derived", "")
+        counts = dict(_COUNT_RE.findall(derived))
+        keys = ("submitted", "served", "shed", "rejected")
+        if "identity=1" not in derived or not all(k in counts for k in keys):
+            why = "the accounting identity was not asserted by the bench"
+            msg = f"{name} lacks identity=1 + full counts -- {why}"
+            problems.append(f"CORRECTNESS: {msg}")
+            continue
+        sub = int(counts["submitted"])
+        total = sum(int(counts[k]) for k in ("served", "shed", "rejected"))
+        if total != sub:
+            got = f"served+shed+rejected={total} != submitted={sub}"
+            why = "requests vanished or were double-counted under overload"
+            problems.append(f"CORRECTNESS: {name}: {got} -- {why}")
     return problems
 
 

@@ -34,10 +34,10 @@ def main() -> None:
         os.environ["BENCH_SMOKE"] = "1"
         print("[smoke] tiny synthetic preset active")
 
-    from benchmarks import (convergence, latency, moe_imbalance, order_ops,
-                            roofline_table, scaling, schedule_tuning,
-                            schedule_util, serving, sharded_spmm,
-                            utilization)
+    from benchmarks import (convergence, latency, moe_imbalance, openloop,
+                            order_ops, roofline_table, scaling,
+                            schedule_tuning, schedule_util, serving,
+                            sharded_spmm, utilization)
 
     suites = {
         "order_ops": order_ops.run,                    # Table II
@@ -49,6 +49,7 @@ def main() -> None:
         "schedule_tuning": schedule_tuning.run,        # kernel-param sweep
         "sharded_spmm": sharded_spmm.run,              # multi-device executor
         "serving": serving.run,                        # store + batching
+        "openloop": openloop.run,                      # overload/admission
         "moe_imbalance": moe_imbalance.run,            # beyond-paper (EP)
         "roofline": roofline_table.run,                # §Roofline
     }
@@ -82,7 +83,7 @@ def main() -> None:
         # engine's cold/warm-start numbers as their own sections, so the
         # perf trajectory across PRs tracks device scaling and store-hit
         # latency separately from the single-device rows
-        for section in ("sharded_spmm", "serving"):
+        for section in ("sharded_spmm", "serving", "openloop"):
             sub = [r for r in payload["rows"]
                    if r["name"].startswith(f"{section}/")]
             if sub:

@@ -85,6 +85,73 @@ def select_routing(k: int, cb: int, r: int, ktile: int = 128) -> str:
     return ONEHOT if cost[ONEHOT] <= cost[GATHER] else GATHER
 
 
+class InjectedFault(RuntimeError):
+    """Raised by ``FaultInjector.check`` at an armed seam (the default
+    exception type; ``arm(exc=...)`` substitutes another)."""
+
+
+#: wildcard filter value for FaultInjector.arm — matches any context
+ANY = object()
+
+
+class FaultInjector:
+    """Deterministic failure injection for the executor/serving stack.
+
+    Production code calls ``check(site, **ctx)`` at a few named seams;
+    the call is free when nothing is armed, and raises when an armed
+    fault matches. The seams:
+
+    * ``"upload"``   — host→device array upload (``_placed``), context
+      ``device=``: fails a device upload, e.g. mid re-admission.
+    * ``"dispatch"`` — the serving engine's batch dispatch, context
+      ``graph=``: fails the whole dispatch before any work is charged.
+    * ``"replica_chunk"`` — one replica's sub-batch execution, context
+      ``graph=``/``device=``: fails exactly one clone's chunk, leaving
+      its siblings healthy.
+
+    ``arm(site, times=n)`` fires the next ``n`` matching checks (filters
+    ``graph=``/``device=`` restrict the match; default matches any).
+    ``clear()`` disarms everything; ``fired`` logs each raised fault as
+    ``(site, graph, device)`` for assertions. Test seam only — never arm
+    in production code.
+    """
+
+    def __init__(self):
+        self._armed: list = []
+        self.fired: list = []
+
+    def arm(self, site: str, *, times: int = 1, exc=None,
+            graph=ANY, device=ANY) -> None:
+        self._armed.append({"site": site, "times": int(times), "exc": exc,
+                            "graph": graph, "device": device})
+
+    def clear(self) -> None:
+        self._armed.clear()
+        self.fired.clear()
+
+    def check(self, site: str, *, graph=None, device=None) -> None:
+        if not self._armed:
+            return
+        for f in self._armed:
+            if f["site"] != site:
+                continue
+            if f["graph"] is not ANY and f["graph"] != graph:
+                continue
+            if f["device"] is not ANY and f["device"] != device:
+                continue
+            f["times"] -= 1
+            if f["times"] <= 0:
+                self._armed.remove(f)
+            self.fired.append((site, graph, device))
+            raise (f["exc"] if f["exc"] is not None else InjectedFault(
+                f"injected {site} fault (graph={graph!r}, "
+                f"device={device!r})"))
+
+
+#: process-wide injector instance the seams consult (tests arm/clear it)
+FAULTS = FaultInjector()
+
+
 # step-major device copies of schedule arrays, shared between
 # ScheduleExecutor and the Pallas kernel wrapper so one schedule is
 # uploaded once no matter who consumes it. Keyed on (schedule identity,
@@ -96,6 +163,7 @@ _DEVICE_STEPS_CAP = 32
 
 def _placed(x, device):
     """Upload ``x`` to ``device`` (None = jax's default placement)."""
+    FAULTS.check("upload", device=device)
     if device is None:
         return jnp.asarray(x)
     return jax.device_put(jnp.asarray(x), device)

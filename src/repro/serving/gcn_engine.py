@@ -52,28 +52,48 @@ the tuning subsystem into that shape:
   copies are kept, so re-admission is a re-upload — still no rebuild, no
   sweep.
 
+* **Overload & fault robustness.** Arrivals don't wait: ``submit``
+  returns a typed ``SubmitTicket`` and the engine bounds its queues —
+  ``max_queue_depth`` **rejects** overflow instead of growing without
+  bound, and (opt-in) ``shed_unmeetable`` **sheds** a request when the
+  EDF load map's EWMA-predicted wait already proves its deadline
+  unmeetable (cheaper to refuse now than to serve a guaranteed miss
+  later). Devices fail mid-batch: a failed replica chunk retries on a
+  sibling clone (bit-identical, so the retry is unobservable), transient
+  dispatch failures retry with bounded exponential backoff, and a
+  request that still cannot be served surfaces as a typed failure with
+  every counter and outstanding-work meter consistent — never a hung
+  future, never leaked charges. Backpressure (queue depths, shed/reject
+  counts, per-device saturation seconds) surfaces in ``stats()``.
+  ``core.executor.FAULTS`` is the test seam that injects these failures
+  on demand.
+
 The engine deliberately bypasses ``tuning.registry``'s unbounded
 fingerprint caches for its executors — eviction must actually free device
 memory, so the engine's executor references are the only ones.
 """
+
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from concurrent.futures import ThreadPoolExecutor
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import csc as fmt
-from repro.core.executor import (ScheduleExecutor, ShardedScheduleExecutor,
-                                 release_device_steps)
+from repro.core.executor import (
+    FAULTS,
+    ScheduleExecutor,
+    ShardedScheduleExecutor,
+    release_device_steps,
+)
 from repro.core.schedule import Schedule
-from repro.serving.placement import (REPLICATED, SHARDED, SINGLE,
-                                     MeshPlacer, Placement)
+from repro.serving.placement import REPLICATED, SHARDED, SINGLE, MeshPlacer, Placement
 from repro.tuning import registry, runner, space
 from repro.tuning.space import TunedConfig
 from repro.tuning.store import TuningStore
@@ -96,20 +116,103 @@ _SVC_FLOOR_S = 0.010
 #: fault).
 _block_until_ready = jax.block_until_ready
 
+#: test seam: the sleep used by dispatch-retry backoff (monkeypatched so
+#: backoff tests record delays instead of waiting them out).
+_sleep = time.sleep
+
+#: bounded reservoir of recent per-request latencies (seconds) backing
+#: the p50/p95/p99 percentiles in ``stats()``.
+_LAT_RESERVOIR = 65536
+
+#: ``SubmitTicket.status`` values.
+ACCEPTED = "accepted"
+REJECTED = "rejected"  # queue at max_queue_depth — the engine is overloaded
+SHED = "shed"  # deadline provably unmeetable under predicted wait
+
+
+@dataclasses.dataclass(frozen=True)
+class SubmitTicket:
+    """Typed admission result of one ``submit`` call.
+
+    ``status == ACCEPTED``: the request is queued under ``rid``.
+    ``status == REJECTED``: the graph's queue sits at ``max_queue_depth``
+    — the overloaded-engine signal; back off and retry.
+    ``status == SHED``: the EDF load map's EWMA-predicted wait already
+    exceeds the request's deadline, so serving it could only produce a
+    deadline miss; it was dropped before costing any device time.
+    ``rid`` is None unless accepted; ``reason`` says why not.
+    """
+    rid: Optional[int]
+    status: str
+    reason: str = ""
+
+    @property
+    def accepted(self) -> bool:
+        return self.status == ACCEPTED
+
+    def __bool__(self) -> bool:  # `if eng.submit(...):` reads naturally
+        return self.accepted
+
+
+class UnknownGraphError(KeyError):
+    """A request named a graph this engine does not hold (never admitted,
+    or removed). One typed error across every path — ``submit``,
+    ``serve_batch``/``infer``, and ``remove_graph`` — so callers catch
+    one thing. Subclasses ``KeyError`` for backward compatibility."""
+
+    def __init__(self, graph_id: str, op: str = "serve"):
+        super().__init__(f"unknown graph {graph_id!r} (op={op})")
+        self.graph_id = graph_id
+        self.op = op
+
+    def __str__(self) -> str:  # KeyError quotes its arg; keep it readable
+        return self.args[0]
+
+
+class RequestFailure(RuntimeError):
+    """A direct ``serve_batch``/``infer`` call failed after exhausting
+    every recovery path (sibling-replica retries, bounded dispatch
+    retries). ``cause`` is the final underlying exception, ``n_failed``
+    the number of requests affected, and ``partial`` the merged logits of
+    the sub-batches that did succeed (None when none did). Served-work
+    counters were not inflated; outstanding-work meters are settled."""
+
+    def __init__(self, graph_id: str, cause: Exception, n_failed: int, partial=None):
+        super().__init__(
+            f"{n_failed} request(s) for graph {graph_id!r} failed after "
+            f"retries: {cause!r}"
+        )
+        self.graph_id = graph_id
+        self.cause = cause
+        self.n_failed = n_failed
+        self.partial = partial
+
+
+@dataclasses.dataclass
+class _PartFailure:
+    """One sub-batch that stayed failed after sibling retries: the
+    request-order slice it covered and the final exception."""
+    offset: int
+    n: int
+    exc: Exception
+
 
 class FlushError(RuntimeError):
     """One or more per-graph batches failed during a flush/poll.
 
     Nothing is lost: ``partial`` holds the successfully served
     ``{graph_id: logits}``, ``failures`` the ``{graph_id: exception}``,
-    and every failed graph's queue was restored (at the front, original
-    order) for retry."""
+    and every failed *request* was restored to its queue (at the front,
+    original order) for retry — when only some of a batch's replica
+    chunks failed, the served chunks' logits still land in ``partial``
+    and only the failed chunks' requests are restored."""
 
     def __init__(self, failures, partial):
         super().__init__(
             f"flush failed for graph(s) {sorted(failures)}; "
             f"{len(partial)} graph(s) served (see .partial), failed "
-            f"queues restored for retry")
+            f"queues restored for retry"
+        )
         self.failures = failures
         self.partial = partial
 
@@ -118,11 +221,11 @@ class FlushError(RuntimeError):
 class AdmitReport:
     """What ``add_graph`` did for one graph."""
     graph_id: str
-    warm_start: bool          # True: store hit — no sweep, no rebuild
-    tune_seconds: float       # 0.0 on the warm path
-    device_bytes: int         # resident footprint (schedule + weights)
+    warm_start: bool  # True: store hit — no sweep, no rebuild
+    tune_seconds: float  # 0.0 on the warm path
+    device_bytes: int  # resident footprint (schedule + weights)
     config: TunedConfig
-    placement: Placement      # which device(s) the graph serves from
+    placement: Placement  # which device(s) the graph serves from
 
 
 @dataclasses.dataclass
@@ -130,8 +233,8 @@ class _Request:
     """One queued inference request."""
     rid: int
     x: jax.Array
-    submit_t: float                    # monotonic seconds
-    deadline: Optional[float]          # absolute monotonic; None = no SLA
+    submit_t: float  # monotonic seconds
+    deadline: Optional[float]  # absolute monotonic; None = no SLA
 
 
 @dataclasses.dataclass
@@ -139,7 +242,7 @@ class _Unit:
     """One device-resident serving clone of a graph (the primary or a
     replica): a pinned executor, the uploaded weights, and the jitted
     vmapped whole-GCN forward that serves batches through them."""
-    device_index: Optional[int]          # None: sharded (spans the mesh)
+    device_index: Optional[int]  # None: sharded (spans the mesh)
     executor: object
     fwd: callable
     params: dict
@@ -151,12 +254,18 @@ class _Part:
     """One dispatched sub-batch of a serve call: either an async
     jit dispatch (``out``) or a thread-pool future (``future``) when the
     batch split across replicas. ``est`` is the outstanding-work charge
-    held against ``device_index`` until completion."""
+    held against ``device_index`` until completion. ``unit``/``chunk``/
+    ``offset`` let the completion path retry this exact sub-batch on a
+    sibling replica and map a terminal failure back to the request-order
+    slice it covered."""
     device_index: Optional[int]
     n: int
     est: float
     out: object = None
     future: object = None
+    unit: Optional[_Unit] = None
+    chunk: object = None
+    offset: int = 0
 
 
 @dataclasses.dataclass
@@ -164,13 +273,13 @@ class _Resident:
     graph_id: str
     fingerprint: str
     config: TunedConfig
-    sched: Schedule                      # host copy — survives eviction
-    params_host: dict                    # host copy — survives eviction
-    params: Optional[dict] = None        # device-resident weight tree
+    sched: Schedule  # host copy — survives eviction
+    params_host: dict  # host copy — survives eviction
+    params: Optional[dict] = None  # device-resident weight tree
     #: ScheduleExecutor or ShardedScheduleExecutor (None while evicted)
     executor: Optional[object] = None
-    fwd: Optional[callable] = None       # jitted vmapped whole-GCN forward
-    bytes: int = 0                       # schedule + weight device bytes
+    fwd: Optional[callable] = None  # jitted vmapped whole-GCN forward
+    bytes: int = 0  # schedule + weight device bytes
     #: secondary replicas by device index (the primary lives in the
     #: fields above, on the placement's ``device_index``)
     replicas: Dict[int, _Unit] = dataclasses.field(default_factory=dict)
@@ -203,19 +312,39 @@ class GCNServingEngine:
     bytes; the graph being served is always kept resident, even if it
     alone exceeds the budget (a budget smaller than one graph cannot be
     honoured — it degrades to one-graph-at-a-time rotation).
+
+    Admission control: ``max_queue_depth`` bounds every per-graph queue
+    (``submit`` returns a REJECTED ``SubmitTicket`` at the bound; None =
+    unbounded, the historical behaviour). ``shed_unmeetable=True`` turns
+    on deadline-aware shedding: a request whose deadline the EDF load
+    map's EWMA-predicted wait already rules out is dropped — at submit
+    time and again at dispatch time — instead of burning device time on
+    a guaranteed miss. Both knobs are plain attributes and may be
+    retuned between calls. Transient dispatch failures retry up to
+    ``max_dispatch_retries`` times with exponential backoff starting at
+    ``retry_backoff_s`` seconds (validation errors never retry).
     """
 
-    def __init__(self, *, store: Optional[TuningStore] = None,
-                 store_root=None,
-                 device_budget_bytes: int = 64 << 20,
-                 devices=None,
-                 max_batch: int = 32,
-                 rebalance_after: int = 4,
-                 max_replicas: Optional[int] = None,
-                 replicate_after_s: float = 0.25,
-                 replica_shrink_after: int = 3,
-                 autotune_iters: int = 3, autotune_warmup: int = 1,
-                 autotune_kwargs: Optional[dict] = None):
+    def __init__(
+        self,
+        *,
+        store: Optional[TuningStore] = None,
+        store_root=None,
+        device_budget_bytes: int = 64 << 20,
+        devices=None,
+        max_batch: int = 32,
+        rebalance_after: int = 4,
+        max_replicas: Optional[int] = None,
+        replicate_after_s: float = 0.25,
+        replica_shrink_after: int = 3,
+        max_queue_depth: Optional[int] = None,
+        shed_unmeetable: bool = False,
+        max_dispatch_retries: int = 2,
+        retry_backoff_s: float = 0.02,
+        autotune_iters: int = 3,
+        autotune_warmup: int = 1,
+        autotune_kwargs: Optional[dict] = None,
+    ):
         self.store = store if store is not None else TuningStore(store_root)
         self.device_budget_bytes = int(device_budget_bytes)
         self.max_batch = int(max_batch)
@@ -228,7 +357,8 @@ class GCNServingEngine:
             if not 1 <= devices <= len(avail):
                 raise ValueError(
                     f"devices={devices} but this host exposes "
-                    f"{len(avail)} device(s)")
+                    f"{len(avail)} device(s)"
+                )
             self.devices = list(avail[:devices])
         else:
             self.devices = list(devices)
@@ -239,21 +369,37 @@ class GCNServingEngine:
             self._mesh = Mesh(np.asarray(self.devices), ("dev",))
         else:
             self._mesh = None
-        self.placer = MeshPlacer(self.n_devices, self.device_budget_bytes,
-                                 rebalance_after=rebalance_after)
+        self.placer = MeshPlacer(
+            self.n_devices, self.device_budget_bytes, rebalance_after=rebalance_after
+        )
         if max_replicas is not None and max_replicas < 1:
-            raise ValueError(
-                f"max_replicas must be >= 1, got {max_replicas}")
-        self.max_replicas = (self.n_devices if max_replicas is None
-                             else min(int(max_replicas), self.n_devices))
+            raise ValueError(f"max_replicas must be >= 1, got {max_replicas}")
+        self.max_replicas = (
+            self.n_devices
+            if max_replicas is None
+            else min(int(max_replicas), self.n_devices)
+        )
         self.replicate_after_s = float(replicate_after_s)
         self.replica_shrink_after = int(replica_shrink_after)
+        if max_queue_depth is not None and max_queue_depth < 1:
+            raise ValueError(
+                f"max_queue_depth must be >= 1 or None, got {max_queue_depth}"
+            )
+        self.max_queue_depth = None if max_queue_depth is None else int(max_queue_depth)
+        self.shed_unmeetable = bool(shed_unmeetable)
+        if max_dispatch_retries < 0:
+            raise ValueError(
+                f"max_dispatch_retries must be >= 0, got {max_dispatch_retries}"
+            )
+        self.max_dispatch_retries = int(max_dispatch_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
         self._autotune_kwargs = dict(autotune_kwargs or {})
         reserved = {"max_devices", "store"} & set(self._autotune_kwargs)
         if reserved:
             raise ValueError(
                 f"autotune_kwargs may not override {sorted(reserved)}: the "
-                "engine pins the mesh route and its own store")
+                "engine pins the mesh route and its own store"
+            )
         self._autotune_kwargs.setdefault("iters", autotune_iters)
         self._autotune_kwargs.setdefault("warmup", autotune_warmup)
         self._graphs: "OrderedDict[str, _Resident]" = OrderedDict()
@@ -274,11 +420,33 @@ class GCNServingEngine:
         self._next_rid = 0
         self.device_bytes_in_use = 0
         self._lat_n, self._lat_total, self._lat_max = 0, 0.0, 0.0
-        self.counters = {"store_hits": 0, "store_misses": 0,
-                         "evictions": 0, "readmissions": 0,
-                         "rebalances": 0, "batches": 0, "requests": 0,
-                         "deadline_met": 0, "deadline_misses": 0,
-                         "replicas_added": 0, "replicas_dropped": 0}
+        #: bounded reservoir of recent request latencies (seconds) for
+        #: the percentile figures in stats()
+        self._lat_samples: "deque[float]" = deque(maxlen=_LAT_RESERVOIR)
+        # the overload accounting identity over the queue path:
+        #   submitted == queue_served + shed + rejected + pending
+        # (`requests` also counts direct serve_batch work, so the queue
+        # path gets its own served counter)
+        self.counters = {
+            "store_hits": 0,
+            "store_misses": 0,
+            "evictions": 0,
+            "readmissions": 0,
+            "rebalances": 0,
+            "batches": 0,
+            "requests": 0,
+            "deadline_met": 0,
+            "deadline_misses": 0,
+            "replicas_added": 0,
+            "replicas_dropped": 0,
+            "submitted": 0,
+            "queue_served": 0,
+            "shed": 0,
+            "rejected": 0,
+            "request_failures": 0,
+            "dispatch_retries": 0,
+            "chunk_retries": 0,
+        }
 
     # ---- admission ---------------------------------------------------------
 
@@ -286,8 +454,7 @@ class GCNServingEngine:
         """Pre-tune footprint estimate (schedule + weights) — routes giant
         graphs to the sharded path before any sweep runs."""
         nnz = int(np.asarray(a.row).shape[0])
-        weights = sum(int(np.asarray(w).nbytes)
-                      for w in jax.tree.leaves(params))
+        weights = sum(int(np.asarray(w).nbytes) for w in jax.tree.leaves(params))
         return nnz * _BYTES_PER_NNZ_EST + weights
 
     def _sharded_autotune_kwargs(self, a: fmt.COO) -> dict:
@@ -302,8 +469,9 @@ class GCNServingEngine:
             kw["sweep"] = [dict(c, n_devices=self.n_devices) for c in base]
         return kw
 
-    def add_graph(self, graph_id: str, a: fmt.COO, params: dict, *,
-                  kdim: Optional[int] = None) -> AdmitReport:
+    def add_graph(
+        self, graph_id: str, a: fmt.COO, params: dict, *, kdim: Optional[int] = None
+    ) -> AdmitReport:
         """Register a graph + trained weights and make it servable.
 
         The routing decision tree: estimate the footprint; if it exceeds
@@ -319,16 +487,14 @@ class GCNServingEngine:
             kdim = int(np.asarray(params["w0"]).shape[1])
         fp = registry.graph_fingerprint(a)
         est = self._estimate_bytes(a, params)
-        sharded_route = (est > self.device_budget_bytes
-                         and self.n_devices > 1)
+        sharded_route = est > self.device_budget_bytes and self.n_devices > 1
         if sharded_route:
             tune_kw = self._sharded_autotune_kwargs(a)
             max_devices = self.n_devices
         else:
             tune_kw = self._autotune_kwargs
             max_devices = 1
-        key = runner.store_key(self.store, fp, kdim,
-                               max_devices=max_devices, **tune_kw)
+        key = runner.store_key(self.store, fp, kdim, max_devices=max_devices, **tune_kw)
         t0 = time.perf_counter()
         entry = self.store.load(key)
         warm = entry is not None
@@ -339,43 +505,60 @@ class GCNServingEngine:
             tune_s = 0.0
         else:
             self.counters["store_misses"] += 1
-            cfg = runner.autotune(a, (a.shape[1], kdim),
-                                  max_devices=max_devices,
-                                  store=self.store, **tune_kw)
+            cfg = runner.autotune(
+                a,
+                (a.shape[1], kdim),
+                max_devices=max_devices,
+                store=self.store,
+                **tune_kw,
+            )
             self._check_route(graph_id, cfg, sharded_route, "tuned")
-            sched = registry.get_schedule(a, **cfg.as_schedule_kwargs(),
-                                          fingerprint=fp)
+            sched = registry.get_schedule(a, **cfg.as_schedule_kwargs(), fingerprint=fp)
             # release the graph from the registry's unbounded caches: the
             # sweep's ~dozen losing candidate executors must not pin device
             # memory, and *this* engine's per-device budgets become the
             # only thing keeping anything resident
             registry.release_graph(fp)
             tune_s = time.perf_counter() - t0
-        rec = _Resident(graph_id=graph_id, fingerprint=fp, config=cfg,
-                        sched=sched,
-                        params_host=jax.tree.map(np.asarray, params))
+        rec = _Resident(
+            graph_id=graph_id,
+            fingerprint=fp,
+            config=cfg,
+            sched=sched,
+            params_host=jax.tree.map(np.asarray, params),
+        )
         self._graphs[graph_id] = rec
         placement = self.placer.place(graph_id, est)
         self._admit(rec)
-        return AdmitReport(graph_id=graph_id, warm_start=warm,
-                           tune_seconds=tune_s, device_bytes=rec.bytes,
-                           config=cfg, placement=placement)
+        return AdmitReport(
+            graph_id=graph_id,
+            warm_start=warm,
+            tune_seconds=tune_s,
+            device_bytes=rec.bytes,
+            config=cfg,
+            placement=placement,
+        )
 
-    def _check_route(self, graph_id: str, cfg: TunedConfig,
-                     sharded_route: bool, origin: str) -> None:
+    def _check_route(
+        self, graph_id: str, cfg: TunedConfig, sharded_route: bool, origin: str
+    ) -> None:
         if sharded_route:
             if cfg.n_devices != self.n_devices:
                 raise ValueError(
                     f"graph {graph_id!r} takes the sharded route on this "
                     f"{self.n_devices}-device mesh, but the {origin} config "
-                    f"requests n_devices={cfg.n_devices}")
+                    f"requests n_devices={cfg.n_devices}"
+                )
         elif cfg.n_devices is not None:
             raise ValueError(
                 f"graph {graph_id!r} takes the single-device route, but "
                 f"the {origin} config requests n_devices={cfg.n_devices} — "
-                "remove sharded candidates from autotune_kwargs['sweep']")
+                "remove sharded candidates from autotune_kwargs['sweep']"
+            )
 
     def remove_graph(self, graph_id: str) -> None:
+        if graph_id not in self._graphs:
+            raise UnknownGraphError(graph_id, "remove_graph")
         rec = self._graphs.pop(graph_id)
         for d in list(rec.replicas):
             self._drop_replica(rec, d, shrink=False)
@@ -408,10 +591,13 @@ class GCNServingEngine:
         replica cheap)."""
         cfg = rec.config
         dev, handle = self._unit_handle(device_index)
-        ex = ScheduleExecutor(rec.sched, ktile=cfg.ktile,
-                              routing=cfg.routing,
-                              bf16_accumulate=cfg.bf16_accumulate,
-                              device=handle)
+        ex = ScheduleExecutor(
+            rec.sched,
+            ktile=cfg.ktile,
+            routing=cfg.routing,
+            bf16_accumulate=cfg.bf16_accumulate,
+            device=handle,
+        )
         if handle is None:
             params = jax.tree.map(jnp.asarray, rec.params_host)
         else:
@@ -419,8 +605,7 @@ class GCNServingEngine:
         # one jitted dispatch per (clone, batch size): the whole-GCN body
         # vmapped over the request axis
         fwd = jax.jit(jax.vmap(ex._forward_impl, in_axes=(None, 0)))
-        nbytes = ex.device_bytes + sum(int(x.nbytes)
-                                       for x in jax.tree.leaves(params))
+        nbytes = ex.device_bytes + sum(int(x.nbytes) for x in jax.tree.leaves(params))
         return _Unit(device_index, ex, fwd, params, nbytes)
 
     def _admit(self, rec: _Resident) -> None:
@@ -432,15 +617,17 @@ class GCNServingEngine:
             p = self.placer.placement_of(rec.graph_id)
             if p.kind == SHARDED:
                 ex = ShardedScheduleExecutor(
-                    rec.sched, mesh=self._mesh, ktile=cfg.ktile,
+                    rec.sched,
+                    mesh=self._mesh,
+                    ktile=cfg.ktile,
                     routing=cfg.routing,
-                    bf16_accumulate=cfg.bf16_accumulate)
+                    bf16_accumulate=cfg.bf16_accumulate,
+                )
                 rec.params = jax.tree.map(jnp.asarray, rec.params_host)
                 rec.executor = ex
-                rec.fwd = jax.jit(jax.vmap(ex._forward_impl,
-                                           in_axes=(None, 0)))
-                rec.bytes = ex.device_bytes + sum(
-                    int(x.nbytes) for x in jax.tree.leaves(rec.params))
+                rec.fwd = jax.jit(jax.vmap(ex._forward_impl, in_axes=(None, 0)))
+                w_bytes = sum(int(x.nbytes) for x in jax.tree.leaves(rec.params))
+                rec.bytes = ex.device_bytes + w_bytes
             else:
                 unit = self._build_unit(rec, p.device_index)
                 rec.executor, rec.fwd = unit.executor, unit.fwd
@@ -496,8 +683,9 @@ class GCNServingEngine:
         self.counters["replicas_added"] += 1
         return True
 
-    def _drop_replica(self, rec: _Resident, device_index: int, *,
-                      shrink: bool = True) -> None:
+    def _drop_replica(
+        self, rec: _Resident, device_index: int, *, shrink: bool = True
+    ) -> None:
         """Release one secondary replica: its executor, weights, jitted
         closure, and — for one-hot executors — exactly its own device's
         memoized step arrays (surviving replicas keep theirs)."""
@@ -537,9 +725,9 @@ class GCNServingEngine:
                 calm = self._calm_polls.get(gid, 0) + 1
                 if calm >= self.replica_shrink_after:
                     shed = max(
-                        (d for d in p.device_indices
-                         if d != p.device_index),
-                        key=lambda d: (self.placer.used[d], d))
+                        (d for d in p.device_indices if d != p.device_index),
+                        key=lambda d: (self.placer.used[d], d),
+                    )
                     self._drop_replica(rec, shed)
                     calm = 0
                 self._calm_polls[gid] = calm
@@ -561,17 +749,27 @@ class GCNServingEngine:
                 # cheapest first: shed a secondary replica living on this
                 # device (LRU graph first) — its graph's other clones
                 # keep serving, no re-admission cost for anyone
-                rep = next((r for r in self._graphs.values()
-                            if r.graph_id != keep and d in r.replicas),
-                           None)
+                rep = next(
+                    (
+                        r
+                        for r in self._graphs.values()
+                        if r.graph_id != keep and d in r.replicas
+                    ),
+                    None,
+                )
                 if rep is not None:
                     self._drop_replica(rep, d)
                     continue
                 victim = next(
-                    (r for r in self._graphs.values()
-                     if r.executor is not None and r.graph_id != keep
-                     and self.placer.resident_on(r.graph_id, d)),
-                    None)
+                    (
+                        r
+                        for r in self._graphs.values()
+                        if r.executor is not None
+                        and r.graph_id != keep
+                        and self.placer.resident_on(r.graph_id, d)
+                    ),
+                    None,
+                )
                 if victim is None:
                     break  # only `keep` holds this device; never evicted
                 self._evict(victim)
@@ -586,11 +784,15 @@ class GCNServingEngine:
             return
         hot, cool = target
         victim = next(
-            (r for r in self._graphs.values()
-             if r.graph_id != keep
-             and self.placer.placements[r.graph_id].kind == SINGLE
-             and self.placer.placements[r.graph_id].device_index == hot),
-            None)
+            (
+                r
+                for r in self._graphs.values()
+                if r.graph_id != keep
+                and self.placer.placements[r.graph_id].kind == SINGLE
+                and self.placer.placements[r.graph_id].device_index == hot
+            ),
+            None,
+        )
         if victim is None:
             return
         if victim.executor is not None:
@@ -613,26 +815,32 @@ class GCNServingEngine:
         first."""
         p = self.placer.placement_of(rec.graph_id)
         primary_dev = None if p.kind == SHARDED else p.device_index
-        primary = _Unit(primary_dev, rec.executor, rec.fwd, rec.params,
-                        rec.bytes)
+        primary = _Unit(primary_dev, rec.executor, rec.fwd, rec.params, rec.bytes)
         return [primary] + [rec.replicas[d] for d in sorted(rec.replicas)]
 
     def _outstanding_key(self, unit: _Unit):
         d = unit.device_index
-        return (self._dev_outstanding.get(d, 0.0) if d is not None else 0.0,
-                -1 if d is None else d)
+        return (
+            self._dev_outstanding.get(d, 0.0) if d is not None else 0.0,
+            -1 if d is None else d,
+        )
 
-    def _pool_run(self, unit: _Unit, chunk):
+    def _run_unit(self, unit: _Unit, graph_id: str, chunk):
+        """Run one sub-batch on one serving clone to completion — the
+        single execution body behind both the worker-thread path and the
+        sibling-replica retry path (so the ``replica_chunk`` fault seam
+        covers both)."""
+        FAULTS.check("replica_chunk", graph=graph_id, device=unit.device_index)
+        out = unit.fwd(unit.params, unit.executor.commit(chunk))
+        _block_until_ready(out)
+        return out
+
+    def _pool_run(self, unit: _Unit, graph_id: str, chunk):
         if self._pool is None:
             self._pool = ThreadPoolExecutor(
-                max_workers=self.n_devices, thread_name_prefix="awb-replica")
-
-        def run():
-            out = unit.fwd(unit.params, unit.executor.commit(chunk))
-            _block_until_ready(out)
-            return out
-
-        return self._pool.submit(run)
+                max_workers=self.n_devices, thread_name_prefix="awb-replica"
+            )
+        return self._pool.submit(self._run_unit, unit, graph_id, chunk)
 
     def _dispatch_batch(self, graph_id: str, xs) -> List[_Part]:
         """Validate + stack ``xs``, ensure residency (LRU touch,
@@ -648,14 +856,19 @@ class GCNServingEngine:
         then execute concurrently on their devices, which is where
         replica throughput scaling comes from. Every replica is a
         bit-identical clone, so the split is invisible in the logits."""
-        rec = self._graphs[graph_id]
-        xb = xs if hasattr(xs, "ndim") and xs.ndim == 3 else jnp.stack(
-            [jnp.asarray(x) for x in xs])
+        rec = self._graphs.get(graph_id)
+        if rec is None:
+            raise UnknownGraphError(graph_id, "serve")
+        FAULTS.check("dispatch", graph=graph_id)
+        if hasattr(xs, "ndim") and xs.ndim == 3:
+            xb = xs
+        else:
+            xb = jnp.stack([jnp.asarray(x) for x in xs])
         n = rec.sched.shape[1]
         if xb.shape[1] != n:
             raise ValueError(
-                f"features have {xb.shape[1]} rows; graph {graph_id!r} "
-                f"has {n} nodes")
+                f"features have {xb.shape[1]} rows; graph {graph_id!r} has {n} nodes"
+            )
         self._admit(rec)  # LRU touch + re-upload if evicted
         b = int(xb.shape[0])
         units = sorted(self._units(rec), key=self._outstanding_key)
@@ -663,70 +876,155 @@ class GCNServingEngine:
         if len(units) == 1 or b == 1:
             unit = units[0]
             out = unit.fwd(unit.params, unit.executor.commit(xb))
-            part = _Part(unit.device_index, b, per_req * b, out=out)
+            part = _Part(
+                unit.device_index, b, per_req * b, out=out, unit=unit, chunk=xb
+            )
             self._charge(part, +1)
             return [part]
-        units = units[:min(len(units), b)]
+        k = min(len(units), b)
+        units = units[:k]
         base, rem = divmod(b, len(units))
         parts, offset = [], 0
         for i, unit in enumerate(units):
             size = base + (1 if i < rem else 0)
-            chunk = xb[offset:offset + size]
+            end = offset + size
+            chunk = xb[offset:end]
+            part = _Part(
+                unit.device_index,
+                size,
+                per_req * size,
+                future=self._pool_run(unit, graph_id, chunk),
+                unit=unit,
+                chunk=chunk,
+                offset=offset,
+            )
             offset += size
-            part = _Part(unit.device_index, size, per_req * size,
-                         future=self._pool_run(unit, chunk))
             self._charge(part, +1)
             parts.append(part)
         return parts
+
+    def _dispatch_with_retry(self, graph_id: str, xs) -> List[_Part]:
+        """Dispatch with bounded retry + exponential backoff for
+        *transient* failures (device hiccups, injected faults). A failed
+        attempt charges nothing, so retrying is free of bookkeeping.
+        Validation errors — unknown graph, wrong shape — are permanent
+        and re-raise immediately; after ``max_dispatch_retries`` retries
+        the last transient error propagates to the caller as the typed
+        outcome of the serve path it came in on."""
+        delay = self.retry_backoff_s
+        for attempt in range(self.max_dispatch_retries + 1):
+            try:
+                return self._dispatch_batch(graph_id, xs)
+            except (KeyError, ValueError, TypeError):
+                raise
+            except Exception:
+                if attempt >= self.max_dispatch_retries:
+                    raise
+                self.counters["dispatch_retries"] += 1
+                _sleep(delay)
+                delay *= 2
 
     def _charge(self, part: _Part, sign: int) -> None:
         d = part.device_index
         if d is not None and part.est:
             self._dev_outstanding[d] = max(
-                0.0, self._dev_outstanding.get(d, 0.0) + sign * part.est)
+                0.0, self._dev_outstanding.get(d, 0.0) + sign * part.est
+            )
 
-    def _await_batch(self, graph_id: str, parts: List[_Part]):
-        """Block until every part of one dispatched batch completes, then
-        merge the sub-batch logits back in request order (on the primary
-        replica's device). Outstanding-work charges settle whether the
-        parts succeed or fail; a failure surfaces to the caller with the
-        served-work counters untouched."""
-        outs = []
+    def _retry_part(
+        self, graph_id: str, part: _Part, exc: Exception
+    ) -> Tuple[object, Exception]:
+        """Retry one failed sub-batch on the graph's sibling replicas,
+        least outstanding work first. Every replica is a bit-identical
+        clone, so a sibling's output is indistinguishable from the
+        original's — the fault stays unobservable in the logits. Each
+        attempt charges and settles its own outstanding-work meter;
+        returns ``(out, None)`` on success or ``(None, last_exc)`` when
+        every sibling failed too (or there were none to try)."""
+        rec = self._graphs.get(graph_id)
+        if rec is None or part.unit is None or part.chunk is None:
+            return None, exc
+        units = self._units(rec)
+        siblings = [u for u in units if u.executor is not part.unit.executor]
+        for unit in sorted(siblings, key=self._outstanding_key):
+            self.counters["chunk_retries"] += 1
+            retry = _Part(unit.device_index, part.n, part.est)
+            self._charge(retry, +1)
+            try:
+                out = self._run_unit(unit, graph_id, part.chunk)
+                return out, None
+            except Exception as e:
+                exc = e
+            finally:
+                self._charge(retry, -1)
+        return None, exc
+
+    def _await_batch(
+        self, graph_id: str, parts: List[_Part]
+    ) -> Tuple[object, List[_PartFailure]]:
+        """Block until every part of one dispatched batch settles, then
+        merge the successful sub-batch logits back in request order (on
+        the primary replica's device).
+
+        Returns ``(out, failures)``: ``out`` is the merged logits of the
+        parts that completed (None when none did) and ``failures`` names
+        the request-order slices that stayed failed after sibling-replica
+        retries — the caller maps those back to individual requests
+        instead of poisoning the whole batch. Every part settles its
+        outstanding-work charge exactly once, success or failure; no
+        future is left unawaited and the served-work counters are
+        untouched here."""
+        outs: List[Tuple[int, object]] = []
+        failures: List[_PartFailure] = []
+        settled = set()
         try:
             for part in parts:
-                out = (part.future.result() if part.future is not None
-                       else part.out)
-                _block_until_ready(out)
-                outs.append(out)
+                try:
+                    out = part.future.result() if part.future is not None else part.out
+                    _block_until_ready(out)
+                except Exception as e:
+                    self._charge(part, -1)
+                    settled.add(id(part))
+                    out, e = self._retry_part(graph_id, part, e)
+                    if out is None:
+                        failures.append(_PartFailure(part.offset, part.n, e))
+                        continue
+                else:
+                    self._charge(part, -1)
+                    settled.add(id(part))
+                outs.append((part.offset, out))
         finally:
+            # an unexpected escape (e.g. KeyboardInterrupt) must still
+            # settle every remaining charge — never a leaked meter
             for part in parts:
-                self._charge(part, -1)
+                if id(part) not in settled:
+                    self._charge(part, -1)
+        if not outs:
+            return None, failures
+        outs.sort(key=lambda t: t[0])
         p = self.placer.placement_of(graph_id)
-        if len(outs) == 1:
+        if len(outs) == 1 and not failures:
             # a replicated graph's output always lands committed to the
             # primary's device, even when a single least-loaded secondary
-            # served the whole batch — which replica served must stay
-            # unobservable, placement included
-            if (p.kind == REPLICATED
-                    and parts[0].device_index != p.device_index):
-                return jax.device_put(outs[0],
-                                      self.devices[p.device_index])
-            return outs[0]
+            # (or a sibling retry) served the whole batch — which replica
+            # served must stay unobservable, placement included
+            if p.kind == REPLICATED:
+                out0 = jax.device_put(outs[0][1], self.devices[p.device_index])
+                return out0, failures
+            return outs[0][1], failures
         target = self.devices[p.device_index]
-        return jnp.concatenate(
-            [jax.device_put(o, target) for o in outs], axis=0)
+        merged = jnp.concatenate([jax.device_put(o, target) for _, o in outs], axis=0)
+        return merged, failures
 
     def _note_service(self, gid: str, svc_s: float, n_requests: int) -> None:
         """Fold one completed batch into the per-batch and per-request
         service-time EWMAs (the deadline scheduler's dispatch estimate
         and the replication saturation signal)."""
         old = self._svc_ewma.get(gid)
-        self._svc_ewma[gid] = (svc_s if old is None
-                               else 0.5 * old + 0.5 * svc_s)
+        self._svc_ewma[gid] = svc_s if old is None else 0.5 * old + 0.5 * svc_s
         per = svc_s / max(1, n_requests)
         old = self._svc_req_ewma.get(gid)
-        self._svc_req_ewma[gid] = (per if old is None
-                                   else 0.5 * old + 0.5 * per)
+        self._svc_req_ewma[gid] = per if old is None else 0.5 * old + 0.5 * per
 
     # ---- direct serving ----------------------------------------------------
 
@@ -739,14 +1037,22 @@ class GCNServingEngine:
         path, so auto-flushed batches are bit-identical to direct calls.
         ``batches``/``requests`` count **only after the computation
         completes** — a dispatch that fails asynchronously leaves the
-        served-work stats untouched (same invariant as the queue path)."""
+        served-work stats untouched (same invariant as the queue path).
+        Transient dispatch failures retry with bounded backoff and a
+        failed replica chunk retries on a sibling clone; a batch that
+        still cannot complete raises a typed ``RequestFailure`` (the
+        direct path is all-or-nothing — ``.partial`` carries any
+        successful sub-batches, but nothing is counted served)."""
         t0 = time.monotonic()
-        parts = self._dispatch_batch(graph_id, xs)
-        out = self._await_batch(graph_id, parts)
+        parts = self._dispatch_with_retry(graph_id, xs)
+        out, part_failures = self._await_batch(graph_id, parts)
+        if part_failures:
+            n_failed = sum(f.n for f in part_failures)
+            self.counters["request_failures"] += n_failed
+            raise RequestFailure(graph_id, part_failures[-1].exc, n_failed, partial=out)
         self.counters["batches"] += 1
         self.counters["requests"] += sum(p.n for p in parts)
-        self._note_service(graph_id, time.monotonic() - t0,
-                           sum(p.n for p in parts))
+        self._note_service(graph_id, time.monotonic() - t0, sum(p.n for p in parts))
         return out
 
     def infer(self, graph_id: str, x) -> jax.Array:
@@ -755,39 +1061,135 @@ class GCNServingEngine:
 
     # ---- deadline-aware queueing -------------------------------------------
 
-    def submit(self, graph_id: str, x, *,
-               deadline_s: Optional[float] = None) -> int:
-        """Queue one request; returns its request id.
+    def submit(
+        self,
+        graph_id: str,
+        x,
+        *,
+        deadline_s: Optional[float] = None,
+        now: Optional[float] = None,
+    ) -> SubmitTicket:
+        """Queue one request; returns a typed ``SubmitTicket``.
 
         ``deadline_s`` is the SLA in seconds from now (None = no deadline;
         the request serves on the next ``flush()`` or when its graph's
         queue reaches ``max_batch`` — which auto-flushes that graph
         immediately). Shape is validated here so one malformed request can
-        never poison a later flush."""
+        never poison a later flush — malformed submissions *raise*
+        (``UnknownGraphError``/``ValueError``: caller bugs, not load).
+
+        Admission control runs before anything is queued: a queue at
+        ``max_queue_depth`` returns a REJECTED ticket, and with
+        ``shed_unmeetable`` on, a deadline the EDF load map's
+        EWMA-predicted wait already rules out returns a SHED ticket (see
+        ``_predicted_wait``). ``now`` injects the arrival clock — tests
+        pin it, and an open-loop driver passes the *intended* arrival
+        time so latency and deadlines measure from the schedule, not
+        from when the driver got around to calling."""
         rec = self._graphs.get(graph_id)
         if rec is None:
-            raise KeyError(f"unknown graph {graph_id!r}")
+            raise UnknownGraphError(graph_id, "submit")
         x = jnp.asarray(x)
         n = rec.sched.shape[1]
         if x.ndim != 2 or x.shape[0] != n:
             raise ValueError(
                 f"request for graph {graph_id!r} must be [n={n}, features]; "
-                f"got shape {x.shape}")
-        now = time.monotonic()
+                f"got shape {x.shape}"
+            )
+        if now is None:
+            now = time.monotonic()
+        self.counters["submitted"] += 1
+        depth = len(self._pending.get(graph_id) or ())
+        if self.max_queue_depth is not None and depth >= self.max_queue_depth:
+            self.counters["rejected"] += 1
+            return SubmitTicket(
+                None,
+                REJECTED,
+                f"queue for graph {graph_id!r} is at max_queue_depth="
+                f"{self.max_queue_depth}",
+            )
+        deadline = None if deadline_s is None else now + float(deadline_s)
+        if self.shed_unmeetable and deadline is not None:
+            wait = self._predicted_wait(graph_id, deadline)
+            if now + wait > deadline:
+                self.counters["shed"] += 1
+                return SubmitTicket(
+                    None,
+                    SHED,
+                    f"predicted wait {wait * 1e3:.1f} ms exceeds deadline "
+                    f"{float(deadline_s) * 1e3:.1f} ms for graph "
+                    f"{graph_id!r}",
+                )
         rid = self._next_rid
         self._next_rid += 1
-        deadline = None if deadline_s is None else now + float(deadline_s)
         self._pending.setdefault(graph_id, []).append(
-            _Request(rid=rid, x=x, submit_t=now, deadline=deadline))
+            _Request(rid=rid, x=x, submit_t=now, deadline=deadline)
+        )
         if len(self._pending[graph_id]) >= self.max_batch:
             # a queue hot enough to hit the threshold is the saturation
             # signal's strongest form — give replication a chance to grow
             # before the batch serves
             self._update_replication()
-            served = self._serve_queues([graph_id])
+            served = self._serve_queues([graph_id], now=now)
             for gid, out in served.items():
                 self._ready.setdefault(gid, []).append(out)
-        return rid
+        return SubmitTicket(rid, ACCEPTED)
+
+    def _absorb(self, load: Dict[int, float], p: Placement, est: float) -> float:
+        """Fold one queue's service estimate into a per-device load map
+        (cumulative busy seconds) and return its completion time:
+
+        * a single-device queue stacks onto its device (co-located
+          queues serialize);
+        * a sharded queue starts when its *busiest* mesh device frees
+          and advances every device to the common completion time (the
+          psum synchronizes them);
+        * a replicated queue splits across its clones: completion
+          anchors on its **least-loaded replica**, and each replica
+          absorbs an even share — never the whole batch on every clone.
+        """
+        devs = p.device_indices
+        if p.kind == REPLICATED:
+            start = min(load.get(d, 0.0) for d in devs)
+            done = start + est
+            share = est / len(devs)
+            for d in devs:
+                load[d] = load.get(d, 0.0) + share
+        else:
+            start = max((load.get(d, 0.0) for d in devs), default=0.0)
+            done = start + est
+            for d in devs:
+                load[d] = done
+        return done
+
+    def _predicted_wait(self, graph_id: str, deadline: Optional[float] = None) -> float:
+        """EWMA-predicted completion delay (seconds from now) of a
+        request submitted to ``graph_id`` now: every queue EDF-ahead of
+        it is absorbed into the per-device load map — co-located queues
+        serialize, replicated queues split — and the request's own
+        graph's batch estimate completes on top. This is the admission
+        controller's shed predicate: a deadline below this wait cannot
+        be met, so serving the request could only buy a deadline miss."""
+        p = self.placer.placement_of(graph_id)
+        est = self._svc_ewma.get(graph_id, 0.0)
+        if p is None:
+            return est
+        my_key = _earliest_deadline(self._pending.get(graph_id) or [])
+        if deadline is not None:
+            my_key = min(my_key, deadline)
+        load: Dict[int, float] = {}
+        order = sorted(
+            ((g, q) for g, q in self._pending.items() if q and g != graph_id),
+            key=lambda t: (_earliest_deadline(t[1]), t[0]),
+        )
+        for gid, q in order:
+            if (_earliest_deadline(q), gid) > (my_key, graph_id):
+                continue  # EDF-behind: dispatches after us, cannot delay us
+            ahead = self.placer.placement_of(gid)
+            if ahead is None:
+                continue
+            self._absorb(load, ahead, self._svc_ewma.get(gid, 0.0))
+        return self._absorb(load, p, est)
 
     def poll(self, now: Optional[float] = None) -> Dict[str, jax.Array]:
         """Serve every queue that is *due* and return its batched logits
@@ -816,32 +1218,24 @@ class GCNServingEngine:
         if now is None:
             now = time.monotonic()
         self._update_replication()
-        order = sorted(((g, q) for g, q in self._pending.items() if q),
-                       key=lambda t: (_earliest_deadline(t[1]), t[0]))
+        order = sorted(
+            ((g, q) for g, q in self._pending.items() if q),
+            key=lambda t: (_earliest_deadline(t[1]), t[0]),
+        )
         load: Dict[int, float] = {}  # device -> cumulative busy seconds
         threshold, due_upto = [], -1
         for i, (gid, q) in enumerate(order):
-            est = self._svc_ewma.get(gid, 0.0)
-            p = self.placer.placement_of(gid)
-            devs = p.device_indices
-            if p.kind == REPLICATED:
-                start = min(load.get(d, 0.0) for d in devs)
-                done = start + est
-                share = est / len(devs)
-                for d in devs:
-                    load[d] = load.get(d, 0.0) + share
-            else:
-                start = max((load.get(d, 0.0) for d in devs), default=0.0)
-                done = start + est
-                for d in devs:
-                    load[d] = done
+            done = self._absorb(
+                load, self.placer.placement_of(gid), self._svc_ewma.get(gid, 0.0)
+            )
             if len(q) >= self.max_batch:
                 threshold.append(gid)
             slack = _SVC_SAFETY * done + _SVC_FLOOR_S
             if _earliest_deadline(q) - slack <= now:
                 due_upto = i
-        due = {g for g, _ in order[:due_upto + 1]} | set(threshold)
-        return self._drain(self._serve_queues(list(due)))
+        cut = due_upto + 1
+        due = {g for g, _ in order[:cut]} | set(threshold)
+        return self._drain(self._serve_queues(list(due), now=now))
 
     def flush(self) -> Dict[str, jax.Array]:
         """Serve all queued requests, batched per graph. Returns
@@ -856,7 +1250,8 @@ class GCNServingEngine:
         ``FlushError`` carries the successful results in ``.partial`` —
         no computed logits are lost."""
         return self._drain(
-            self._serve_queues([g for g, q in self._pending.items() if q]))
+            self._serve_queues([g for g, q in self._pending.items() if q])
+        )
 
     def _drain(self, served: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
         """Merge freshly served batches with threshold-auto-flushed ones
@@ -865,25 +1260,39 @@ class GCNServingEngine:
         for gid, parts in ready.items():
             if gid in served:
                 parts = parts + [served[gid]]
-            served[gid] = parts[0] if len(parts) == 1 else jnp.concatenate(
-                parts, axis=0)
+            if len(parts) == 1:
+                served[gid] = parts[0]
+            else:
+                served[gid] = jnp.concatenate(parts, axis=0)
         return served
 
-    def _serve_queues(self, graph_ids) -> Dict[str, jax.Array]:
+    def _serve_queues(
+        self, graph_ids, now: Optional[float] = None
+    ) -> Dict[str, jax.Array]:
         """Serve the named graphs' queues: EDF dispatch order, then await.
 
         All batches are **dispatched** (async jit calls; per-replica
         sub-batches on worker threads) before any result is awaited, so
         batches placed on different mesh devices execute concurrently;
         awaiting then happens in the same EDF order. ``batches``/
-        ``requests`` count a batch only once its completion is proven —
-        a dispatch that fails later never inflates the served-work stats.
-        Failed graphs get their queue restored at the front and are
-        reported together in one ``FlushError`` after every healthy graph
-        was served."""
+        ``requests``/``queue_served`` count a batch only once its
+        completion is proven — a dispatch that fails later never inflates
+        the served-work stats.
+
+        With ``shed_unmeetable`` on, requests whose deadline even the
+        graph's own batch estimate can no longer meet are shed here —
+        the last gate before device time is spent. Failures surface
+        per-request: a batch whose every recovery path (bounded dispatch
+        retries, sibling-replica chunk retries) was exhausted gets
+        exactly its failed requests restored at the queue front — served
+        chunks still deliver — and one ``FlushError`` reports all failed
+        graphs after every healthy graph was served."""
+        if now is None:
+            now = time.monotonic()
         order = sorted(
             (g for g in graph_ids if self._pending.get(g)),
-            key=lambda g: (_earliest_deadline(self._pending[g]), g))
+            key=lambda g: (_earliest_deadline(self._pending[g]), g),
+        )
         served: Dict[str, jax.Array] = {}
         failures: Dict[str, Exception] = {}
         inflight = []
@@ -893,32 +1302,68 @@ class GCNServingEngine:
 
         for gid in order:
             reqs = self._pending.pop(gid)
+            if self.shed_unmeetable:
+                est = self._svc_ewma.get(gid, 0.0)
+                keep = []
+                for r in reqs:
+                    if r.deadline is not None and now + est > r.deadline:
+                        self.counters["shed"] += 1
+                    else:
+                        keep.append(r)
+                reqs = keep
+                if not reqs:
+                    continue
             t_disp = time.monotonic()
             try:
-                parts = self._dispatch_batch(gid, [r.x for r in reqs])
+                parts = self._dispatch_with_retry(gid, [r.x for r in reqs])
             except Exception as e:
                 failures[gid] = e
                 restore(gid, reqs)
                 continue
             inflight.append((gid, reqs, parts, t_disp))
+        t_prev = None
         for gid, reqs, parts, t_disp in inflight:
             try:
-                out = self._await_batch(gid, parts)
+                out, part_failures = self._await_batch(gid, parts)
             except Exception as e:
                 failures[gid] = e
                 restore(gid, reqs)
                 continue
+            ok_reqs = reqs
+            if part_failures:
+                failed_idx = set()
+                for f in part_failures:
+                    failed_idx.update(range(f.offset, f.offset + f.n))
+                failed = [r for i, r in enumerate(reqs) if i in failed_idx]
+                ok_reqs = [r for i, r in enumerate(reqs) if i not in failed_idx]
+                restore(gid, failed)
+                self.counters["request_failures"] += len(failed)
+                failures[gid] = part_failures[-1].exc
+            if out is None:
+                continue
             t_done = time.monotonic()
             self.counters["batches"] += 1
-            self.counters["requests"] += len(reqs)
-            self._note_served(gid, reqs, t_disp, t_done)
+            self.counters["requests"] += len(ok_reqs)
+            self.counters["queue_served"] += len(ok_reqs)
+            # service EWMAs fold the *incremental* completion time of this
+            # batch: everything was dispatched before anything was
+            # awaited, so on shared devices a later batch's await-since-
+            # dispatch span contains every earlier batch's compute —
+            # folding that cumulative span would inflate every EWMA
+            # toward the whole cycle's cost, and the shed predicate
+            # (which already sums EDF-ahead queues itself) would double-
+            # count the serialization and shed far too eagerly
+            svc_t0 = t_disp if t_prev is None else max(t_disp, t_prev)
+            self._note_served(gid, ok_reqs, svc_t0, t_done)
+            t_prev = t_done
             served[gid] = out
         if failures:
             raise FlushError(failures, served)
         return served
 
-    def _note_served(self, gid: str, reqs: List[_Request],
-                     t_disp: float, t_done: float) -> None:
+    def _note_served(
+        self, gid: str, reqs: List[_Request], t_disp: float, t_done: float
+    ) -> None:
         """Record per-request latency + deadline outcome, and fold the
         batch service time into the graph's EWMAs (what ``poll`` subtracts
         from deadlines to dispatch early enough, and what the replication
@@ -928,9 +1373,9 @@ class GCNServingEngine:
             self._lat_n += 1
             self._lat_total += lat
             self._lat_max = max(self._lat_max, lat)
+            self._lat_samples.append(lat)
             if r.deadline is not None:
-                key = ("deadline_met" if t_done <= r.deadline
-                       else "deadline_misses")
+                key = "deadline_met" if t_done <= r.deadline else "deadline_misses"
                 self.counters[key] += 1
         self._note_service(gid, t_done - t_disp, len(reqs))
 
@@ -939,13 +1384,47 @@ class GCNServingEngine:
         and ops dashboards measure deltas; residency state is untouched)."""
         self.counters = {k: 0 for k in self.counters}
         self._lat_n, self._lat_total, self._lat_max = 0, 0.0, 0.0
+        self._lat_samples.clear()
+
+    def latency_percentiles(self) -> Dict[str, float]:
+        """p50/p95/p99 of the recent-request latency reservoir, in
+        microseconds (zeros before any request was served)."""
+        if not self._lat_samples:
+            return {"latency_us_p50": 0.0, "latency_us_p95": 0.0, "latency_us_p99": 0.0}
+        lat = np.asarray(self._lat_samples)
+        p50, p95, p99 = np.percentile(lat, (50.0, 95.0, 99.0)) * 1e6
+        return {
+            "latency_us_p50": float(p50),
+            "latency_us_p95": float(p95),
+            "latency_us_p99": float(p99),
+        }
+
+    def saturation(self) -> Dict[int, float]:
+        """Per-device saturation: estimated busy seconds already
+        committed to each device — outstanding dispatched-but-incomplete
+        work plus the queued backlog the EDF load map assigns it. The
+        backpressure signal a dispatcher upstream would shed against."""
+        load: Dict[int, float] = {}
+        for gid, q in sorted(self._pending.items()):
+            if not q:
+                continue
+            p = self.placer.placement_of(gid)
+            if p is None:
+                continue
+            self._absorb(load, p, self._svc_ewma.get(gid, 0.0))
+        return {
+            d: self._dev_outstanding.get(d, 0.0) + load.get(d, 0.0)
+            for d in range(self.n_devices)
+        }
 
     def stats(self) -> dict:
         replicas = {
             g: list(self.placer.placement_of(g).device_indices)
             for g in self._graphs
             if self.placer.placement_of(g) is not None
-            and self.placer.placement_of(g).kind == REPLICATED}
+            and self.placer.placement_of(g).kind == REPLICATED
+        }
+        sat = self.saturation()
         return dict(
             self.counters,
             device_bytes_in_use=self.device_bytes_in_use,
@@ -954,10 +1433,16 @@ class GCNServingEngine:
             n_graphs=len(self._graphs),
             n_resident=len(self.resident_graphs),
             pending_requests=sum(len(q) for q in self._pending.values()),
+            queue_depth={g: len(q) for g, q in self._pending.items() if q},
+            saturation_s=sat,
             latency_n=self._lat_n,
-            latency_us_mean=(self._lat_total / self._lat_n * 1e6
-                             if self._lat_n else 0.0),
+            latency_us_mean=(
+                self._lat_total / self._lat_n * 1e6 if self._lat_n else 0.0
+            ),
             latency_us_max=self._lat_max * 1e6,
+            **self.latency_percentiles(),
             replicas=replicas,
-            per_device=self.placer.device_report(),
+            per_device=self.placer.device_report(
+                extra={d: {"saturation_s": s} for d, s in sat.items()}
+            ),
         )

@@ -304,10 +304,13 @@ class MeshPlacer:
 
     # ---- reporting ---------------------------------------------------------
 
-    def device_report(self) -> List[dict]:
+    def device_report(self,
+                      extra: Optional[Dict[int, dict]] = None) -> List[dict]:
         """Per-device occupancy snapshot for ``stats()`` — replicated
         graphs appear on every device currently hosting one of their
-        replicas."""
+        replicas. ``extra`` merges caller-side per-device fields into
+        each row (the engine folds its saturation meters in this way;
+        placement itself stays pure byte bookkeeping)."""
         graphs: List[List[str]] = [[] for _ in range(self.n_devices)]
         for gid, p in sorted(self.placements.items()):
             for d in p.device_indices:
@@ -315,5 +318,6 @@ class MeshPlacer:
                     graphs[d].append(gid)
         return [{"device": d, "used_bytes": self.used[d],
                  "budget_bytes": self.budget,
-                 "evictions": self.evictions[d], "resident": graphs[d]}
+                 "evictions": self.evictions[d], "resident": graphs[d],
+                 **(extra.get(d, {}) if extra else {})}
                 for d in range(self.n_devices)]

@@ -434,7 +434,7 @@ def _load_map_engine(tmp_path, placements):
     eng = GCNServingEngine(store_root=tmp_path)
     eng.placer = MeshPlacer(2, 1 << 30)
     eng.placer.placements.update(placements)
-    eng._serve_queues = lambda gids: {g: None for g in gids}
+    eng._serve_queues = lambda gids, now=None: {g: None for g in gids}
     return eng
 
 
