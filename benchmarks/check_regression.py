@@ -41,7 +41,21 @@ never on timer noise:
 * **open-loop shed accounting** -- every ``openloop/*/goodput`` row must
   carry ``identity=1`` and satisfy
   ``served + shed + rejected == submitted`` (a hard correctness gate:
-  requests must never vanish or be double-counted under overload).
+  requests must never vanish or be double-counted under overload);
+* **streaming repair speedup + bit-identity** -- the
+  ``streaming/small_delta/repair`` row must carry ``bit_identical=1``
+  (logits after a chain of incremental repairs must match a from-scratch
+  admission of the mutated graph bit-for-bit -- hard correctness gate)
+  and its repair-vs-rebuild speedup must stay above the reference's
+  divided by ``tolerance`` (a collapse means ``update_graph`` stopped
+  being incremental);
+* **streaming zero-gap swap** -- the ``streaming/zero_gap`` row must
+  carry ``gap=0``: no concurrent request may ever observe a missing or
+  half-swapped executor during an update (hard correctness gate).
+
+Every ratio check guards its denominator: a degenerate zero measurement
+(e.g. an open-loop smoke that served zero in-SLA requests) reports a
+DEGENERATE problem instead of crashing the gate with a division error.
 
 Exit code 0 = green, 1 = regression (messages on stdout, one per check).
 
@@ -60,18 +74,23 @@ import sys
 _SPEEDUP_RE = re.compile(r"speedup=([0-9.]+)x")
 _WARM_RE = re.compile(r"serving/(\w+)/warm_start")
 _COUNT_RE = re.compile(r"(submitted|served|shed|rejected)=(\d+)")
+_GAP_RE = re.compile(r"gap=(\d+)")
 
 _MESH_ROW = "serving/mesh8/mesh_throughput"
 _SINGLE_ROW = "serving/batched_throughput"
 _REPLICA_ROW = "serving/mesh8/hot_replicated"
 _OL_P99_ROW = "openloop/steady/p99"
 _OL_GOODPUT_ROW = "openloop/steady/goodput"
+_STREAM_ROW = "streaming/small_delta/repair"
+_GAP_ROW = "streaming/zero_gap"
 
 _NO_SERVING = "MISSING: no serving/*/warm_start rows in the smoke JSON"
 _NO_TUNING = "MISSING: no autotune/* rows shared between smoke and reference"
 _NO_MESH = f"MISSING: no {_MESH_ROW} + {_SINGLE_ROW} rows in the smoke JSON"
 _NO_REPLICA = f"MISSING: no {_REPLICA_ROW} row in the smoke JSON"
 _NO_OPENLOOP = "MISSING: no openloop/steady/* rows in the smoke JSON"
+_NO_STREAM = f"MISSING: no {_STREAM_ROW} row in the smoke JSON"
+_NO_GAP = f"MISSING: no {_GAP_ROW} row in the smoke JSON"
 _GATE_BLIND = " -- the suite did not run; the gate cannot vouch for the PR"
 _NOT_SMOKE = "MISMATCH: --smoke JSON was not produced by run.py --smoke"
 _REF_SMOKE = "MISMATCH: the reference JSON is itself a smoke run"
@@ -154,17 +173,22 @@ def check(smoke: dict, reference: dict, tolerance: float) -> list:
     if _MESH_ROW not in s_rows or _SINGLE_ROW not in s_rows:
         problems.append(_NO_MESH + _GATE_BLIND)
     elif _MESH_ROW in r_rows and _SINGLE_ROW in r_rows:
-        s_ratio = s_rows[_MESH_ROW]["us_per_call"]
-        s_ratio /= s_rows[_SINGLE_ROW]["us_per_call"]
-        r_ratio = r_rows[_MESH_ROW]["us_per_call"]
-        r_ratio /= r_rows[_SINGLE_ROW]["us_per_call"]
-        ceiling = r_ratio * tolerance
-        if s_ratio > ceiling:
-            got = f"mesh/single us-per-req ratio {s_ratio:.2f}"
-            ref = f"reference {r_ratio:.2f} x tolerance {tolerance:g}"
-            why = "mesh serving got relatively slower than 1-device"
-            msg = f"{got} exceeds {ceiling:.2f} ({ref}) -- {why}"
-            problems.append(f"REGRESSION: {msg}")
+        s_den = s_rows[_SINGLE_ROW]["us_per_call"]
+        r_den = r_rows[_SINGLE_ROW]["us_per_call"]
+        if s_den <= 0 or r_den <= 0:
+            got = f"{_SINGLE_ROW} us/req is zero"
+            why = "the mesh-ratio denominator is degenerate"
+            problems.append(f"DEGENERATE: {got} -- {why}")
+        else:
+            s_ratio = s_rows[_MESH_ROW]["us_per_call"] / s_den
+            r_ratio = r_rows[_MESH_ROW]["us_per_call"] / r_den
+            ceiling = r_ratio * tolerance
+            if s_ratio > ceiling:
+                got = f"mesh/single us-per-req ratio {s_ratio:.2f}"
+                ref = f"reference {r_ratio:.2f} x tolerance {tolerance:g}"
+                why = "mesh serving got relatively slower than 1-device"
+                msg = f"{got} exceeds {ceiling:.2f} ({ref}) -- {why}"
+                problems.append(f"REGRESSION: {msg}")
 
     # 5. hot-graph replica scaling + bit-identity
     if _REPLICA_ROW not in s_rows:
@@ -234,6 +258,40 @@ def check(smoke: dict, reference: dict, tolerance: float) -> list:
             got = f"served+shed+rejected={total} != submitted={sub}"
             why = "requests vanished or were double-counted under overload"
             problems.append(f"CORRECTNESS: {name}: {got} -- {why}")
+
+    # 9. streaming repair: bit-identity (hard) + repair-vs-rebuild speedup
+    #    floor (reference-relative, like the replica-scaling gate)
+    if _STREAM_ROW not in s_rows:
+        problems.append(_NO_STREAM + _GATE_BLIND)
+    else:
+        derived = s_rows[_STREAM_ROW].get("derived", "")
+        if "bit_identical=1" not in derived:
+            why = "repaired schedules no longer match a from-scratch build"
+            msg = f"{_STREAM_ROW} lacks bit_identical=1 -- {why}"
+            problems.append(f"CORRECTNESS: {msg}")
+        sp = _SPEEDUP_RE.search(derived)
+        ref_row = r_rows.get(_STREAM_ROW)
+        rp = _SPEEDUP_RE.search(ref_row.get("derived", "")) if ref_row else None
+        if sp and rp:
+            floor = float(rp.group(1)) / tolerance
+            if float(sp.group(1)) < floor:
+                got = f"repair speedup {float(sp.group(1)):.2f}x"
+                ref = f"{float(rp.group(1)):.2f}x ref / tol {tolerance:g}"
+                why = "update_graph stopped being incremental"
+                msg = f"{got} fell below {floor:.2f}x ({ref}) -- {why}"
+                problems.append(f"REGRESSION: {msg}")
+
+    # 10. streaming zero-gap swap (hard correctness gate)
+    if _GAP_ROW not in s_rows:
+        problems.append(_NO_GAP + _GATE_BLIND)
+    else:
+        derived = s_rows[_GAP_ROW].get("derived", "")
+        gap = _GAP_RE.search(derived)
+        if gap is None or int(gap.group(1)) != 0:
+            got = f"gap={gap.group(1)}" if gap else "no gap count"
+            why = "a concurrent request observed a half-swapped executor"
+            msg = f"{_GAP_ROW} reported {got} -- {why}"
+            problems.append(f"CORRECTNESS: {msg}")
     return problems
 
 

@@ -37,7 +37,7 @@ def main() -> None:
     from benchmarks import (convergence, latency, moe_imbalance, openloop,
                             order_ops, roofline_table, scaling,
                             schedule_tuning, schedule_util, serving,
-                            sharded_spmm, utilization)
+                            sharded_spmm, streaming, utilization)
 
     suites = {
         "order_ops": order_ops.run,                    # Table II
@@ -50,6 +50,7 @@ def main() -> None:
         "sharded_spmm": sharded_spmm.run,              # multi-device executor
         "serving": serving.run,                        # store + batching
         "openloop": openloop.run,                      # overload/admission
+        "streaming": streaming.run,                    # incremental repair
         "moe_imbalance": moe_imbalance.run,            # beyond-paper (EP)
         "roofline": roofline_table.run,                # §Roofline
     }
@@ -83,7 +84,7 @@ def main() -> None:
         # engine's cold/warm-start numbers as their own sections, so the
         # perf trajectory across PRs tracks device scaling and store-hit
         # latency separately from the single-device rows
-        for section in ("sharded_spmm", "serving", "openloop"):
+        for section in ("sharded_spmm", "serving", "openloop", "streaming"):
             sub = [r for r in payload["rows"]
                    if r["name"].startswith(f"{section}/")]
             if sub:

@@ -57,6 +57,23 @@ from repro.sharding.schedule_shard import shard_schedule
 GATHER = "gather"
 ONEHOT = "onehot"
 
+#: floor (total slot-array bytes) below which a repair re-uploads in full
+#: instead of scatter-patching dirty slots on device. The scoped scatter
+#: saves transfer bandwidth on accelerator-scale graphs but costs an XLA
+#: scatter dispatch (and an occasional compile) that a small graph's plain
+#: re-upload beats; tests pin this to 0 to exercise the scoped path.
+SCOPED_UPLOAD_MIN_BYTES = 16 * 1024 * 1024
+
+
+@jax.jit
+def _scatter_set(dev: jax.Array, idx: jax.Array, v: jax.Array) -> jax.Array:
+    """Copy-on-write point update of a chunked device array: one jitted
+    (hence shape-cached) scatter instead of eager per-op dispatch — the
+    value-patch fast lane calls this on every streaming update, so its
+    dispatch overhead is on the repair-latency critical path."""
+    return dev.reshape(-1).at[idx].set(v).reshape(dev.shape)
+
+
 # cost-model constants (v5e-class core): 128×128 MXU MAC/cycle, and a
 # dynamic-gather bandwidth proxy for VMEM row fetches on the VPU path
 _MXU_MACS_PER_CYCLE = 16384
@@ -237,6 +254,60 @@ def _gather_slots(sched: Schedule):
     return gcol.astype(np.int32), tgt, sched.val
 
 
+def _gather_slots_steps(sched: Schedule, steps: np.ndarray):
+    """``_gather_slots`` restricted to the given step indices — what the
+    repair path computes for re-emitted steps only, instead of re-deriving
+    the whole slot stream."""
+    _, n = sched.shape
+    k = sched.nnz_per_step
+    r = sched.rows_per_window
+    cb = sched.cols_per_block
+    steps = np.asarray(steps, np.int64)
+    sl = (steps[:, None] * k + np.arange(k, dtype=np.int64)).reshape(-1)
+    win = np.repeat(sched.win_id[steps].astype(np.int64), k)
+    cblk = np.repeat(sched.col_block[steps].astype(np.int64), k)
+    gcol = np.minimum(cblk * cb + sched.local_col[sl], n - 1).astype(np.int32)
+    tgt = np.maximum(sched.row_map[win * r + sched.local_row[sl]],
+                     0).astype(np.int32)
+    return gcol, tgt, sched.val[sl]
+
+
+def _spliced_host_slots(old_host, new_sched: Schedule, repair):
+    """Host gather-slot arrays of a repaired schedule, spliced from the old
+    executor's retained host slots plus freshly derived slots for the
+    re-emitted steps. Returns ``(gcol, tgt, val, moved)`` where ``moved``
+    flags steps whose *device position or content* changed — the scoped
+    re-upload set. Reused steps carry their slot payloads verbatim: the
+    repair guarantees window-aligned steps keep identical ``gcol`` (same
+    local cols/blocks), ``tgt`` (the new row_map holds the same row values
+    at the remapped window slots) and ``val``."""
+    og, ot, ov = old_host
+    k = new_sched.nnz_per_step
+    src = np.asarray(repair.step_src, np.int64)
+    s_new = src.shape[0]
+    if s_new != new_sched.n_steps:
+        raise ValueError("step_src does not match the repaired schedule")
+    moved = src != np.arange(s_new, dtype=np.int64)
+    reused = src >= 0
+    fresh = np.nonzero(~reused)[0]
+    if fresh.size:
+        fg, ft, fv = _gather_slots_steps(new_sched, fresh)
+    else:
+        fg = ft = fv = None
+
+    def take(oa, fa, dtype):
+        out = np.empty((s_new, k), dtype)
+        out[reused] = oa.reshape(-1, k)[src[reused]]
+        if fa is not None:
+            out[~reused] = fa.reshape(-1, k)
+        return out.reshape(-1)
+
+    gcol = take(og, fg, np.int32)
+    tgt = take(ot, ft, np.int32)
+    val = take(ov, fv, ov.dtype)
+    return gcol, tgt, val, moved
+
+
 class _ExecutorBase:
     """Shared surface of the single- and multi-device executors: operand
     validation, the jitted-closure call protocol, and the whole-GCN forward
@@ -323,15 +394,22 @@ class ScheduleExecutor(_ExecutorBase):
         self.ktile = ktile
         self.bf16_accumulate = bf16_accumulate
         self.device = device
+        self._slot_chunk_arg = slot_chunk
         k = sched.nnz_per_step
         r = sched.rows_per_window
         cb = sched.cols_per_block
         self.routing = routing or select_routing(k, cb, r, ktile)
+        #: set by the repair path: True when the last (re)construction
+        #: uploaded only the dirty slot set instead of the full stream
+        self.scoped_upload = False
 
         # ---- one-time host-side precompute + host→device upload ----------
         # only the selected routing's representation is built/uploaded
         if self.routing == GATHER:
             gcol, tgt, val = _gather_slots(sched)
+            # host copies are retained so an incremental repair can splice
+            # new slot streams without re-deriving every step (DESIGN.md §11)
+            self._host = (gcol, tgt, val)
 
             # pad the flat slot stream to a whole number of chunks so the
             # fused gather path can bound its [chunk, kdim] intermediate
@@ -361,6 +439,155 @@ class ScheduleExecutor(_ExecutorBase):
                            else self._onehot_impl)
         self._spmm = jax.jit(self._spmm_impl)
         self._forward = jax.jit(self._forward_impl)
+
+    @classmethod
+    def _from_repair(cls, old_ex: "ScheduleExecutor", new_sched: Schedule,
+                     repair) -> "ScheduleExecutor":
+        """Executor for a repaired schedule that reuses the old executor's
+        device buffers wherever the repair left steps untouched.
+
+        GATHER: the host slot stream is spliced (reused steps copy their old
+        slot rows, re-emitted steps derive fresh ones), and when the chunk
+        grid is unchanged only the *moved* slots are scattered into the old
+        device arrays (`.at[idx].set` — copy-on-write, so the old executor
+        keeps serving in-flight batches untouched). ONEHOT or any fallback
+        repair rebuilds from scratch — a fresh full upload.
+
+        The result is a **new** executor object with fresh jit closures;
+        never mutates ``old_ex``. Device contents are bit-identical to a
+        cold ``ScheduleExecutor(new_sched, ...)`` with the same kwargs.
+        """
+        if (old_ex.routing != GATHER or repair.fell_back
+                or repair.step_src is None
+                or getattr(old_ex, "_host", None) is None):
+            return cls(new_sched, ktile=old_ex.ktile, routing=old_ex.routing,
+                       bf16_accumulate=old_ex.bf16_accumulate,
+                       slot_chunk=old_ex._slot_chunk_arg,
+                       device=old_ex.device)
+        self = cls.__new__(cls)
+        self.sched = new_sched
+        self.ktile = old_ex.ktile
+        self.bf16_accumulate = old_ex.bf16_accumulate
+        self.device = old_ex.device
+        self.routing = GATHER
+        self._slot_chunk_arg = old_ex._slot_chunk_arg
+
+        k = new_sched.nnz_per_step
+        gcol, tgt, val, moved = _spliced_host_slots(
+            old_ex._host, new_sched, repair)
+        self._host = (gcol, tgt, val)
+        s_total = gcol.shape[0]
+        self._slot_chunk = int(min(self._slot_chunk_arg, max(1, s_total)))
+        pad = (-s_total) % self._slot_chunk
+        self._n_chunks = (s_total + pad) // self._slot_chunk
+        # scoped patch is sound only on an identical padded grid — same
+        # slot count (so the old padding region still pads) and same
+        # chunking (so accumulation order, hence bitwise output, matches a
+        # cold build)
+        same_grid = (s_total == old_ex._host[0].shape[0]
+                     and self._slot_chunk == old_ex._slot_chunk
+                     and self._n_chunks == old_ex._n_chunks)
+        n_moved = int(np.count_nonzero(moved)) * k
+        if same_grid and n_moved == 0:
+            # content and layout identical: the old device arrays ARE the
+            # new ones (jax arrays are immutable — sharing is safe)
+            self._gcol, self._tgt = old_ex._gcol, old_ex._tgt
+            self._val = old_ex._val
+            self.scoped_upload = True
+        elif (same_grid and 2 * n_moved <= s_total
+              and s_total * 12 >= SCOPED_UPLOAD_MIN_BYTES):
+            FAULTS.check("upload", device=self.device)
+            steps = np.nonzero(moved)[0]
+            idx = (steps[:, None] * k
+                   + np.arange(k, dtype=np.int64)).reshape(-1)
+            # pad the scatter index to a coarse bucket (repeating the
+            # last slot — duplicate .set with an identical value is
+            # harmless) so repeated small updates reuse a handful of
+            # compiled scatters instead of recompiling per dirty-set size
+            bucket = 1024
+            while bucket < idx.size:
+                bucket *= 4
+            if bucket > idx.size:
+                idx = np.concatenate(
+                    [idx, np.full(bucket - idx.size, idx[-1], idx.dtype)])
+            jidx = jnp.asarray(idx.astype(np.int32))
+
+            def _patch(dev, host):
+                flat = dev.reshape(-1).at[jidx].set(jnp.asarray(host[idx]))
+                return flat.reshape(self._n_chunks, self._slot_chunk)
+
+            self._gcol = _patch(old_ex._gcol, gcol)
+            self._tgt = _patch(old_ex._tgt, tgt)
+            self._val = _patch(old_ex._val, val)
+            self.scoped_upload = True
+        else:
+            def _chunked(x, fill):
+                return _placed(
+                    np.concatenate([x, np.full(pad, fill, x.dtype)])
+                    .reshape(self._n_chunks, self._slot_chunk), self.device)
+            self._gcol = _chunked(gcol, 0)
+            self._tgt = _chunked(tgt, 0)
+            self._val = _chunked(val, 0.0)
+            self.scoped_upload = False
+        self.device_bytes = int(self._gcol.nbytes + self._tgt.nbytes
+                                + self._val.nbytes)
+        self._spmm_impl = self._gather_impl
+        self._spmm = jax.jit(self._spmm_impl)
+        self._forward = jax.jit(self._forward_impl)
+        return self
+
+    @classmethod
+    def _value_patched(cls, old_ex: "ScheduleExecutor", new_sched: Schedule,
+                       slots: np.ndarray, vals: np.ndarray
+                       ) -> "ScheduleExecutor":
+        """Executor for a *value-only* patched schedule: structure (and
+        therefore the slot layout, chunk grid, gcol/tgt streams) is
+        byte-identical to ``old_ex``; only ``val`` changed, at ``slots``.
+
+        O(|delta|): shares the old device ``_gcol``/``_tgt`` arrays
+        outright and scatters just the changed values into ``_val``
+        (copy-on-write — the old executor keeps serving untouched). The
+        scatter index is padded to a small fixed bucket so every update of
+        a given size class reuses one compiled scatter."""
+        if old_ex.routing != GATHER or getattr(old_ex, "_host", None) is None:
+            return cls(new_sched, ktile=old_ex.ktile, routing=old_ex.routing,
+                       bf16_accumulate=old_ex.bf16_accumulate,
+                       slot_chunk=old_ex._slot_chunk_arg,
+                       device=old_ex.device)
+        self = cls.__new__(cls)
+        self.sched = new_sched
+        self.ktile = old_ex.ktile
+        self.bf16_accumulate = old_ex.bf16_accumulate
+        self.device = old_ex.device
+        self.routing = GATHER
+        self._slot_chunk_arg = old_ex._slot_chunk_arg
+        self._slot_chunk = old_ex._slot_chunk
+        self._n_chunks = old_ex._n_chunks
+
+        gcol, tgt, oval = old_ex._host
+        val = oval.copy()
+        val[slots] = np.asarray(vals, val.dtype)
+        self._host = (gcol, tgt, val)
+        self._gcol, self._tgt = old_ex._gcol, old_ex._tgt
+        if slots.size == 0:
+            self._val = old_ex._val
+        else:
+            FAULTS.check("upload", device=self.device)
+            idx = np.asarray(slots, np.int64)
+            bucket = 64
+            while bucket < idx.size:
+                bucket *= 4
+            if bucket > idx.size:
+                idx = np.concatenate(
+                    [idx, np.full(bucket - idx.size, idx[-1], idx.dtype)])
+            self._val = _scatter_set(old_ex._val, idx.astype(np.int32),
+                                     val[idx])
+        self.scoped_upload = True
+        self.device_bytes = old_ex.device_bytes
+        self._spmm_impl = self._gather_impl
+        self._spmm = jax.jit(self._spmm_impl)
+        self._forward = jax.jit(self._forward_impl)
+        return self
 
     # ---- jitted bodies -----------------------------------------------------
 
@@ -477,10 +704,14 @@ class ShardedScheduleExecutor(_ExecutorBase):
         self.sched = sched
         self.ktile = ktile
         self.bf16_accumulate = bf16_accumulate
+        self._slot_chunk_arg = slot_chunk
         k = sched.nnz_per_step
         r = sched.rows_per_window
         cb = sched.cols_per_block
         self.routing = routing or select_routing(k, cb, r, ktile)
+        #: set by the repair path: True when the last (re)construction
+        #: re-uploaded only the device shards whose steps changed
+        self.scoped_upload = False
 
         shards = shard_schedule(sched, n_devices)
         self.step_ranges = shards.ranges
@@ -492,6 +723,8 @@ class ShardedScheduleExecutor(_ExecutorBase):
         # ---- one-time host-side split + per-device upload ----------------
         if self.routing == GATHER:
             gcol, tgt, val = _gather_slots(sched)
+            # retained for incremental repair splicing (DESIGN.md §11)
+            self._host = (gcol, tgt, val)
             # per-device flat slot streams, padded to the common shard
             # length, then chunked so the [chunk, kdim] intermediate stays
             # bounded (same contract as the single-device executor)
@@ -530,6 +763,146 @@ class ShardedScheduleExecutor(_ExecutorBase):
                            else self._sharded_onehot_impl)
         self._spmm = jax.jit(self._spmm_impl)
         self._forward = jax.jit(self._forward_impl)
+
+    @classmethod
+    def _from_repair(cls, old_ex: "ShardedScheduleExecutor",
+                     new_sched: Schedule, repair) -> "ShardedScheduleExecutor":
+        """Sharded executor for a repaired schedule, re-uploading only the
+        device shards whose step range contains a moved/re-emitted step.
+
+        The step count must be unchanged (the linspace split is then
+        identical, so each clean device's stacked shard is byte-identical);
+        otherwise — or for ONEHOT routing or a fallback repair — this
+        rebuilds from scratch. Clean devices keep their existing on-device
+        shard buffers via ``make_array_from_single_device_arrays``; the new
+        executor is a distinct object with fresh jit closures, and the old
+        one keeps serving in-flight batches."""
+        if (old_ex.routing != GATHER or repair.fell_back
+                or repair.step_src is None
+                or getattr(old_ex, "_host", None) is None
+                or new_sched.n_steps != old_ex.sched.n_steps):
+            return cls(new_sched, mesh=old_ex.mesh, ktile=old_ex.ktile,
+                       routing=old_ex.routing,
+                       bf16_accumulate=old_ex.bf16_accumulate,
+                       slot_chunk=old_ex._slot_chunk_arg)
+        self = cls.__new__(cls)
+        self.mesh = old_ex.mesh
+        self.axis = old_ex.axis
+        self.n_devices = old_ex.n_devices
+        self.sched = new_sched
+        self.ktile = old_ex.ktile
+        self.bf16_accumulate = old_ex.bf16_accumulate
+        self.routing = GATHER
+        self._slot_chunk_arg = old_ex._slot_chunk_arg
+        # n_steps unchanged ⇒ the deterministic linspace split is identical
+        self.step_ranges = old_ex.step_ranges
+        self._slot_chunk = old_ex._slot_chunk
+        self._n_chunks = old_ex._n_chunks
+
+        k = new_sched.nnz_per_step
+        gcol, tgt, val, moved = _spliced_host_slots(
+            old_ex._host, new_sched, repair)
+        self._host = (gcol, tgt, val)
+        n_devices = self.n_devices
+        row_len = self._n_chunks * self._slot_chunk
+        dirty = [bool(np.any(moved[lo:hi]))
+                 for lo, hi in self.step_ranges]
+        devices = list(self.mesh.devices.reshape(-1))
+        sharding = NamedSharding(self.mesh, P(self.axis))
+        gshape = (n_devices, self._n_chunks, self._slot_chunk)
+
+        def _restack(old_arr, flat, fill):
+            by_dev = {s.device: s.data for s in old_arr.addressable_shards}
+            parts = []
+            for d, dev in enumerate(devices):
+                lo, hi = self.step_ranges[d]
+                if not dirty[d]:
+                    parts.append(by_dev[dev])
+                    continue
+                FAULTS.check("upload", device=dev)
+                row = np.full((1, row_len), fill, flat.dtype)
+                row[0, :(hi - lo) * k] = flat[lo * k:hi * k]
+                parts.append(jax.device_put(
+                    jnp.asarray(row.reshape(1, self._n_chunks,
+                                            self._slot_chunk)), dev))
+            return jax.make_array_from_single_device_arrays(
+                gshape, sharding, parts)
+
+        self._gcol = _restack(old_ex._gcol, gcol, 0)
+        self._tgt = _restack(old_ex._tgt, tgt, 0)
+        self._val = _restack(old_ex._val, val, 0.0)
+        self.scoped_upload = not all(dirty)
+        self.dirty_devices = int(sum(dirty))
+        self.device_bytes = int(self._gcol.nbytes + self._tgt.nbytes
+                                + self._val.nbytes)
+        self._spmm_impl = self._sharded_gather_impl
+        self._spmm = jax.jit(self._spmm_impl)
+        self._forward = jax.jit(self._forward_impl)
+        return self
+
+    @classmethod
+    def _value_patched(cls, old_ex: "ShardedScheduleExecutor",
+                       new_sched: Schedule, slots: np.ndarray,
+                       vals: np.ndarray) -> "ShardedScheduleExecutor":
+        """Sharded executor for a value-only patched schedule: slot layout
+        and step split are identical to ``old_ex``, only ``val`` changed at
+        ``slots``. Shares the global ``_gcol``/``_tgt`` arrays and re-uploads
+        just the ``_val`` shards of devices whose step range contains a
+        changed slot; clean devices keep their existing shard buffers."""
+        if old_ex.routing != GATHER or getattr(old_ex, "_host", None) is None:
+            return cls(new_sched, mesh=old_ex.mesh, ktile=old_ex.ktile,
+                       routing=old_ex.routing,
+                       bf16_accumulate=old_ex.bf16_accumulate,
+                       slot_chunk=old_ex._slot_chunk_arg)
+        self = cls.__new__(cls)
+        self.mesh = old_ex.mesh
+        self.axis = old_ex.axis
+        self.n_devices = old_ex.n_devices
+        self.sched = new_sched
+        self.ktile = old_ex.ktile
+        self.bf16_accumulate = old_ex.bf16_accumulate
+        self.routing = GATHER
+        self._slot_chunk_arg = old_ex._slot_chunk_arg
+        self.step_ranges = old_ex.step_ranges
+        self._slot_chunk = old_ex._slot_chunk
+        self._n_chunks = old_ex._n_chunks
+
+        gcol, tgt, oval = old_ex._host
+        val = oval.copy()
+        val[slots] = np.asarray(vals, val.dtype)
+        self._host = (gcol, tgt, val)
+        self._gcol, self._tgt = old_ex._gcol, old_ex._tgt
+
+        k = new_sched.nnz_per_step
+        touched_steps = np.unique(np.asarray(slots, np.int64) // k)
+        row_len = self._n_chunks * self._slot_chunk
+        dirty = [bool(np.any((touched_steps >= lo) & (touched_steps < hi)))
+                 for lo, hi in self.step_ranges]
+        devices = list(self.mesh.devices.reshape(-1))
+        sharding = NamedSharding(self.mesh, P(self.axis))
+        gshape = (self.n_devices, self._n_chunks, self._slot_chunk)
+        by_dev = {s.device: s.data for s in old_ex._val.addressable_shards}
+        parts = []
+        for d, dev in enumerate(devices):
+            lo, hi = self.step_ranges[d]
+            if not dirty[d]:
+                parts.append(by_dev[dev])
+                continue
+            FAULTS.check("upload", device=dev)
+            row = np.zeros((1, row_len), val.dtype)
+            row[0, :(hi - lo) * k] = val[lo * k:hi * k]
+            parts.append(jax.device_put(
+                jnp.asarray(row.reshape(1, self._n_chunks,
+                                        self._slot_chunk)), dev))
+        self._val = jax.make_array_from_single_device_arrays(
+            gshape, sharding, parts)
+        self.scoped_upload = True
+        self.dirty_devices = int(sum(dirty))
+        self.device_bytes = old_ex.device_bytes
+        self._spmm_impl = self._sharded_gather_impl
+        self._spmm = jax.jit(self._spmm_impl)
+        self._forward = jax.jit(self._forward_impl)
+        return self
 
     def _shard_map(self, body, in_specs):
         # check_rep=False: the bodies end in an explicit psum, which makes
@@ -612,6 +985,43 @@ class ShardedScheduleExecutor(_ExecutorBase):
         out = fn(s["win"], s["cblk"], s["val"], s["lrow"], s["lcol"],
                  s["row_map"], b.astype(acc))
         return out.astype(b.dtype)
+
+
+def repaired_executor(old_ex, new_sched: Schedule, repair):
+    """Executor for a repaired schedule, reusing ``old_ex``'s device
+    buffers wherever the repair (``schedule.repair_schedule``) left steps
+    untouched — the scoped re-upload path of DESIGN.md §11.
+
+    Dispatches on the old executor's class; always returns a **new**
+    executor object (fresh jit closures) and never mutates ``old_ex``, so
+    the serving tier can atomically swap while in-flight batches finish on
+    the old one. Guaranteed bit-identical device state to a cold build of
+    the same class on ``new_sched`` with the same construction kwargs."""
+    if isinstance(old_ex, ShardedScheduleExecutor):
+        return ShardedScheduleExecutor._from_repair(old_ex, new_sched, repair)
+    if isinstance(old_ex, ScheduleExecutor):
+        return ScheduleExecutor._from_repair(old_ex, new_sched, repair)
+    raise TypeError(f"unsupported executor type: {type(old_ex).__name__}")
+
+
+def value_patched_executor(old_ex, new_sched: Schedule, slots, vals):
+    """Executor for a schedule produced by ``schedule.value_patch_schedule``
+    — structure unchanged, only ``val[slots]`` differ from ``old_ex.sched``.
+
+    The O(|delta|) fast lane of DESIGN.md §11: gcol/tgt device arrays are
+    shared with ``old_ex`` and only the changed values are scattered (or
+    the dirty ``val`` shards re-uploaded, for the sharded class). Same
+    contract as ``repaired_executor``: a new object with fresh jit
+    closures, bit-identical device state to a cold build on ``new_sched``.
+    """
+    slots = np.asarray(slots, np.int64)
+    vals = np.asarray(vals)
+    if isinstance(old_ex, ShardedScheduleExecutor):
+        return ShardedScheduleExecutor._value_patched(
+            old_ex, new_sched, slots, vals)
+    if isinstance(old_ex, ScheduleExecutor):
+        return ScheduleExecutor._value_patched(old_ex, new_sched, slots, vals)
+    raise TypeError(f"unsupported executor type: {type(old_ex).__name__}")
 
 
 # ---------------------------------------------------------------------------

@@ -76,6 +76,8 @@ memory, so the engine's executor references are the only ones.
 from __future__ import annotations
 
 import dataclasses
+import queue as queue_mod
+import threading
 import time
 from collections import OrderedDict, deque
 from concurrent.futures import ThreadPoolExecutor
@@ -91,8 +93,15 @@ from repro.core.executor import (
     ScheduleExecutor,
     ShardedScheduleExecutor,
     release_device_steps,
+    repaired_executor,
+    value_patched_executor,
 )
-from repro.core.schedule import Schedule
+from repro.core.schedule import (
+    Schedule,
+    repair_schedule,
+    slot_entry_keys,
+    value_patch_schedule,
+)
 from repro.serving.placement import REPLICATED, SHARDED, SINGLE, MeshPlacer, Placement
 from repro.tuning import registry, runner, space
 from repro.tuning.space import TunedConfig
@@ -229,6 +238,38 @@ class AdmitReport:
 
 
 @dataclasses.dataclass
+class UpdateReport:
+    """What ``update_graph`` did for one edge delta.
+
+    ``repaired`` is True on the incremental path (schedule patched in
+    place, scoped re-upload) and False when cumulative drift forced the
+    full re-tune fallback. ``fingerprint`` is the content hash of the
+    mutated graph (what a fresh ``add_graph`` would compute) — on the
+    incremental path it is ``""`` because the O(nnz) hash + store write
+    run on the async persist worker (``drain_persists()`` then
+    ``engine._graphs[gid].fingerprint`` to observe it); ``lineage`` is
+    the cheap chained delta fingerprint, available on every path.
+    ``steps_reused``/
+    ``windows_reused`` quantify how much of the old schedule carried
+    over, and ``scoped_upload`` reports whether the executor patched
+    only dirty device slots instead of re-uploading everything."""
+
+    graph_id: str
+    repaired: bool
+    revision: int
+    fingerprint: str
+    lineage: str
+    drift: float
+    nnz: int
+    update_seconds: float
+    steps_reused: int = 0
+    windows_reused: int = 0
+    windows_total: int = 0
+    scoped_upload: bool = False
+    fell_back: bool = False  # repair degenerated to a full rebuild
+
+
+@dataclasses.dataclass
 class _Request:
     """One queued inference request."""
     rid: int
@@ -283,6 +324,46 @@ class _Resident:
     #: secondary replicas by device index (the primary lives in the
     #: fields above, on the placement's ``device_index``)
     replicas: Dict[int, _Unit] = dataclasses.field(default_factory=dict)
+    # ---- streaming-update state (DESIGN.md §11) ----
+    #: host numpy COO of the graph as currently served (PAD-stripped,
+    #: row-major) — the base ``update_graph`` applies edge deltas to
+    coo: Optional[fmt.COO] = None
+    #: cached per-row nnz histogram, updated incrementally from each
+    #: ``DeltaReport`` so repair never re-scans the graph
+    per_row: Optional[np.ndarray] = None
+    kdim: int = 0  # tuning probe width (re-tune fallback reuses it)
+    revision: int = 0  # streaming repair generation (0 = cold build)
+    orig_nnz: int = 0  # nnz at the last full (re-)tune
+    drift_nnz: int = 0  # cumulative delta entries since then
+    #: chained delta fingerprint — the deterministic lineage anchor for
+    #: the next update. Decoupled from ``fingerprint`` because content
+    #: fingerprints of async-persisted revisions land *after* the swap;
+    #: chaining on them would make the lineage timing-dependent.
+    lineage: str = ""
+    #: lazily-built ``slot_entry_keys`` index of ``sched`` for the
+    #: value-only O(|delta|) update path; cleared whenever a swap changes
+    #: the schedule *structure* (a value patch keeps the layout, so the
+    #: index survives it)
+    slot_cache: Optional[tuple] = None
+
+
+def _dedup_value_delta(delta: fmt.EdgeDelta, n: int):
+    """The delta's effective value writes: last-write-wins per ``(row,
+    col)`` (matching ``csc.apply_edge_delta``), with ``val == 0`` entries
+    dropped — on the pure-value path those are no-op removals of absent
+    edges (an actual removal would have taken the structural path)."""
+    rows = np.asarray(delta.row, np.int64)
+    cols = np.asarray(delta.col, np.int64)
+    vals = np.asarray(delta.val)
+    key = rows * n + cols
+    order = np.argsort(key, kind="stable")
+    ks = key[order]
+    last = np.ones(ks.size, bool)
+    last[:-1] = ks[1:] != ks[:-1]
+    keep = order[last]
+    m = vals[keep] != 0.0
+    keep = keep[m]
+    return rows[keep], cols[keep], vals[keep]
 
 
 def _earliest_deadline(queue: List[_Request]) -> float:
@@ -341,6 +422,7 @@ class GCNServingEngine:
         shed_unmeetable: bool = False,
         max_dispatch_retries: int = 2,
         retry_backoff_s: float = 0.02,
+        repair_drift_threshold: float = 0.25,
         autotune_iters: int = 3,
         autotune_warmup: int = 1,
         autotune_kwargs: Optional[dict] = None,
@@ -393,6 +475,23 @@ class GCNServingEngine:
             )
         self.max_dispatch_retries = int(max_dispatch_retries)
         self.retry_backoff_s = float(retry_backoff_s)
+        if repair_drift_threshold <= 0:
+            raise ValueError(
+                f"repair_drift_threshold must be > 0, got "
+                f"{repair_drift_threshold}"
+            )
+        self.repair_drift_threshold = float(repair_drift_threshold)
+        #: serializes executor swaps against unit snapshots: a dispatch
+        #: reading ``_units`` either sees the whole old executor set or
+        #: the whole new one, never a mix — the zero-gap guarantee of
+        #: ``update_graph`` (in-flight parts hold their own unit refs)
+        self._swap_lock = threading.Lock()
+        #: async schedule-persist pipeline: content fingerprint + store
+        #: write of a repaired revision run on a worker thread, off the
+        #: update hot path (both are O(nnz); the repair itself is O(Δ))
+        self._persist_q: "queue_mod.Queue" = queue_mod.Queue()
+        self._persist_thread: Optional[threading.Thread] = None
+        self._persist_spawn_lock = threading.Lock()
         self._autotune_kwargs = dict(autotune_kwargs or {})
         reserved = {"max_devices", "store"} & set(self._autotune_kwargs)
         if reserved:
@@ -424,9 +523,10 @@ class GCNServingEngine:
         #: the percentile figures in stats()
         self._lat_samples: "deque[float]" = deque(maxlen=_LAT_RESERVOIR)
         # the overload accounting identity over the queue path:
-        #   submitted == queue_served + shed + rejected + pending
+        #   submitted == queue_served + shed + rejected + dropped + pending
         # (`requests` also counts direct serve_batch work, so the queue
-        # path gets its own served counter)
+        # path gets its own served counter; `dropped` settles requests a
+        # remove_graph failed while still queued)
         self.counters = {
             "store_hits": 0,
             "store_misses": 0,
@@ -443,9 +543,12 @@ class GCNServingEngine:
             "queue_served": 0,
             "shed": 0,
             "rejected": 0,
+            "dropped": 0,
             "request_failures": 0,
             "dispatch_retries": 0,
             "chunk_retries": 0,
+            "graph_updates": 0,
+            "update_retunes": 0,
         }
 
     # ---- admission ---------------------------------------------------------
@@ -520,12 +623,25 @@ class GCNServingEngine:
             # only thing keeping anything resident
             registry.release_graph(fp)
             tune_s = time.perf_counter() - t0
+        # host-resident base for streaming updates: PAD-stripped numpy
+        # COO + its per-row nnz histogram (kept current by DeltaReports)
+        row = np.asarray(a.row)
+        keep = row != fmt.PAD_IDX
+        col, val = np.asarray(a.col), np.asarray(a.val)
+        if not keep.all():
+            row, col, val = row[keep], col[keep], val[keep]
+        host_coo = fmt.COO(row.astype(np.int32), col.astype(np.int32), val, a.shape)
         rec = _Resident(
             graph_id=graph_id,
             fingerprint=fp,
+            lineage=fp,
             config=cfg,
             sched=sched,
             params_host=jax.tree.map(np.asarray, params),
+            coo=host_coo,
+            per_row=np.bincount(row.astype(np.int64), minlength=a.shape[0]),
+            kdim=int(kdim),
+            orig_nnz=int(row.shape[0]),
         )
         self._graphs[graph_id] = rec
         placement = self.placer.place(graph_id, est)
@@ -557,12 +673,21 @@ class GCNServingEngine:
             )
 
     def remove_graph(self, graph_id: str) -> None:
+        """Drop a graph entirely: executors, replicas, placement, queues.
+
+        Pending queued requests cannot be served once the graph is gone;
+        silently discarding them would break the accounting identity
+        (``submitted == queue_served + shed + rejected + dropped +
+        pending``), so they are **failed**: settled exactly once into the
+        ``dropped`` counter and surfaced as one typed ``RequestFailure``
+        raised *after* the removal fully completed — the engine state is
+        clean whether or not the caller catches it."""
         if graph_id not in self._graphs:
             raise UnknownGraphError(graph_id, "remove_graph")
         rec = self._graphs.pop(graph_id)
         for d in list(rec.replicas):
             self._drop_replica(rec, d, shrink=False)
-        self._pending.pop(graph_id, None)
+        dropped = self._pending.pop(graph_id, None) or []
         self._ready.pop(graph_id, None)
         self._svc_ewma.pop(graph_id, None)
         self._svc_req_ewma.pop(graph_id, None)
@@ -571,6 +696,416 @@ class GCNServingEngine:
             self.device_bytes_in_use -= rec.bytes
         self.placer.forget(graph_id)
         release_device_steps(rec.sched)
+        if dropped:
+            self.counters["dropped"] += len(dropped)
+            raise RequestFailure(
+                graph_id,
+                RuntimeError("graph removed while requests were queued"),
+                len(dropped),
+            )
+
+    # ---- streaming updates (DESIGN.md §11) ---------------------------------
+
+    @staticmethod
+    def _weight_bytes(params) -> int:
+        return sum(int(x.nbytes) for x in jax.tree.leaves(params))
+
+    def _fresh_executor(
+        self, sched: Schedule, cfg: TunedConfig, device_index: Optional[int]
+    ):
+        """Cold executor for one serving clone (the re-tune fallback's
+        builder — full upload, fresh jit closures)."""
+        if device_index is None:  # sharded: spans the mesh
+            return ShardedScheduleExecutor(
+                sched,
+                mesh=self._mesh,
+                ktile=cfg.ktile,
+                routing=cfg.routing,
+                bf16_accumulate=cfg.bf16_accumulate,
+            )
+        _, handle = self._unit_handle(device_index)
+        return ScheduleExecutor(
+            sched,
+            ktile=cfg.ktile,
+            routing=cfg.routing,
+            bf16_accumulate=cfg.bf16_accumulate,
+            device=handle,
+        )
+
+    def _rebuilt_units(self, rec: _Resident, p: Placement, build):
+        """New executor + jitted forward for every resident clone of one
+        graph — primary and secondary replicas — via ``build(old_executor,
+        device_index)``. Runs *outside* the swap lock: device memory
+        transiently holds old and new copies while in-flight batches keep
+        serving on the old closures. Weights are reused in place (an edge
+        delta never changes them), so no weight re-upload."""
+        primary_dev = None if p.kind == SHARDED else p.device_index
+        ex = build(rec.executor, primary_dev)
+        fwd = jax.jit(jax.vmap(ex._forward_impl, in_axes=(None, 0)))
+        primary = _Unit(
+            primary_dev,
+            ex,
+            fwd,
+            rec.params,
+            ex.device_bytes + self._weight_bytes(rec.params),
+        )
+        reps = {}
+        for d, unit in rec.replicas.items():
+            rex = build(unit.executor, d)
+            rfwd = jax.jit(jax.vmap(rex._forward_impl, in_axes=(None, 0)))
+            reps[d] = _Unit(
+                d,
+                rex,
+                rfwd,
+                unit.params,
+                rex.device_bytes + self._weight_bytes(unit.params),
+            )
+        return primary, reps
+
+    def _swap_in(
+        self,
+        rec: _Resident,
+        units,
+        *,
+        coo,
+        per_row,
+        sched: Schedule,
+        fingerprint: Optional[str],
+        lineage: Optional[str] = None,
+        config: Optional[TunedConfig] = None,
+        reset_drift: bool = False,
+        keep_slot_cache: bool = False,
+    ) -> None:
+        """Atomically publish a graph's new host state and (when resident)
+        its rebuilt executor set — the versioned swap protocol: new
+        dispatches snapshot the new units, in-flight batches finish on the
+        old executors their ``_Part``s still reference, and no request
+        ever observes a missing executor.
+
+        ``fingerprint=None`` defers the content fingerprint: the async
+        persist worker fills it in (under this same lock) once computed,
+        provided the revision hasn't moved on by then."""
+        old_sched = rec.sched
+        resident = rec.fwd is not None and units is not None
+        with self._swap_lock:
+            rec.coo = coo
+            rec.per_row = per_row
+            rec.sched = sched
+            if fingerprint is not None:
+                rec.fingerprint = fingerprint
+            if lineage is not None:
+                rec.lineage = lineage
+            if not keep_slot_cache:
+                rec.slot_cache = None
+            rec.revision += 1
+            if config is not None:
+                rec.config = config
+            if reset_drift:
+                rec.orig_nnz = int(np.asarray(coo.row).shape[0])
+                rec.drift_nnz = 0
+            if resident:
+                primary, reps = units
+                old_total = rec.bytes + sum(u.bytes for u in rec.replicas.values())
+                rec.executor, rec.fwd = primary.executor, primary.fwd
+                rec.params, rec.bytes = primary.params, primary.bytes
+                rec.replicas = reps
+                new_total = primary.bytes + sum(u.bytes for u in reps.values())
+        # old-schedule cleanup + byte accounting happen outside the lock:
+        # they touch no field a dispatch snapshot reads
+        release_device_steps(old_sched)
+        if resident:
+            self.placer.reaccount(rec.graph_id, rec.bytes)
+            self.device_bytes_in_use += new_total - old_total
+            self._evict_over_budget(keep=rec.graph_id)
+
+    def update_graph(self, graph_id: str, delta: fmt.EdgeDelta) -> UpdateReport:
+        """Apply a batch of edge mutations to a served graph with
+        incremental schedule repair — AWB-GCN's runtime rebalancing moves
+        (distribution smoothing, remote switching, row remapping) applied
+        as *delta operators* on the converged schedule instead of a
+        from-scratch rebuild.
+
+        The incremental path patches the host COO (``csc.
+        apply_edge_delta``), repairs the balanced schedule in place
+        (``schedule.repair_schedule`` — bit-identical to a cold
+        ``build_balanced_schedule`` on the mutated graph), splices every
+        resident clone's executor with a scoped re-upload of just the
+        dirty step slices (``executor.repaired_executor``; the sharded
+        variant re-uploads only affected device shards), persists the
+        repaired schedule under the mutated graph's content fingerprint
+        (a restart warm-starts it with zero sweeps), and atomically swaps
+        — in-flight batches finish on the old executors, new dispatches
+        route to the new ones, zero serving gap.
+
+        Past ``repair_drift_threshold`` (cumulative delta nnz vs. the
+        nnz at the last full tune), repeated repairs have drifted the
+        schedule's geometry assumptions far enough that re-tuning is
+        worth the cost: the update falls back to a **full re-tune** of
+        the mutated graph (measured sweep unless the store already holds
+        the answer), published through the same swap protocol. The
+        re-tune runs synchronously here — single-process engine — but
+        the swap protocol is exactly what lets a deployment run it on a
+        background thread: serving continues on the repaired executors
+        until the tuned replacement swaps in.
+
+        An **evicted** graph updates host-side only (COO, histogram,
+        schedule, fingerprint); its next re-admission uploads the
+        repaired schedule fresh. Weights are untouched either way.
+        Raises ``UnknownGraphError`` for an unknown graph and
+        ``ValueError`` for an out-of-bounds delta (state unchanged)."""
+        rec = self._graphs.get(graph_id)
+        if rec is None:
+            raise UnknownGraphError(graph_id, "update_graph")
+        t0 = time.perf_counter()
+        new_coo, report = fmt.apply_edge_delta(rec.coo, delta, with_report=True)
+        per_row = rec.per_row
+        if report.touched_rows.size:
+            per_row = per_row.copy()
+            per_row[report.touched_rows] += report.row_nnz_delta
+        self.counters["graph_updates"] += 1
+        rec.drift_nnz += report.n_added + report.n_removed + report.n_updated
+        drift = rec.drift_nnz / max(1, rec.orig_nnz)
+        lineage = registry.delta_fingerprint(rec.lineage, delta, rec.revision + 1)
+        if drift > self.repair_drift_threshold:
+            return self._retune_updated(rec, new_coo, per_row, drift, lineage, t0)
+        patched = None
+        if report.n_added == 0 and report.n_removed == 0:
+            # pure value update: structure (hence slot layout) unchanged —
+            # the O(|delta|) lane patches just the affected ``val`` slots
+            if rec.slot_cache is None:
+                rec.slot_cache = slot_entry_keys(rec.sched)
+            rows, cols, vals = _dedup_value_delta(delta, rec.coo.shape[1])
+            patched = value_patch_schedule(rec.sched, rec.slot_cache, rows, cols, vals)
+        if patched is not None:
+            new_sched, slots = patched
+            units = None
+            if rec.fwd is not None:
+                units = self._rebuilt_units(
+                    rec,
+                    self.placer.placement_of(graph_id),
+                    lambda old_ex, _d: value_patched_executor(
+                        old_ex, new_sched, slots, new_sched.val[slots]
+                    ),
+                )
+            self._swap_in(
+                rec,
+                units,
+                coo=new_coo,
+                per_row=per_row,
+                sched=new_sched,
+                fingerprint=None,
+                lineage=lineage,
+                keep_slot_cache=True,
+            )
+            self._enqueue_persist(rec, new_coo, rec.config, new_sched)
+            scoped = (
+                units is not None
+                and bool(getattr(units[0].executor, "scoped_upload", False))
+            )
+            nw = new_sched.n_windows
+            return UpdateReport(
+                graph_id=graph_id,
+                repaired=True,
+                revision=rec.revision,
+                fingerprint="",
+                lineage=lineage,
+                drift=drift,
+                nnz=int(np.asarray(new_coo.row).shape[0]),
+                update_seconds=time.perf_counter() - t0,
+                steps_reused=new_sched.n_steps,
+                windows_reused=nw,
+                windows_total=nw,
+                scoped_upload=scoped,
+                fell_back=False,
+            )
+        new_sched, stats = repair_schedule(
+            rec.sched,
+            None,
+            new_coo,
+            report.touched_rows,
+            per_row_old=rec.per_row,
+            per_row_new=per_row,
+            **rec.config.as_schedule_kwargs(),
+        )
+        units = None
+        if rec.fwd is not None:
+            units = self._rebuilt_units(
+                rec,
+                self.placer.placement_of(graph_id),
+                lambda old_ex, _d: repaired_executor(old_ex, new_sched, stats),
+            )
+        self._swap_in(
+            rec,
+            units,
+            coo=new_coo,
+            per_row=per_row,
+            sched=new_sched,
+            fingerprint=None,
+            lineage=lineage,
+        )
+        self._enqueue_persist(rec, new_coo, rec.config, new_sched)
+        scoped = (
+            units is not None
+            and bool(getattr(units[0].executor, "scoped_upload", False))
+        )
+        return UpdateReport(
+            graph_id=graph_id,
+            repaired=True,
+            revision=rec.revision,
+            fingerprint="",
+            lineage=lineage,
+            drift=drift,
+            nnz=int(np.asarray(new_coo.row).shape[0]),
+            update_seconds=time.perf_counter() - t0,
+            steps_reused=int(stats.steps_reused),
+            windows_reused=int(stats.windows_reused),
+            windows_total=int(stats.windows_total),
+            scoped_upload=scoped,
+            fell_back=bool(stats.fell_back),
+        )
+
+    def _persist_entry(
+        self, rec: _Resident, coo, fingerprint: str, cfg: TunedConfig, sched: Schedule
+    ) -> None:
+        """File one schedule under the mutated graph's content
+        fingerprint (revision 0 — the key a fresh ``add_graph`` of this
+        exact graph computes), so a restart warm-starts the repaired
+        state with zero sweeps and zero rebuilds."""
+        p = self.placer.placement_of(rec.graph_id)
+        sharded = p is not None and p.kind == SHARDED
+        if sharded:
+            tune_kw = self._sharded_autotune_kwargs(coo)
+            max_devices = self.n_devices
+        else:
+            tune_kw = self._autotune_kwargs
+            max_devices = 1
+        key = runner.store_key(
+            self.store, fingerprint, rec.kdim, max_devices=max_devices, **tune_kw
+        )
+        self.store.save(key, cfg, sched)
+
+    def _enqueue_persist(
+        self, rec: _Resident, coo, cfg: TunedConfig, sched: Schedule
+    ) -> None:
+        """Queue the content fingerprint + store write of a just-swapped
+        revision for the background worker — both are O(nnz), everything
+        the update hot path still does is O(|delta|). The worker also
+        back-fills ``rec.fingerprint`` (under the swap lock) unless a
+        later revision swapped in first."""
+        self._persist_q.put((rec, coo, cfg, sched, rec.revision))
+        if self._persist_thread is None:
+            with self._persist_spawn_lock:
+                if self._persist_thread is None:
+                    t = threading.Thread(target=self._persist_worker, daemon=True)
+                    self._persist_thread = t
+                    t.start()
+
+    def _persist_worker(self) -> None:
+        while True:
+            try:
+                task = self._persist_q.get(timeout=5.0)
+            except queue_mod.Empty:
+                # idle: let the thread die; the next enqueue respawns it
+                with self._persist_spawn_lock:
+                    if self._persist_q.empty():
+                        self._persist_thread = None
+                        return
+                continue
+            rec, coo, cfg, sched, revision = task
+            try:
+                if rec.revision != revision:
+                    # superseded: a later update already swapped in and
+                    # queued its own persist — skip the stale snapshot
+                    continue
+                fp2 = registry.graph_fingerprint(coo)
+                self._persist_entry(rec, coo, fp2, cfg, sched)
+                with self._swap_lock:
+                    if rec.revision == revision:
+                        rec.fingerprint = fp2
+            except Exception:
+                pass  # persistence is best-effort off the hot path
+            finally:
+                self._persist_q.task_done()
+
+    def drain_persists(self, timeout: float = 60.0) -> None:
+        """Block until every queued async schedule persist has completed
+        (the store then reflects the latest swapped revisions — what a
+        clean shutdown or a test wanting warm-restart guarantees calls)."""
+        q = self._persist_q
+        deadline = time.monotonic() + timeout
+        with q.all_tasks_done:
+            while q.unfinished_tasks:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError("async persist drain timed out")
+                q.all_tasks_done.wait(remaining)
+
+    def _retune_updated(
+        self, rec: _Resident, new_coo, per_row, drift: float, lineage: str, t0: float
+    ) -> UpdateReport:
+        """The drift fallback: full re-tune of the mutated graph (store
+        warm-start when available), published through the same atomic
+        swap. Resets the drift accumulator — the new schedule is the new
+        baseline."""
+        self.counters["update_retunes"] += 1
+        gid = rec.graph_id
+        fp2 = registry.graph_fingerprint(new_coo)
+        p = self.placer.placement_of(gid)
+        sharded = p is not None and p.kind == SHARDED
+        if sharded:
+            tune_kw = self._sharded_autotune_kwargs(new_coo)
+            max_devices = self.n_devices
+        else:
+            tune_kw = self._autotune_kwargs
+            max_devices = 1
+        key = runner.store_key(
+            self.store, fp2, rec.kdim, max_devices=max_devices, **tune_kw
+        )
+        entry = self.store.load(key)
+        if entry is not None:
+            self.counters["store_hits"] += 1
+            cfg, sched = entry
+            self._check_route(gid, cfg, sharded, "stored")
+        else:
+            self.counters["store_misses"] += 1
+            cfg = runner.autotune(
+                new_coo,
+                (new_coo.shape[1], rec.kdim),
+                max_devices=max_devices,
+                store=self.store,
+                **tune_kw,
+            )
+            self._check_route(gid, cfg, sharded, "tuned")
+            sched = registry.get_schedule(
+                new_coo, **cfg.as_schedule_kwargs(), fingerprint=fp2
+            )
+            registry.release_graph(fp2)
+        units = None
+        if rec.fwd is not None:
+            units = self._rebuilt_units(
+                rec, p, lambda _old, d: self._fresh_executor(sched, cfg, d)
+            )
+        self._swap_in(
+            rec,
+            units,
+            coo=new_coo,
+            per_row=per_row,
+            sched=sched,
+            fingerprint=fp2,
+            lineage=fp2,
+            config=cfg,
+            reset_drift=True,
+        )
+        return UpdateReport(
+            graph_id=gid,
+            repaired=False,
+            revision=rec.revision,
+            fingerprint=fp2,
+            lineage=lineage,
+            drift=drift,
+            nnz=int(np.asarray(new_coo.row).shape[0]),
+            update_seconds=time.perf_counter() - t0,
+        )
 
     # ---- residency / eviction / replication / rebalance --------------------
 
@@ -661,6 +1196,13 @@ class GCNServingEngine:
         rec.fwd = None
         release_device_steps(rec.sched)
         self.device_bytes_in_use -= rec.bytes
+        # service EWMAs were measured under this residency (device,
+        # replica set, possibly a different route after rebalance); a
+        # re-admitted graph must re-measure instead of shedding requests
+        # off stale predictions
+        self._svc_ewma.pop(rec.graph_id, None)
+        self._svc_req_ewma.pop(rec.graph_id, None)
+        self._calm_polls.pop(rec.graph_id, None)
 
     def _grow_replica(self, rec: _Resident) -> bool:
         """Clone ``rec`` onto the coolest device that doesn't yet host it
@@ -690,12 +1232,18 @@ class GCNServingEngine:
         closure, and — for one-hot executors — exactly its own device's
         memoized step arrays (surviving replicas keep theirs)."""
         unit = rec.replicas.pop(device_index)
-        self.placer.drop_replica(rec.graph_id, device_index)
+        p = self.placer.drop_replica(rec.graph_id, device_index)
         _, handle = self._unit_handle(device_index)
         release_device_steps(rec.sched, device=handle)
         self.device_bytes_in_use -= unit.bytes
         if shrink:
             self.counters["replicas_dropped"] += 1
+        if p.kind == SINGLE:
+            # collapsed back to one clone: the EWMAs were measured with
+            # batches split across replicas, so they underestimate
+            # single-replica service time — re-measure from scratch
+            self._svc_ewma.pop(rec.graph_id, None)
+            self._svc_req_ewma.pop(rec.graph_id, None)
 
     def _update_replication(self) -> None:
         """Grow hot graphs' replica sets, shrink idle ones (runs at every
@@ -812,11 +1360,15 @@ class GCNServingEngine:
 
     def _units(self, rec: _Resident) -> List[_Unit]:
         """All resident serving clones of one admitted graph, primary
-        first."""
-        p = self.placer.placement_of(rec.graph_id)
-        primary_dev = None if p.kind == SHARDED else p.device_index
-        primary = _Unit(primary_dev, rec.executor, rec.fwd, rec.params, rec.bytes)
-        return [primary] + [rec.replicas[d] for d in sorted(rec.replicas)]
+        first. Snapshotted under the swap lock: a concurrent
+        ``update_graph`` either hasn't swapped yet (every unit is the old
+        executor set) or has fully swapped (every unit is the new set) —
+        never a mix, and never a missing executor."""
+        with self._swap_lock:
+            p = self.placer.placement_of(rec.graph_id)
+            primary_dev = None if p.kind == SHARDED else p.device_index
+            primary = _Unit(primary_dev, rec.executor, rec.fwd, rec.params, rec.bytes)
+            return [primary] + [rec.replicas[d] for d in sorted(rec.replicas)]
 
     def _outstanding_key(self, unit: _Unit):
         d = unit.device_index

@@ -156,6 +156,28 @@ class MeshPlacer:
         for d, share in per_dev.items():
             self.used[d] -= share
 
+    def reaccount(self, graph_id: str, nbytes: int) -> None:
+        """Adjust a *resident* graph's byte accounting in place — what a
+        streaming ``update_graph`` needs when the repaired executor's
+        footprint differs from the old one (the placement itself is
+        sticky: repair never migrates a graph). Replicated graphs charge
+        one full new footprint per replica device; sharded/single reuse
+        the admission split."""
+        per_dev = self._resident_bytes.get(graph_id)
+        if per_dev is None:
+            raise ValueError(f"graph {graph_id!r} is not resident")
+        p = self.placements[graph_id]
+        for d, share in per_dev.items():
+            self.used[d] -= share
+        if p.kind == REPLICATED:
+            new = {d: int(nbytes) for d in per_dev}
+        else:
+            shares = self._shares(p, nbytes)
+            new = dict(zip(p.device_indices, shares))
+        self._resident_bytes[graph_id] = new
+        for d, share in new.items():
+            self.used[d] += share
+
     def forget(self, graph_id: str) -> None:
         """Drop a graph entirely (engine ``remove_graph``)."""
         self.unaccount(graph_id)

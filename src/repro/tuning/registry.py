@@ -50,6 +50,24 @@ def graph_fingerprint(a: fmt.COO) -> str:
     return h.hexdigest()
 
 
+def delta_fingerprint(parent_fp: str, delta, revision: int) -> str:
+    """Chained identity of a streamed graph mutation: the parent's
+    fingerprint hashed with the edge delta's bytes and the repair
+    generation. O(|delta|) instead of the O(nnz) full-content hash — the
+    streaming path's cheap lineage identity for logging and in-memory
+    bookkeeping. Two graphs reached by the same delta sequence share it;
+    unlike ``graph_fingerprint`` it is *not* content-canonical (different
+    delta orders reaching the same matrix hash differently), so on-disk
+    store entries keep using the content hash."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(parent_fp.encode())
+    h.update(repr(int(revision)).encode())
+    h.update(np.asarray(delta.row).tobytes())
+    h.update(np.asarray(delta.col).tobytes())
+    h.update(np.asarray(delta.val).tobytes())
+    return h.hexdigest()
+
+
 def mesh_fingerprint(mesh=None, n_devices: Optional[int] = None):
     """Hashable identity of the requested device mesh — the second half of
     the ``(graph fingerprint, mesh)`` executor-cache key.

@@ -124,16 +124,18 @@ def store_key(store: TuningStore, fingerprint: str, kdim: int, *,
               max_devices: Optional[int] = None,
               sweep: Optional[list] = None,
               include_onehot: bool = False, ktile: int = 128,
-              allow_bf16: bool = False,
+              allow_bf16: bool = False, revision: int = 0,
               **_ignored) -> str:
     """The on-disk key ``autotune`` files its result under.
 
     Non-default sweeps tune a *different* objective, so their identity is
     folded into the graph half of the key — a restricted sweep's winner
     never masquerades as the full sweep's, and an ``allow_bf16`` run's
-    winner never reaches a default (f32-only) caller. Extra keyword
-    arguments are accepted and ignored so a whole ``autotune``-kwargs dict
-    can be passed through (the serving engine does)."""
+    winner never reaches a default (f32-only) caller. ``revision`` is the
+    streaming repair generation passed through to ``TuningStore.key``.
+    Extra keyword arguments are accepted and ignored so a whole
+    ``autotune``-kwargs dict can be passed through (the serving engine
+    does)."""
     fp_store = fingerprint
     sk = _sweep_key(sweep)
     if sk is not None or include_onehot or ktile != 128 or allow_bf16:
@@ -141,7 +143,8 @@ def store_key(store: TuningStore, fingerprint: str, kdim: int, *,
             repr((sk, include_onehot, ktile, allow_bf16)).encode(),
             digest_size=8).hexdigest()
         fp_store = f"{fingerprint}:{extra}"
-    return store.key(fp_store, kdim, mesh=mesh_descriptor(max_devices))
+    return store.key(fp_store, kdim, mesh=mesh_descriptor(max_devices),
+                     revision=revision)
 
 
 def _bf16_report(a: fmt.COO, best: TunedConfig, b) -> TunedConfig:

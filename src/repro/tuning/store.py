@@ -13,10 +13,18 @@ One ``.npz`` file per entry under ``<root>/v<version>/<key>.npz`` where
 ``~/.cache/repro-awb-gcn/tuning``. The key is a blake2b hash of
 
     (graph fingerprint, probe width kdim, device kind, mesh descriptor,
-     store version, schedule format version)
+     store version, schedule format version, schedule builder version,
+     schedule revision)
 
 — a config tuned on one device kind or mesh never masquerades as another's,
-and format bumps miss cleanly instead of deserializing stale bytes.
+and format *or builder* bumps miss cleanly instead of deserializing stale
+bytes: entries persisted before a repair-logic change would deserialize
+into geometry the new builder no longer produces, so the builder version
+is both folded into the key (old entries become unreachable) and stamped
+into the payload (entries written by other code lineages are dropped to a
+re-tune at load, never returned). ``revision`` distinguishes streaming
+repair generations of one graph (DESIGN.md §11); revision 0 is the cold
+build.
 
 Durability
 ----------
@@ -26,6 +34,7 @@ Reads treat *any* malformed entry (truncated, garbage, inconsistent
 geometry) as a miss: ``load`` returns ``None`` and unlinks the corpse, and
 the caller re-tunes.
 """
+
 from __future__ import annotations
 
 import dataclasses
@@ -39,8 +48,13 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-from repro.core.schedule import (SCHEDULE_FORMAT_VERSION, Schedule,
-                                 schedule_from_arrays, schedule_to_arrays)
+from repro.core.schedule import (
+    SCHEDULE_BUILDER_VERSION,
+    SCHEDULE_FORMAT_VERSION,
+    Schedule,
+    schedule_from_arrays,
+    schedule_to_arrays,
+)
 from repro.tuning.space import TunedConfig
 
 #: bump when the entry layout (not the schedule format) changes.
@@ -85,15 +99,31 @@ class TuningStore:
 
     # ---- keys --------------------------------------------------------------
 
-    def key(self, fingerprint: str, kdim: int, *,
-            device: Optional[str] = None,
-            mesh: Optional[str] = None) -> str:
+    def key(
+        self,
+        fingerprint: str,
+        kdim: int,
+        *,
+        device: Optional[str] = None,
+        mesh: Optional[str] = None,
+        revision: int = 0,
+    ) -> str:
         """Entry key for (graph fingerprint, probe width) on this device/
-        mesh at the current code version."""
+        mesh at the current code version. ``revision`` is the streaming
+        repair generation (0 = cold build): repaired schedules of one
+        fingerprint persist side by side without clobbering the original."""
         ident = json.dumps(
-            [fingerprint, int(kdim), device or device_kind(),
-             mesh or mesh_descriptor(), STORE_VERSION,
-             SCHEDULE_FORMAT_VERSION])
+            [
+                fingerprint,
+                int(kdim),
+                device or device_kind(),
+                mesh or mesh_descriptor(),
+                STORE_VERSION,
+                SCHEDULE_FORMAT_VERSION,
+                SCHEDULE_BUILDER_VERSION,
+                int(revision),
+            ]
+        )
         return hashlib.blake2b(ident.encode(), digest_size=16).hexdigest()
 
     def path(self, key: str) -> Path:
@@ -104,8 +134,8 @@ class TuningStore:
     def save(self, key: str, cfg: TunedConfig, sched: Schedule) -> Path:
         """Atomically persist one converged configuration + its schedule."""
         payload = schedule_to_arrays(sched)
-        payload["config_json"] = np.asarray(
-            json.dumps(dataclasses.asdict(cfg)))
+        payload["config_json"] = np.asarray(json.dumps(dataclasses.asdict(cfg)))
+        payload["builder_version"] = np.asarray(SCHEDULE_BUILDER_VERSION, np.int64)
         self.dir.mkdir(parents=True, exist_ok=True)
         dst = self.path(key)
         fd, tmp = tempfile.mkstemp(dir=self.dir, suffix=".tmp")
@@ -133,16 +163,28 @@ class TuningStore:
             return None
         try:
             with np.load(path, allow_pickle=False) as z:
+                # an entry written by a different schedule-builder lineage
+                # (or one predating the stamp) deserializes into geometry
+                # the current builder no longer produces — drop to re-tune
+                bv = int(z["builder_version"]) if "builder_version" in z else -1
+                if bv != SCHEDULE_BUILDER_VERSION:
+                    raise ValueError(
+                        f"builder version {bv} != {SCHEDULE_BUILDER_VERSION}"
+                    )
                 cfg_d = json.loads(str(z["config_json"]))
                 cfg = TunedConfig(**cfg_d)
                 sched = schedule_from_arrays(z)
         except OSError as e:
-            warnings.warn(f"tuning store: unreadable entry {path.name} "
-                          f"(kept): {type(e).__name__}: {e}")
+            warnings.warn(
+                f"tuning store: unreadable entry {path.name} "
+                f"(kept): {type(e).__name__}: {e}"
+            )
             return None
         except Exception as e:  # malformed entry → drop + re-tune
-            warnings.warn(f"tuning store: dropping corrupted entry "
-                          f"{path.name}: {type(e).__name__}: {e}")
+            warnings.warn(
+                f"tuning store: dropping corrupted entry "
+                f"{path.name}: {type(e).__name__}: {e}"
+            )
             try:
                 path.unlink()
             except OSError:
