@@ -51,7 +51,18 @@ never on timer noise:
   being incremental);
 * **streaming zero-gap swap** -- the ``streaming/zero_gap`` row must
   carry ``gap=0``: no concurrent request may ever observe a missing or
-  half-swapped executor during an update (hard correctness gate).
+  half-swapped executor during an update (hard correctness gate);
+* **reorder bit-identity + winner floor** -- every
+  ``reorder/*/{degree,island}`` row must carry ``bit_identical=1`` (the
+  executor un-permutes outputs, so a reordered run must match identity
+  order bit-for-bit -- hard correctness gate), and every
+  ``reorder/*/sweep`` row's ``speedup_vs_none`` must stay above
+  ``1 / tolerance`` (the sweep adopting a permutation that measures
+  slower than identity means the accept-or-reject margin broke). When
+  the reference JSON carries sweep rows, it must also show **both**
+  verdicts (``accepted=1`` and ``accepted=0`` across its graphs) --
+  a reorder axis that always accepts or always rejects at full scale
+  is not discriminating and the trajectory is degenerate.
 
 Every ratio check guards its denominator: a degenerate zero measurement
 (e.g. an open-loop smoke that served zero in-SLA requests) reports a
@@ -75,6 +86,10 @@ _SPEEDUP_RE = re.compile(r"speedup=([0-9.]+)x")
 _WARM_RE = re.compile(r"serving/(\w+)/warm_start")
 _COUNT_RE = re.compile(r"(submitted|served|shed|rejected)=(\d+)")
 _GAP_RE = re.compile(r"gap=(\d+)")
+_VS_NONE_RE = re.compile(r"speedup_vs_none=([0-9.]+)x")
+_ACCEPT_RE = re.compile(r"accepted=([01])")
+_REORDER_STRAT_RE = re.compile(r"reorder/[\w]+/(degree|island)")
+_REORDER_SWEEP_RE = re.compile(r"reorder/[\w]+/sweep")
 
 _MESH_ROW = "serving/mesh8/mesh_throughput"
 _SINGLE_ROW = "serving/batched_throughput"
@@ -91,6 +106,7 @@ _NO_REPLICA = f"MISSING: no {_REPLICA_ROW} row in the smoke JSON"
 _NO_OPENLOOP = "MISSING: no openloop/steady/* rows in the smoke JSON"
 _NO_STREAM = f"MISSING: no {_STREAM_ROW} row in the smoke JSON"
 _NO_GAP = f"MISSING: no {_GAP_ROW} row in the smoke JSON"
+_NO_REORDER = "MISSING: no reorder/*/sweep rows in the smoke JSON"
 _GATE_BLIND = " -- the suite did not run; the gate cannot vouch for the PR"
 _NOT_SMOKE = "MISMATCH: --smoke JSON was not produced by run.py --smoke"
 _REF_SMOKE = "MISMATCH: the reference JSON is itself a smoke run"
@@ -292,6 +308,46 @@ def check(smoke: dict, reference: dict, tolerance: float) -> list:
             why = "a concurrent request observed a half-swapped executor"
             msg = f"{_GAP_ROW} reported {got} -- {why}"
             problems.append(f"CORRECTNESS: {msg}")
+
+    # 11. reorder axis: bit-identity on every measured strategy row (hard
+    #     correctness gate -- the executor un-permutes its outputs), a
+    #     winner floor on every sweep row (an adopted permutation must not
+    #     measure slower than identity beyond tolerance), and verdict
+    #     diversity in the full-scale reference trajectory
+    for name in sorted(s_rows):
+        if not _REORDER_STRAT_RE.fullmatch(name):
+            continue
+        if "bit_identical=1" not in s_rows[name].get("derived", ""):
+            why = "un-permuted outputs no longer match identity order"
+            msg = f"{name} lacks bit_identical=1 -- {why}"
+            problems.append(f"CORRECTNESS: {msg}")
+    sweep_rows = [n for n in sorted(s_rows) if _REORDER_SWEEP_RE.fullmatch(n)]
+    if not sweep_rows:
+        problems.append(_NO_REORDER + _GATE_BLIND)
+    for name in sweep_rows:
+        sp = _VS_NONE_RE.search(s_rows[name].get("derived", ""))
+        floor = 1.0 / tolerance
+        if sp is None:
+            why = "the sweep row carries no speedup_vs_none"
+            problems.append(f"CORRECTNESS: {name} -- {why}")
+        elif float(sp.group(1)) < floor:
+            got = f"{name} winner at {float(sp.group(1)):.2f}x vs identity"
+            ref = f"floor 1/{tolerance:g}"
+            why = "the sweep adopted a permutation that measures slower"
+            msg = f"{got} fell below {floor:.2f}x ({ref}) -- {why}"
+            problems.append(f"REGRESSION: {msg}")
+    r_verdicts = set()
+    for name in sorted(r_rows):
+        if not _REORDER_SWEEP_RE.fullmatch(name):
+            continue
+        acc = _ACCEPT_RE.search(r_rows[name].get("derived", ""))
+        if acc:
+            r_verdicts.add(acc.group(1))
+    if r_verdicts and r_verdicts != {"0", "1"}:
+        got = "always accepts" if r_verdicts == {"1"} else "always rejects"
+        why = "the accept-or-reject axis is not discriminating at scale"
+        msg = f"reference reorder sweep {got} across its graphs -- {why}"
+        problems.append(f"DEGENERATE: {msg}")
     return problems
 
 

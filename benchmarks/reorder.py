@@ -1,0 +1,154 @@
+"""Locality row-remapping (islandization) SpMM latency.
+
+Measures power-law graphs under the three points of the tuner's
+``reorder`` axis — identity order, degree sort, BFS islandization — at a
+fixed schedule geometry, plus the tuner's own verdict when the reorder
+twins compete on measured wall-clock. Two datasets bracket the axis:
+
+* ``powerlaw2000`` (natural order, 512 nnz / 128-row windows): BFS
+  islandization packs the hub rows into fewer first-fit windows, so the
+  schedule genuinely shrinks (fewer sequential steps) and the sweep
+  should *accept* it.
+* ``powerlaw3000shuf`` (randomly relabeled twin, 256/64): the relabeling
+  leaves nothing for remapping to recover — step counts come out equal,
+  the un-permute epilogue is pure overhead, and the sweep should
+  *reject* both strategies.
+
+Rows:
+
+    reorder/<graph>/<strategy>  us_per_call
+        speedup_vs_none=..x;bit_identical=..;steps=..;locality=..
+    reorder/<graph>/sweep       us_per_call   winner=..;accepted=..;...
+
+``bit_identical`` is a hard correctness gate downstream
+(``check_regression``): the executor un-permutes outputs, so a reordered
+run must match the identity run bit-for-bit, not merely closely.
+
+Timing is interleaved min-of-rounds: every strategy's executor is built
+and warmed first, then the strategies are re-timed round-robin and each
+keeps its minimum. Sequential one-shot timing lets slow process-level
+drift masquerade as a several-percent strategy difference, which is the
+size of the real effect being measured.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SMOKE
+
+#: per-dataset (graph generator kwargs, schedule geometry, shuffle flag);
+#: geometries are the grid-validated points where the step-count effect
+#: (the honest win on this backend) is largest / provably absent
+DATASETS = (
+    ("powerlaw600", dict(n=600, density=0.02, alpha=1.1, seed=2),
+     dict(nnz_per_step=128, rows_per_window=32), False),
+    ("powerlaw600shuf", dict(n=600, density=0.02, alpha=1.1, seed=2),
+     dict(nnz_per_step=128, rows_per_window=32), True),
+) if SMOKE else (
+    ("powerlaw2000", dict(n=2000, density=0.01, alpha=1.1, seed=2),
+     dict(nnz_per_step=512, rows_per_window=128), False),
+    ("powerlaw3000shuf", dict(n=3000, density=0.004, alpha=0.9, seed=0),
+     dict(nnz_per_step=256, rows_per_window=64), True),
+)
+BENCH_KDIM = 64
+ITERS, WARMUP = (3, 1) if SMOKE else (10, 3)
+#: interleaved timing rounds; smoke graphs are tiny so extra rounds are
+#: nearly free, and the min needs enough visits to shed scheduler noise
+ROUNDS = 6 if SMOKE else 10
+STRATEGIES = ("none", "degree", "island")
+
+
+def _shuffled(a, seed=1):
+    """Randomly relabel vertices (rows AND columns): an isomorphic graph
+    with the generator's incidental locality destroyed."""
+    from repro.core import csc as fmt
+
+    m, n = a.shape
+    sigma = np.random.default_rng(seed).permutation(m).astype(np.int64)
+    row = np.asarray(a.row)
+    keep = row != fmt.PAD_IDX
+    return fmt.coo_from_arrays(sigma[row[keep]],
+                               sigma[np.asarray(a.col)[keep]],
+                               np.asarray(a.val)[keep], a.shape)
+
+
+def _measure(name: str, a, b, geom: dict) -> list:
+    import time
+
+    from repro.core import reorder as ro
+    from repro.tuning import registry, runner
+
+    # build + warm every strategy's executor before timing any of them
+    exs, scheds = {}, {}
+    for strat in STRATEGIES:
+        exs[strat] = registry.get_executor(a, reorder=strat, **geom)
+        scheds[strat] = registry.get_schedule(a, reorder=strat, **geom)
+        for _ in range(WARMUP):
+            exs[strat].spmm(b).block_until_ready()
+
+    # interleaved rounds, min per strategy; the order rotates per round —
+    # whichever strategy runs first after a round boundary measures
+    # systematically differently, and a fixed order bakes that position
+    # bias into the comparison
+    us = {s: float("inf") for s in STRATEGIES}
+    for r in range(ROUNDS):
+        k = r % len(STRATEGIES)
+        for strat in STRATEGIES[k:] + STRATEGIES[:k]:
+            t0 = time.perf_counter()
+            for _ in range(ITERS):
+                out = exs[strat].spmm(b)
+            out.block_until_ready()
+            us[strat] = min(us[strat],
+                            (time.perf_counter() - t0) / ITERS * 1e6)
+
+    rows = []
+    ref = np.asarray(exs["none"].spmm(b))
+    for strat in STRATEGIES:
+        steps = scheds[strat].n_steps
+        loc = ro.schedule_locality(scheds[strat])
+        if strat == "none":
+            derived = (f"nnz={np.asarray(a.row).shape[0]};steps={steps};"
+                       f"locality={loc:.3f}")
+        else:
+            bit = int(np.array_equal(np.asarray(exs[strat].spmm(b)), ref))
+            derived = (f"speedup_vs_none={us['none'] / us[strat]:.2f}x;"
+                       f"bit_identical={bit};steps={steps};"
+                       f"locality={loc:.3f}")
+        print(f"  {strat:7s} {us[strat]:9.1f} us/spmm  {derived}")
+        rows.append((f"reorder/{name}/{strat}", us[strat], derived))
+
+    # the tuner's verdict: reorder twins compete on measured wall-clock
+    # (autotune itself times in interleaved min-of-rounds)
+    base = dict(cols_per_block=None, window_nnz=None, routing=None,
+                ktile=128, **geom)
+    sweep = [dict(base)] + [dict(base, reorder=s)
+                            for s in ("degree", "island")]
+    cfg = runner.autotune(a, (a.shape[0], BENCH_KDIM), sweep=sweep,
+                          iters=ITERS, warmup=WARMUP, rounds=ROUNDS,
+                          bf16_report=False)
+    accepted = int(cfg.reorder != "none")
+    derived = (f"winner={cfg.reorder};accepted={accepted};"
+               f"speedup_vs_none={us['none'] / us[cfg.reorder]:.2f}x")
+    print(f"  sweep   {us[cfg.reorder]:9.1f} us/spmm  {derived}")
+    rows.append((f"reorder/{name}/sweep", us[cfg.reorder], derived))
+    return rows
+
+
+def run() -> list:
+    import jax.numpy as jnp
+
+    from repro.graphs import synth
+
+    rows = []
+    for name, gkw, geom, shuffle in DATASETS:
+        a = synth.power_law_adjacency(gkw["n"], gkw["density"], gkw["alpha"],
+                                      seed=gkw["seed"])
+        if shuffle:
+            a = _shuffled(a)
+        rng = np.random.default_rng(0)
+        b = jnp.asarray(
+            rng.standard_normal((gkw["n"], BENCH_KDIM)).astype(np.float32))
+        print(f"\n== reorder ({name}, kdim={BENCH_KDIM}, geometry "
+              f"{geom['nnz_per_step']}/{geom['rows_per_window']}) ==")
+        rows.extend(_measure(name, a, b, geom))
+    return rows

@@ -35,7 +35,7 @@ def main() -> None:
         print("[smoke] tiny synthetic preset active")
 
     from benchmarks import (convergence, latency, moe_imbalance, openloop,
-                            order_ops, roofline_table, scaling,
+                            order_ops, reorder, roofline_table, scaling,
                             schedule_tuning, schedule_util, serving,
                             sharded_spmm, streaming, utilization)
 
@@ -48,6 +48,7 @@ def main() -> None:
         "schedule_util": schedule_util.run,            # TPU Fig-14 analogue
         "schedule_tuning": schedule_tuning.run,        # kernel-param sweep
         "sharded_spmm": sharded_spmm.run,              # multi-device executor
+        "reorder": reorder.run,                        # islandization axis
         "serving": serving.run,                        # store + batching
         "openloop": openloop.run,                      # overload/admission
         "streaming": streaming.run,                    # incremental repair
@@ -84,7 +85,8 @@ def main() -> None:
         # engine's cold/warm-start numbers as their own sections, so the
         # perf trajectory across PRs tracks device scaling and store-hit
         # latency separately from the single-device rows
-        for section in ("sharded_spmm", "serving", "openloop", "streaming"):
+        for section in ("sharded_spmm", "reorder", "serving", "openloop",
+                        "streaming"):
             sub = [r for r in payload["rows"]
                    if r["name"].startswith(f"{section}/")]
             if sub:

@@ -13,6 +13,7 @@ Conventions
   padded SpMM contributes nothing (guarded gathers clamp the index).
 * Shapes are static: ``nnz`` is the *padded* nnz capacity.
 """
+
 from __future__ import annotations
 
 from typing import NamedTuple, Tuple
@@ -73,6 +74,7 @@ class ELL(NamedTuple):
 # Construction from dense / scipy-style triplets (host-side, numpy)
 # ---------------------------------------------------------------------------
 
+
 def coo_from_dense(a: np.ndarray) -> COO:
     r, c = np.nonzero(a)
     order = np.lexsort((c, r))
@@ -85,8 +87,9 @@ def coo_from_dense(a: np.ndarray) -> COO:
     )
 
 
-def coo_from_arrays(row: np.ndarray, col: np.ndarray, val: np.ndarray,
-                    shape: Tuple[int, int]) -> COO:
+def coo_from_arrays(
+    row: np.ndarray, col: np.ndarray, val: np.ndarray, shape: Tuple[int, int]
+) -> COO:
     order = np.lexsort((col, row))
     return COO(
         jnp.asarray(row[order], jnp.int32),
@@ -182,8 +185,7 @@ def apply_edge_delta(a: COO, delta: EdgeDelta, *, with_report: bool = False):
         upd = ins
         val2 = val.copy()
         val2[bpos[upd]] = dval[upd]
-        out = COO(np.asarray(row, np.int32), np.asarray(col, np.int32),
-                  val2, a.shape)
+        out = COO(np.asarray(row, np.int32), np.asarray(col, np.int32), val2, a.shape)
         if not with_report:
             return out
         report = DeltaReport(
@@ -224,8 +226,40 @@ def transpose_coo(a: COO) -> COO:
     col = np.asarray(a.row)
     val = np.asarray(a.val)
     keep = np.asarray(a.row) != PAD_IDX
-    return coo_from_arrays(row[keep], col[keep], val[keep],
-                           (a.shape[1], a.shape[0]))
+    return coo_from_arrays(row[keep], col[keep], val[keep], (a.shape[1], a.shape[0]))
+
+
+def permute_coo(a: COO, perm: np.ndarray) -> COO:
+    """``P·A`` as a fresh row-major-sorted host (numpy-backed) COO: row
+    ``i`` of the result is row ``perm[i]`` of ``a`` (``perm[new] = old``,
+    the ``core.reorder`` convention; padding entries are dropped).
+
+    Only rows move — columns are untouched, so the dense operand of an
+    SpMM against the result needs no reordering; output rows come back
+    permuted and are un-permuted with the inverse permutation at the
+    executor boundary."""
+    m, _ = a.shape
+    perm = np.asarray(perm, np.int64)
+    if perm.shape[0] != m:
+        raise ValueError(f"permutation has {perm.shape[0]} entries; A has {m} rows")
+    inv = np.full(m, -1, np.int64)
+    inv[perm] = np.arange(m, dtype=np.int64)
+    if (inv < 0).any():
+        raise ValueError("not a permutation: duplicate/missing indices")
+    row = np.asarray(a.row)
+    col = np.asarray(a.col)
+    val = np.asarray(a.val)
+    keep = row != PAD_IDX
+    if not keep.all():
+        row, col, val = row[keep], col[keep], val[keep]
+    return coo_from_arrays(inv[row.astype(np.int64)], col, val, a.shape)
+
+
+def permute_csc(a: CSC, perm: np.ndarray) -> CSC:
+    """``P·A`` in CSC: row ids remapped through the permutation and
+    re-sorted within each column (same ``perm[new] = old`` convention as
+    ``permute_coo``)."""
+    return csc_from_coo(permute_coo(csc_to_coo(a), perm))
 
 
 def _ptr_from_sorted(ids: np.ndarray, dim: int) -> np.ndarray:
@@ -284,6 +318,7 @@ def ell_from_dense(a: np.ndarray, width: int | None = None) -> ELL:
 # Conversions back to dense (jit-able; used by oracles/tests)
 # ---------------------------------------------------------------------------
 
+
 def coo_to_dense(a: COO) -> jax.Array:
     m, n = a.shape
     valid = a.row != PAD_IDX
@@ -329,6 +364,7 @@ def ell_to_dense(a: ELL) -> jax.Array:
 # ---------------------------------------------------------------------------
 # Padding (static-shape friendliness for jit / pallas)
 # ---------------------------------------------------------------------------
+
 
 def pad_coo(a: COO, capacity: int) -> COO:
     """Pad nnz up to `capacity` with inert entries."""

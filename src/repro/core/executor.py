@@ -383,17 +383,27 @@ class ScheduleExecutor(_ExecutorBase):
     committed there by ``spmm``/``forward``) to one device of a mesh; the
     serving tier's ``MeshPlacer`` hands each graph such a handle. ``None``
     keeps jax's default placement.
+
+    ``row_unperm`` supports locality-reordered schedules (core.reorder):
+    when ``sched`` was built on a row-permuted graph, pass the inverse
+    permutation (``inv[old_row] = new_row``) and every ``spmm``/``forward``
+    output comes back in **original** row order — one fused gather per
+    call, bit-identical to executing the unpermuted schedule.
     """
 
     def __init__(self, sched: Schedule, *, ktile: int = 128,
                  routing: Optional[str] = None,
                  bf16_accumulate: bool = False,
                  slot_chunk: int = 1 << 18,
-                 device=None):
+                 device=None, row_unperm=None):
         self.sched = sched
         self.ktile = ktile
         self.bf16_accumulate = bf16_accumulate
         self.device = device
+        self.row_unperm = (None if row_unperm is None
+                           else np.asarray(row_unperm, np.int32))
+        self._unperm = (None if self.row_unperm is None
+                        else _placed(self.row_unperm, device))
         self._slot_chunk_arg = slot_chunk
         k = sched.nnz_per_step
         r = sched.rows_per_window
@@ -434,6 +444,8 @@ class ScheduleExecutor(_ExecutorBase):
             self._steps = device_step_arrays(sched, device)
             self.device_bytes = int(sum(v.nbytes
                                         for v in self._steps.values()))
+        if self._unperm is not None:
+            self.device_bytes += int(self._unperm.nbytes)
 
         self._spmm_impl = (self._gather_impl if self.routing == GATHER
                            else self._onehot_impl)
@@ -463,7 +475,8 @@ class ScheduleExecutor(_ExecutorBase):
             return cls(new_sched, ktile=old_ex.ktile, routing=old_ex.routing,
                        bf16_accumulate=old_ex.bf16_accumulate,
                        slot_chunk=old_ex._slot_chunk_arg,
-                       device=old_ex.device)
+                       device=old_ex.device,
+                       row_unperm=old_ex.row_unperm)
         self = cls.__new__(cls)
         self.sched = new_sched
         self.ktile = old_ex.ktile
@@ -471,6 +484,8 @@ class ScheduleExecutor(_ExecutorBase):
         self.device = old_ex.device
         self.routing = GATHER
         self._slot_chunk_arg = old_ex._slot_chunk_arg
+        self.row_unperm = old_ex.row_unperm
+        self._unperm = old_ex._unperm
 
         k = new_sched.nnz_per_step
         gcol, tgt, val, moved = _spliced_host_slots(
@@ -531,6 +546,8 @@ class ScheduleExecutor(_ExecutorBase):
             self.scoped_upload = False
         self.device_bytes = int(self._gcol.nbytes + self._tgt.nbytes
                                 + self._val.nbytes)
+        if self._unperm is not None:
+            self.device_bytes += int(self._unperm.nbytes)
         self._spmm_impl = self._gather_impl
         self._spmm = jax.jit(self._spmm_impl)
         self._forward = jax.jit(self._forward_impl)
@@ -553,7 +570,8 @@ class ScheduleExecutor(_ExecutorBase):
             return cls(new_sched, ktile=old_ex.ktile, routing=old_ex.routing,
                        bf16_accumulate=old_ex.bf16_accumulate,
                        slot_chunk=old_ex._slot_chunk_arg,
-                       device=old_ex.device)
+                       device=old_ex.device,
+                       row_unperm=old_ex.row_unperm)
         self = cls.__new__(cls)
         self.sched = new_sched
         self.ktile = old_ex.ktile
@@ -563,6 +581,8 @@ class ScheduleExecutor(_ExecutorBase):
         self._slot_chunk_arg = old_ex._slot_chunk_arg
         self._slot_chunk = old_ex._slot_chunk
         self._n_chunks = old_ex._n_chunks
+        self.row_unperm = old_ex.row_unperm
+        self._unperm = old_ex._unperm
 
         gcol, tgt, oval = old_ex._host
         val = oval.copy()
@@ -612,6 +632,8 @@ class ScheduleExecutor(_ExecutorBase):
                      * self._val[i].astype(acc)[:, None])
                 return a_.at[self._tgt[i]].add(g)
             out = jax.lax.fori_loop(0, self._n_chunks, body, out)
+        if self._unperm is not None:
+            out = jnp.take(out, self._unperm, axis=0)
         return out.astype(b.dtype)
 
     def _onehot_impl(self, b: jax.Array) -> jax.Array:
@@ -651,6 +673,8 @@ class ScheduleExecutor(_ExecutorBase):
                             out_perm.reshape(-1, kdim), 0.0)
         out = jnp.zeros((m, kdim), acc).at[
             jnp.where(valid, rm, 0)].add(contrib)
+        if self._unperm is not None:
+            out = jnp.take(out, self._unperm, axis=0)
         return out.astype(b.dtype)
 
 
@@ -678,7 +702,7 @@ class ShardedScheduleExecutor(_ExecutorBase):
                  mesh: Optional[Mesh] = None, ktile: int = 128,
                  routing: Optional[str] = None,
                  bf16_accumulate: bool = False,
-                 slot_chunk: int = 1 << 18):
+                 slot_chunk: int = 1 << 18, row_unperm=None):
         if mesh is None:
             devs = jax.devices()
             if n_devices is None:
@@ -705,6 +729,12 @@ class ShardedScheduleExecutor(_ExecutorBase):
         self.ktile = ktile
         self.bf16_accumulate = bf16_accumulate
         self._slot_chunk_arg = slot_chunk
+        self.row_unperm = (None if row_unperm is None
+                           else np.asarray(row_unperm, np.int32))
+        # replicated — the un-permute runs on the psum-merged output
+        self._unperm = (None if self.row_unperm is None
+                        else jax.device_put(jnp.asarray(self.row_unperm),
+                                            NamedSharding(mesh, P())))
         k = sched.nnz_per_step
         r = sched.rows_per_window
         cb = sched.cols_per_block
@@ -746,6 +776,8 @@ class ShardedScheduleExecutor(_ExecutorBase):
             self._val = stack(val, 0.0)
             self.device_bytes = int(self._gcol.nbytes + self._tgt.nbytes
                                     + self._val.nbytes)
+            if self._unperm is not None:
+                self.device_bytes += int(self._unperm.nbytes)
         else:
             self._steps = {
                 "val": put(shards.val), "lrow": put(shards.lrow),
@@ -757,6 +789,8 @@ class ShardedScheduleExecutor(_ExecutorBase):
             }
             self.device_bytes = int(sum(v.nbytes
                                         for v in self._steps.values()))
+            if self._unperm is not None:
+                self.device_bytes += int(self._unperm.nbytes)
 
         self._spmm_impl = (self._sharded_gather_impl
                            if self.routing == GATHER
@@ -784,7 +818,8 @@ class ShardedScheduleExecutor(_ExecutorBase):
             return cls(new_sched, mesh=old_ex.mesh, ktile=old_ex.ktile,
                        routing=old_ex.routing,
                        bf16_accumulate=old_ex.bf16_accumulate,
-                       slot_chunk=old_ex._slot_chunk_arg)
+                       slot_chunk=old_ex._slot_chunk_arg,
+                       row_unperm=old_ex.row_unperm)
         self = cls.__new__(cls)
         self.mesh = old_ex.mesh
         self.axis = old_ex.axis
@@ -794,6 +829,8 @@ class ShardedScheduleExecutor(_ExecutorBase):
         self.bf16_accumulate = old_ex.bf16_accumulate
         self.routing = GATHER
         self._slot_chunk_arg = old_ex._slot_chunk_arg
+        self.row_unperm = old_ex.row_unperm
+        self._unperm = old_ex._unperm
         # n_steps unchanged ⇒ the deterministic linspace split is identical
         self.step_ranges = old_ex.step_ranges
         self._slot_chunk = old_ex._slot_chunk
@@ -835,6 +872,8 @@ class ShardedScheduleExecutor(_ExecutorBase):
         self.dirty_devices = int(sum(dirty))
         self.device_bytes = int(self._gcol.nbytes + self._tgt.nbytes
                                 + self._val.nbytes)
+        if self._unperm is not None:
+            self.device_bytes += int(self._unperm.nbytes)
         self._spmm_impl = self._sharded_gather_impl
         self._spmm = jax.jit(self._spmm_impl)
         self._forward = jax.jit(self._forward_impl)
@@ -853,7 +892,8 @@ class ShardedScheduleExecutor(_ExecutorBase):
             return cls(new_sched, mesh=old_ex.mesh, ktile=old_ex.ktile,
                        routing=old_ex.routing,
                        bf16_accumulate=old_ex.bf16_accumulate,
-                       slot_chunk=old_ex._slot_chunk_arg)
+                       slot_chunk=old_ex._slot_chunk_arg,
+                       row_unperm=old_ex.row_unperm)
         self = cls.__new__(cls)
         self.mesh = old_ex.mesh
         self.axis = old_ex.axis
@@ -863,6 +903,8 @@ class ShardedScheduleExecutor(_ExecutorBase):
         self.bf16_accumulate = old_ex.bf16_accumulate
         self.routing = GATHER
         self._slot_chunk_arg = old_ex._slot_chunk_arg
+        self.row_unperm = old_ex.row_unperm
+        self._unperm = old_ex._unperm
         self.step_ranges = old_ex.step_ranges
         self._slot_chunk = old_ex._slot_chunk
         self._n_chunks = old_ex._n_chunks
@@ -936,6 +978,8 @@ class ShardedScheduleExecutor(_ExecutorBase):
 
         fn = self._shard_map(body, (P(axis), P(axis), P(axis), P()))
         out = fn(self._gcol, self._tgt, self._val, b.astype(acc))
+        if self._unperm is not None:
+            out = jnp.take(out, self._unperm, axis=0)
         return out.astype(b.dtype)
 
     def _sharded_onehot_impl(self, b: jax.Array) -> jax.Array:
@@ -984,6 +1028,8 @@ class ShardedScheduleExecutor(_ExecutorBase):
         s = self._steps
         out = fn(s["win"], s["cblk"], s["val"], s["lrow"], s["lcol"],
                  s["row_map"], b.astype(acc))
+        if self._unperm is not None:
+            out = jnp.take(out, self._unperm, axis=0)
         return out.astype(b.dtype)
 
 

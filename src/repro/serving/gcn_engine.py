@@ -345,6 +345,32 @@ class _Resident:
     #: the schedule *structure* (a value patch keeps the layout, so the
     #: index survives it)
     slot_cache: Optional[tuple] = None
+    # ---- locality reorder state (core.reorder) ----
+    #: the row permutation ``sched`` was built under (``perm[new] = old``)
+    #: and its inverse; both None for the identity order. Executors built
+    #: from ``sched`` un-permute with ``inv`` so outputs stay in original
+    #: row order.
+    perm: Optional[np.ndarray] = None
+    inv: Optional[np.ndarray] = None
+    #: permuted-row twin of ``coo`` (row ``inv[r]`` holds original row
+    #: ``r``) — the base schedule repair operates on; ``coo`` itself stays
+    #: in original order because content fingerprints and delta lineage
+    #: must not depend on the accepted permutation. None when no reorder.
+    pcoo: Optional[fmt.COO] = None
+
+
+#: ``_swap_in`` sentinel: leave the record's reorder fields untouched
+#: (repairs keep the admission permutation; only a re-tune replaces it).
+_KEEP = object()
+
+
+def _geometry_kwargs(cfg: TunedConfig) -> dict:
+    """``as_schedule_kwargs`` minus the ``reorder`` axis — what
+    ``repair_schedule`` accepts (the repair already runs in the permuted
+    row space; re-stating the permutation would double-apply it)."""
+    kw = cfg.as_schedule_kwargs()
+    kw.pop("reorder", None)
+    return kw
 
 
 def _dedup_value_delta(delta: fmt.EdgeDelta, n: int):
@@ -567,7 +593,10 @@ class GCNServingEngine:
         kw = dict(self._autotune_kwargs)
         base = kw.pop("sweep", None)
         if base is None:
-            kw["sweep"] = space.sharded_sweep(a, (self.n_devices,))
+            # force=True: this route exists because the graph does NOT fit
+            # one device — the perf-elective minimum-work gate
+            # (space.sharded_worth_it) must not empty the sweep here
+            kw["sweep"] = space.sharded_sweep(a, (self.n_devices,), force=True)
         else:
             kw["sweep"] = [dict(c, n_devices=self.n_devices) for c in base]
         return kw
@@ -603,8 +632,13 @@ class GCNServingEngine:
         warm = entry is not None
         if warm:
             self.counters["store_hits"] += 1
-            cfg, sched = entry
+            cfg, sched, perm = entry
             self._check_route(graph_id, cfg, sharded_route, "stored")
+            # the entry's permutation is adopted verbatim — it is the one
+            # the persisted schedule was built under, which a fresh
+            # recompute is not guaranteed to reproduce after repairs
+            registry.adopt_reorder(fp, cfg.reorder, perm)
+            perm, inv = registry.get_reorder(a, cfg.reorder, fingerprint=fp)
             tune_s = 0.0
         else:
             self.counters["store_misses"] += 1
@@ -617,10 +651,12 @@ class GCNServingEngine:
             )
             self._check_route(graph_id, cfg, sharded_route, "tuned")
             sched = registry.get_schedule(a, **cfg.as_schedule_kwargs(), fingerprint=fp)
+            perm, inv = registry.get_reorder(a, cfg.reorder, fingerprint=fp)
             # release the graph from the registry's unbounded caches: the
             # sweep's ~dozen losing candidate executors must not pin device
             # memory, and *this* engine's per-device budgets become the
-            # only thing keeping anything resident
+            # only thing keeping anything resident (perm/inv above are
+            # plain refs — purging the cache does not invalidate them)
             registry.release_graph(fp)
             tune_s = time.perf_counter() - t0
         # host-resident base for streaming updates: PAD-stripped numpy
@@ -642,6 +678,9 @@ class GCNServingEngine:
             per_row=np.bincount(row.astype(np.int64), minlength=a.shape[0]),
             kdim=int(kdim),
             orig_nnz=int(row.shape[0]),
+            perm=perm,
+            inv=inv,
+            pcoo=None if perm is None else fmt.permute_coo(host_coo, perm),
         )
         self._graphs[graph_id] = rec
         placement = self.placer.place(graph_id, est)
@@ -711,7 +750,11 @@ class GCNServingEngine:
         return sum(int(x.nbytes) for x in jax.tree.leaves(params))
 
     def _fresh_executor(
-        self, sched: Schedule, cfg: TunedConfig, device_index: Optional[int]
+        self,
+        sched: Schedule,
+        cfg: TunedConfig,
+        device_index: Optional[int],
+        row_unperm: Optional[np.ndarray] = None,
     ):
         """Cold executor for one serving clone (the re-tune fallback's
         builder — full upload, fresh jit closures)."""
@@ -722,6 +765,7 @@ class GCNServingEngine:
                 ktile=cfg.ktile,
                 routing=cfg.routing,
                 bf16_accumulate=cfg.bf16_accumulate,
+                row_unperm=row_unperm,
             )
         _, handle = self._unit_handle(device_index)
         return ScheduleExecutor(
@@ -730,6 +774,7 @@ class GCNServingEngine:
             routing=cfg.routing,
             bf16_accumulate=cfg.bf16_accumulate,
             device=handle,
+            row_unperm=row_unperm,
         )
 
     def _rebuilt_units(self, rec: _Resident, p: Placement, build):
@@ -775,6 +820,9 @@ class GCNServingEngine:
         config: Optional[TunedConfig] = None,
         reset_drift: bool = False,
         keep_slot_cache: bool = False,
+        pcoo=None,
+        perm=_KEEP,
+        inv=_KEEP,
     ) -> None:
         """Atomically publish a graph's new host state and (when resident)
         its rebuilt executor set — the versioned swap protocol: new
@@ -784,13 +832,22 @@ class GCNServingEngine:
 
         ``fingerprint=None`` defers the content fingerprint: the async
         persist worker fills it in (under this same lock) once computed,
-        provided the revision hasn't moved on by then."""
+        provided the revision hasn't moved on by then.
+
+        ``pcoo`` is the new permuted-row COO twin (None for the identity
+        order); ``perm``/``inv`` default to the ``_KEEP`` sentinel — a
+        repair keeps the admission permutation, only the re-tune path
+        passes a replacement."""
         old_sched = rec.sched
         resident = rec.fwd is not None and units is not None
         with self._swap_lock:
             rec.coo = coo
             rec.per_row = per_row
             rec.sched = sched
+            rec.pcoo = pcoo
+            if perm is not _KEEP:
+                rec.perm = perm
+                rec.inv = inv
             if fingerprint is not None:
                 rec.fingerprint = fingerprint
             if lineage is not None:
@@ -868,6 +925,29 @@ class GCNServingEngine:
         lineage = registry.delta_fingerprint(rec.lineage, delta, rec.revision + 1)
         if drift > self.repair_drift_threshold:
             return self._retune_updated(rec, new_coo, per_row, drift, lineage, t0)
+        # a reordered graph repairs on its *permuted* side: the delta's
+        # rows compose with the admission permutation (``inv[old] = new``),
+        # the permuted COO twin absorbs it, and the repair sees the same
+        # row space the schedule was built in. Content fingerprint and
+        # lineage above stay on the original-order COO — they must not
+        # depend on which permutation the sweep happened to accept.
+        if rec.perm is not None:
+            pdelta = fmt.EdgeDelta(
+                rec.inv[np.asarray(delta.row, np.int64)],
+                np.asarray(delta.col),
+                np.asarray(delta.val),
+            )
+            new_pcoo, preport = fmt.apply_edge_delta(
+                rec.pcoo, pdelta, with_report=True
+            )
+            touched = preport.touched_rows
+            per_row_old_s, per_row_new_s = rec.per_row[rec.perm], per_row[rec.perm]
+            repair_base = new_pcoo
+        else:
+            new_pcoo = None
+            touched = report.touched_rows
+            per_row_old_s, per_row_new_s = rec.per_row, per_row
+            repair_base = new_coo
         patched = None
         if report.n_added == 0 and report.n_removed == 0:
             # pure value update: structure (hence slot layout) unchanged —
@@ -875,6 +955,8 @@ class GCNServingEngine:
             if rec.slot_cache is None:
                 rec.slot_cache = slot_entry_keys(rec.sched)
             rows, cols, vals = _dedup_value_delta(delta, rec.coo.shape[1])
+            if rec.perm is not None:
+                rows = rec.inv[rows]
             patched = value_patch_schedule(rec.sched, rec.slot_cache, rows, cols, vals)
         if patched is not None:
             new_sched, slots = patched
@@ -896,6 +978,7 @@ class GCNServingEngine:
                 fingerprint=None,
                 lineage=lineage,
                 keep_slot_cache=True,
+                pcoo=new_pcoo,
             )
             self._enqueue_persist(rec, new_coo, rec.config, new_sched)
             scoped = (
@@ -921,11 +1004,11 @@ class GCNServingEngine:
         new_sched, stats = repair_schedule(
             rec.sched,
             None,
-            new_coo,
-            report.touched_rows,
-            per_row_old=rec.per_row,
-            per_row_new=per_row,
-            **rec.config.as_schedule_kwargs(),
+            repair_base,
+            touched,
+            per_row_old=per_row_old_s,
+            per_row_new=per_row_new_s,
+            **_geometry_kwargs(rec.config),
         )
         units = None
         if rec.fwd is not None:
@@ -942,6 +1025,7 @@ class GCNServingEngine:
             sched=new_sched,
             fingerprint=None,
             lineage=lineage,
+            pcoo=new_pcoo,
         )
         self._enqueue_persist(rec, new_coo, rec.config, new_sched)
         scoped = (
@@ -965,7 +1049,13 @@ class GCNServingEngine:
         )
 
     def _persist_entry(
-        self, rec: _Resident, coo, fingerprint: str, cfg: TunedConfig, sched: Schedule
+        self,
+        rec: _Resident,
+        coo,
+        fingerprint: str,
+        cfg: TunedConfig,
+        sched: Schedule,
+        perm: Optional[np.ndarray],
     ) -> None:
         """File one schedule under the mutated graph's content
         fingerprint (revision 0 — the key a fresh ``add_graph`` of this
@@ -982,7 +1072,7 @@ class GCNServingEngine:
         key = runner.store_key(
             self.store, fingerprint, rec.kdim, max_devices=max_devices, **tune_kw
         )
-        self.store.save(key, cfg, sched)
+        self.store.save(key, cfg, sched, perm)
 
     def _enqueue_persist(
         self, rec: _Resident, coo, cfg: TunedConfig, sched: Schedule
@@ -991,8 +1081,10 @@ class GCNServingEngine:
         revision for the background worker — both are O(nnz), everything
         the update hot path still does is O(|delta|). The worker also
         back-fills ``rec.fingerprint`` (under the swap lock) unless a
-        later revision swapped in first."""
-        self._persist_q.put((rec, coo, cfg, sched, rec.revision))
+        later revision swapped in first. The permutation is snapshotted
+        here — a later re-tune may replace ``rec.perm`` before the worker
+        runs, and the persisted schedule belongs with *this* one."""
+        self._persist_q.put((rec, coo, cfg, sched, rec.perm, rec.revision))
         if self._persist_thread is None:
             with self._persist_spawn_lock:
                 if self._persist_thread is None:
@@ -1011,14 +1103,14 @@ class GCNServingEngine:
                         self._persist_thread = None
                         return
                 continue
-            rec, coo, cfg, sched, revision = task
+            rec, coo, cfg, sched, perm, revision = task
             try:
                 if rec.revision != revision:
                     # superseded: a later update already swapped in and
                     # queued its own persist — skip the stale snapshot
                     continue
                 fp2 = registry.graph_fingerprint(coo)
-                self._persist_entry(rec, coo, fp2, cfg, sched)
+                self._persist_entry(rec, coo, fp2, cfg, sched, perm)
                 with self._swap_lock:
                     if rec.revision == revision:
                         rec.fingerprint = fp2
@@ -1064,8 +1156,12 @@ class GCNServingEngine:
         entry = self.store.load(key)
         if entry is not None:
             self.counters["store_hits"] += 1
-            cfg, sched = entry
+            cfg, sched, perm2 = entry
             self._check_route(gid, cfg, sharded, "stored")
+            registry.adopt_reorder(fp2, cfg.reorder, perm2)
+            perm2, inv2 = registry.get_reorder(
+                new_coo, cfg.reorder, fingerprint=fp2
+            )
         else:
             self.counters["store_misses"] += 1
             cfg = runner.autotune(
@@ -1079,11 +1175,16 @@ class GCNServingEngine:
             sched = registry.get_schedule(
                 new_coo, **cfg.as_schedule_kwargs(), fingerprint=fp2
             )
+            perm2, inv2 = registry.get_reorder(
+                new_coo, cfg.reorder, fingerprint=fp2
+            )
             registry.release_graph(fp2)
         units = None
         if rec.fwd is not None:
             units = self._rebuilt_units(
-                rec, p, lambda _old, d: self._fresh_executor(sched, cfg, d)
+                rec,
+                p,
+                lambda _old, d: self._fresh_executor(sched, cfg, d, inv2),
             )
         self._swap_in(
             rec,
@@ -1095,6 +1196,9 @@ class GCNServingEngine:
             lineage=fp2,
             config=cfg,
             reset_drift=True,
+            pcoo=None if perm2 is None else fmt.permute_coo(new_coo, perm2),
+            perm=perm2,
+            inv=inv2,
         )
         return UpdateReport(
             graph_id=gid,
@@ -1132,6 +1236,7 @@ class GCNServingEngine:
             routing=cfg.routing,
             bf16_accumulate=cfg.bf16_accumulate,
             device=handle,
+            row_unperm=rec.inv,
         )
         if handle is None:
             params = jax.tree.map(jnp.asarray, rec.params_host)
@@ -1157,6 +1262,7 @@ class GCNServingEngine:
                     ktile=cfg.ktile,
                     routing=cfg.routing,
                     bf16_accumulate=cfg.bf16_accumulate,
+                    row_unperm=rec.inv,
                 )
                 rec.params = jax.tree.map(jnp.asarray, rec.params_host)
                 rec.executor = ex

@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.core import csc as fmt
 from repro.core import executor as _exe
+from repro.core import reorder as _reorder
 from repro.core import schedule as _schedule
 from repro.core.executor import (ScheduleExecutor, ShardedScheduleExecutor,
                                  _ExecutorBase, select_routing)
@@ -113,6 +114,7 @@ def device_fingerprint(device) -> Optional[tuple]:
 
 _SCHEDULE_CACHE: dict = {}
 _EXECUTOR_CACHE: dict = {}
+_REORDER_CACHE: dict = {}
 _EXEC_BY_SCHEDULE: "OrderedDict[tuple, _ExecutorBase]" = OrderedDict()
 _EXEC_BY_SCHEDULE_CAP = 32
 
@@ -124,15 +126,47 @@ def clear_caches() -> None:
 
     _SCHEDULE_CACHE.clear()
     _EXECUTOR_CACHE.clear()
+    _REORDER_CACHE.clear()
     _EXEC_BY_SCHEDULE.clear()
     _exe._DEVICE_STEPS.clear()
     runner._AUTOTUNE_CACHE.clear()
 
 
 def _sched_key(fp: str, nnz_per_step, rows_per_window, cols_per_block,
-               window_nnz, balanced):
+               window_nnz, balanced, reorder="none"):
     return (fp, nnz_per_step, rows_per_window, str(cols_per_block),
-            window_nnz, balanced)
+            window_nnz, balanced, reorder)
+
+
+def get_reorder(a: fmt.COO, strategy: str,
+                fingerprint: Optional[str] = None):
+    """Fingerprint-cached ``(perm, inv)`` for one reorder strategy
+    (``core.reorder``) — the permutation is a pure function of graph
+    content, so every schedule/executor variant of a graph shares one
+    computation. ``(None, None)`` for ``"none"``."""
+    if strategy == _reorder.REORDER_NONE:
+        return None, None
+    fp = fingerprint or graph_fingerprint(a)
+    key = (fp, strategy)
+    pair = _REORDER_CACHE.get(key)
+    if pair is None:
+        pair = _reorder.permutation(a, strategy)
+        _REORDER_CACHE[key] = pair
+    return pair
+
+
+def adopt_reorder(fingerprint: str, strategy: str,
+                  perm: np.ndarray) -> None:
+    """Seed the reorder cache with a store entry's persisted permutation,
+    so the adopted schedule and the executor's un-permute stay consistent
+    even when a fresh recompute would order ties differently (a repaired
+    permutation persisted by serving is one such case — any valid
+    permutation consistent with the adopted schedule is correct)."""
+    if strategy == _reorder.REORDER_NONE or perm is None:
+        return
+    inv = _reorder.invert_permutation(perm)
+    _REORDER_CACHE.setdefault(
+        (fingerprint, strategy), (np.asarray(perm, np.int32), inv))
 
 
 def release_graph(fingerprint: str) -> None:
@@ -150,20 +184,30 @@ def release_graph(fingerprint: str) -> None:
         _exe.release_device_steps(_SCHEDULE_CACHE.pop(key))
     for key in [k for k in _EXECUTOR_CACHE if k[0][0] == fingerprint]:
         del _EXECUTOR_CACHE[key]
+    for key in [k for k in _REORDER_CACHE if k[0] == fingerprint]:
+        del _REORDER_CACHE[key]
 
 
 def get_schedule(a: fmt.COO, *, nnz_per_step: int = 256,
                  rows_per_window: int = 64,
                  cols_per_block=None, window_nnz: Optional[int] = None,
-                 balanced: bool = True,
+                 balanced: bool = True, reorder: str = "none",
                  fingerprint: Optional[str] = None) -> Schedule:
     """Fingerprint-cached schedule build — the 'reuse the converged
-    configuration' entry point."""
+    configuration' entry point.
+
+    ``reorder`` selects a locality row remapping (``core.reorder``): the
+    schedule is built on the row-permuted graph, and the matching executor
+    (``get_executor`` with the same ``reorder``) un-permutes outputs so
+    callers see original row order."""
     fp = fingerprint or graph_fingerprint(a)
     key = _sched_key(fp, nnz_per_step, rows_per_window, cols_per_block,
-                     window_nnz, balanced)
+                     window_nnz, balanced, reorder)
     sched = _SCHEDULE_CACHE.get(key)
     if sched is None:
+        if reorder != _reorder.REORDER_NONE:
+            perm, _ = get_reorder(a, reorder, fingerprint=fp)
+            a = fmt.permute_coo(a, perm)
         if balanced:
             sched = _schedule.build_balanced_schedule(
                 a, nnz_per_step, rows_per_window,
@@ -182,7 +226,8 @@ def adopt_schedule(fingerprint: str, cfg, sched: Schedule) -> None:
     cache hit — **zero** ``build_balanced_schedule`` calls on the
     warm-start path."""
     key = _sched_key(fingerprint, cfg.nnz_per_step, cfg.rows_per_window,
-                     cfg.cols_per_block, cfg.window_nnz, True)
+                     cfg.cols_per_block, cfg.window_nnz, True,
+                     getattr(cfg, "reorder", "none"))
     _SCHEDULE_CACHE.setdefault(key, sched)
 
 
@@ -219,7 +264,8 @@ def get_executor(a: fmt.COO, *, nnz_per_step: int = 256,
                  balanced: bool = True,
                  bf16_accumulate: bool = False,
                  n_devices: Optional[int] = None,
-                 mesh=None, device=None) -> _ExecutorBase:
+                 mesh=None, device=None,
+                 reorder: str = "none") -> _ExecutorBase:
     """Fingerprint-cached executor: the first call converges (builds the
     schedule, uploads it); every later call with the same graph + config is
     a pure cache hit — no rebuild, no host→device transfer.
@@ -233,24 +279,26 @@ def get_executor(a: fmt.COO, *, nnz_per_step: int = 256,
     fp = graph_fingerprint(a)
     mkey, dkey = _placement_key(mesh, n_devices, device)
     key = (_sched_key(fp, nnz_per_step, rows_per_window, cols_per_block,
-                      window_nnz, balanced), ktile, routing, bf16_accumulate,
-           mkey, dkey)
+                      window_nnz, balanced, reorder),
+           ktile, routing, bf16_accumulate, mkey, dkey)
     ex = _EXECUTOR_CACHE.get(key)
     if ex is None:
         sched = get_schedule(a, nnz_per_step=nnz_per_step,
                              rows_per_window=rows_per_window,
                              cols_per_block=cols_per_block,
                              window_nnz=window_nnz, balanced=balanced,
-                             fingerprint=fp)
+                             reorder=reorder, fingerprint=fp)
+        _, inv = get_reorder(a, reorder, fingerprint=fp)
         if mkey is None:
             ex = ScheduleExecutor(sched, ktile=ktile, routing=routing,
                                   bf16_accumulate=bf16_accumulate,
-                                  device=device)
+                                  device=device, row_unperm=inv)
         else:
             ex = ShardedScheduleExecutor(sched, n_devices=n_devices,
                                          mesh=mesh, ktile=ktile,
                                          routing=routing,
-                                         bf16_accumulate=bf16_accumulate)
+                                         bf16_accumulate=bf16_accumulate,
+                                         row_unperm=inv)
         _EXECUTOR_CACHE[key] = ex
     return ex
 

@@ -43,7 +43,10 @@ class TunedConfig:
     multi-device mesh). ``bf16_accumulate`` selects the reduced-precision
     accumulation path; ``bf16_max_err`` reports max |f32 − bf16| of the
     winning geometry on the tuning probe (attached by the runner whether
-    or not the bf16 twin won)."""
+    or not the bf16 twin won). ``reorder`` is the locality row-remapping
+    strategy the sweep accepted (``"none" | "degree" | "island"``,
+    ``core.reorder``); the executor un-permutes outputs so any accepted
+    value is numerically invisible to callers."""
     nnz_per_step: int
     rows_per_window: int
     cols_per_block: Union[int, str, None]
@@ -56,6 +59,7 @@ class TunedConfig:
     n_devices: Optional[int] = None
     bf16_accumulate: bool = False
     bf16_max_err: Optional[float] = None
+    reorder: str = "none"
 
     def as_executor_kwargs(self) -> dict:
         return dict(nnz_per_step=self.nnz_per_step,
@@ -63,7 +67,8 @@ class TunedConfig:
                     cols_per_block=self.cols_per_block,
                     window_nnz=self.window_nnz, ktile=self.ktile,
                     routing=self.routing, n_devices=self.n_devices,
-                    bf16_accumulate=self.bf16_accumulate)
+                    bf16_accumulate=self.bf16_accumulate,
+                    reorder=self.reorder)
 
     def as_schedule_kwargs(self) -> dict:
         """The schedule-geometry subset — what ``get_schedule`` needs to
@@ -71,7 +76,8 @@ class TunedConfig:
         return dict(nnz_per_step=self.nnz_per_step,
                     rows_per_window=self.rows_per_window,
                     cols_per_block=self.cols_per_block,
-                    window_nnz=self.window_nnz)
+                    window_nnz=self.window_nnz,
+                    reorder=self.reorder)
 
 
 def candidate_executor_kwargs(cand: dict,
@@ -85,7 +91,8 @@ def candidate_executor_kwargs(cand: dict,
                 routing=cand["routing"],
                 ktile=cand.get("ktile", default_ktile),
                 bf16_accumulate=cand.get("bf16_accumulate", False),
-                n_devices=cand.get("n_devices"))
+                n_devices=cand.get("n_devices"),
+                reorder=cand.get("reorder", "none"))
 
 
 def density_matched_k(a: fmt.COO, rows_per_window: int,
@@ -106,8 +113,11 @@ def default_sweep(a: fmt.COO, rows_per_window=(32, 64),
     """Single-device candidate points.
 
     Gather-path geometries at a few step granularities × the ktile axis,
-    bf16-accumulate twins of every widest-ktile gather point, plus capped
-    one-hot points whose nnz_per_step is density-matched
+    bf16-accumulate twins of every widest-ktile gather point, locality
+    **reorder** twins (``core.reorder``: degree / island row remapping —
+    the cycle-model pruner drops the ones whose gather locality does not
+    beat the identity order before anything is timed), plus capped one-hot
+    points whose nnz_per_step is density-matched
     (≈ nnz/m · r · cb / n rounded to a lane multiple)."""
     m, n = a.shape
     cand = []
@@ -122,6 +132,11 @@ def default_sweep(a: fmt.COO, rows_per_window=(32, 64),
                                  cols_per_block=None, window_nnz=None,
                                  routing=GATHER, ktile=max(ktiles),
                                  bf16_accumulate=True))
+            for strat in ("degree", "island"):
+                cand.append(dict(nnz_per_step=k, rows_per_window=r,
+                                 cols_per_block=None, window_nnz=None,
+                                 routing=GATHER, ktile=max(ktiles),
+                                 reorder=strat))
     cb = auto_cols_per_block(n)
     if cb < n:
         for r in rows_per_window:
@@ -130,6 +145,31 @@ def default_sweep(a: fmt.COO, rows_per_window=(32, 64),
                              cols_per_block="auto", window_nnz=None,
                              routing=ONEHOT))
     return cand
+
+
+#: minimum-work thresholds below which a sharded candidate cannot win: the
+#: psum of [m, kdim] partials plus per-device dispatch overhead dwarfs the
+#: saved gather work on small graphs (BENCH_spmm.json's
+#: ``sharded_spmm/powerlaw3000`` ran at 0.06–0.23× of single-device at 35K
+#: nnz before this gate existed).
+MIN_SHARDED_NNZ = 200_000
+MIN_SHARDED_STEPS_PER_DEVICE = 64
+
+
+def sharded_worth_it(a: fmt.COO, n_devices: int,
+                     nnz_per_step: int = 256) -> bool:
+    """Whether a sharded candidate at ``n_devices`` clears the minimum-work
+    thresholds for this graph: enough total nnz that the cross-device psum
+    can pay for itself, and enough schedule steps that every device gets a
+    meaningful shard. Perf-elective sharding (the autotune sweep) consults
+    this; *byte-forced* sharding — a graph that simply does not fit one
+    device's budget — must not (and does not)."""
+    row = np.asarray(a.row)
+    nnz = int(np.count_nonzero(row != fmt.PAD_IDX))
+    if nnz < MIN_SHARDED_NNZ:
+        return False
+    steps = -(-nnz // nnz_per_step)
+    return steps >= n_devices * MIN_SHARDED_STEPS_PER_DEVICE
 
 
 def sharded_device_counts(max_devices: Optional[int] = None) -> Tuple[int, ...]:
@@ -149,12 +189,19 @@ def sharded_device_counts(max_devices: Optional[int] = None) -> Tuple[int, ...]:
 
 
 def sharded_sweep(a: fmt.COO, device_counts: tuple,
-                  rows_per_window=(32, 64)) -> list:
+                  rows_per_window=(32, 64), *, force: bool = False) -> list:
     """Sharded-executor candidates: the gather path at each device count
     (one-hot shards identically but is never competitive off-TPU, and on
-    TPU the kernel sweep covers it)."""
+    TPU the kernel sweep covers it).
+
+    Device counts that fail ``sharded_worth_it`` are dropped — a graph
+    that fits one device never even fields a sharded candidate. ``force``
+    skips that gate for byte-forced sharding (the serving engine's
+    over-budget admission route, where single-device is not an option)."""
     cand = []
     for d in device_counts:
+        if not force and not sharded_worth_it(a, d):
+            continue
         for r in rows_per_window:
             cand.append(dict(nnz_per_step=256, rows_per_window=r,
                              cols_per_block=None, window_nnz=None,

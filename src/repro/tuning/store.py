@@ -10,7 +10,10 @@ Layout
 ------
 One ``.npz`` file per entry under ``<root>/v<version>/<key>.npz`` where
 ``root`` is, in priority order: the ``root`` argument, ``$REPRO_TUNING_STORE``,
-``~/.cache/repro-awb-gcn/tuning``. The key is a blake2b hash of
+``~/.cache/repro-awb-gcn/tuning``. Since v2, an entry whose config carries a
+non-``"none"`` ``reorder`` axis also stores the winning **row permutation**
+(``row_perm``), so serving re-applies the locality remapping at admission
+with zero recompute. The key is a blake2b hash of
 
     (graph fingerprint, probe width kdim, device kind, mesh descriptor,
      store version, schedule format version, schedule builder version,
@@ -58,7 +61,8 @@ from repro.core.schedule import (
 from repro.tuning.space import TunedConfig
 
 #: bump when the entry layout (not the schedule format) changes.
-STORE_VERSION = 1
+#: v2: the reorder axis — entries carry the winning row permutation.
+STORE_VERSION = 2
 
 ENV_ROOT = "REPRO_TUNING_STORE"
 
@@ -91,7 +95,7 @@ def mesh_descriptor(max_devices: Optional[int] = None) -> str:
 
 
 class TuningStore:
-    """Filesystem-backed map: store key → (TunedConfig, Schedule)."""
+    """Filesystem-backed map: store key → (TunedConfig, Schedule, perm)."""
 
     def __init__(self, root=None):
         self.root = Path(root) if root is not None else default_root()
@@ -131,11 +135,30 @@ class TuningStore:
 
     # ---- IO ----------------------------------------------------------------
 
-    def save(self, key: str, cfg: TunedConfig, sched: Schedule) -> Path:
-        """Atomically persist one converged configuration + its schedule."""
+    def save(
+        self,
+        key: str,
+        cfg: TunedConfig,
+        sched: Schedule,
+        perm: Optional[np.ndarray] = None,
+    ) -> Path:
+        """Atomically persist one converged configuration + its schedule.
+
+        ``perm`` is the locality row permutation the schedule was built
+        under (``perm[new_row] = old_row``); required exactly when
+        ``cfg.reorder != "none"`` — an entry claiming a reorder with no
+        permutation (or vice versa) cannot be applied at admission."""
+        reorder = getattr(cfg, "reorder", "none")
+        if (perm is not None) != (reorder != "none"):
+            raise ValueError(
+                f"cfg.reorder={reorder!r} but perm is "
+                f"{'present' if perm is not None else 'missing'}"
+            )
         payload = schedule_to_arrays(sched)
         payload["config_json"] = np.asarray(json.dumps(dataclasses.asdict(cfg)))
         payload["builder_version"] = np.asarray(SCHEDULE_BUILDER_VERSION, np.int64)
+        if perm is not None:
+            payload["row_perm"] = np.asarray(perm, np.int32)
         self.dir.mkdir(parents=True, exist_ok=True)
         dst = self.path(key)
         fd, tmp = tempfile.mkstemp(dir=self.dir, suffix=".tmp")
@@ -151,13 +174,22 @@ class TuningStore:
             raise
         return dst
 
-    def load(self, key: str) -> Optional[Tuple[TunedConfig, Schedule]]:
-        """The entry for ``key``, or None. A *malformed* entry (garbage
-        bytes, truncated arrays, inconsistent geometry, unknown config
-        fields) is dropped and reported as a miss — the caller re-tunes
-        instead of crashing. A transient I/O failure (EACCES, a flaky
-        network mount) is also a miss but the entry is **kept**: healthy
-        bytes must not be deleted for a read hiccup."""
+    def load(
+        self, key: str
+    ) -> Optional[Tuple[TunedConfig, Schedule, Optional[np.ndarray]]]:
+        """The entry for ``key`` as ``(cfg, sched, perm)``, or None.
+        ``perm`` is the persisted row permutation (present exactly when
+        ``cfg.reorder != "none"``; validated as a true permutation of the
+        schedule's row count — a truncated or bit-rotted permutation would
+        silently scramble output rows, so it is checked *here*, not at
+        execution). A *malformed* entry (garbage bytes, truncated arrays,
+        inconsistent geometry, unknown config fields, invalid permutation)
+        is dropped and reported as a miss — the caller re-tunes instead of
+        crashing. A transient I/O failure (EACCES, a flaky network mount)
+        is also a miss but the entry is **kept**: healthy bytes must not be
+        deleted for a read hiccup."""
+        from repro.core.reorder import invert_permutation
+
         path = self.path(key)
         if not path.exists():
             return None
@@ -174,6 +206,19 @@ class TuningStore:
                 cfg_d = json.loads(str(z["config_json"]))
                 cfg = TunedConfig(**cfg_d)
                 sched = schedule_from_arrays(z)
+                perm = z["row_perm"] if "row_perm" in z else None
+                if (perm is not None) != (cfg.reorder != "none"):
+                    raise ValueError(
+                        f"reorder={cfg.reorder!r} but row_perm is "
+                        f"{'present' if perm is not None else 'missing'}"
+                    )
+                if perm is not None:
+                    if perm.shape[0] != sched.shape[0]:
+                        raise ValueError(
+                            f"row_perm has {perm.shape[0]} entries for "
+                            f"{sched.shape[0]} rows"
+                        )
+                    invert_permutation(perm)  # raises unless a permutation
         except OSError as e:
             warnings.warn(
                 f"tuning store: unreadable entry {path.name} "
@@ -190,7 +235,7 @@ class TuningStore:
             except OSError:
                 pass
             return None
-        return cfg, sched
+        return cfg, sched, perm
 
     def invalidate(self, key: str) -> None:
         try:

@@ -1,0 +1,73 @@
+"""Property-based coverage of the row-remapping invariants (hypothesis).
+
+Skipped wholesale when hypothesis is not installed — ``tests/test_reorder.py``
+carries example-based twins of every property here, so the invariants stay
+pinned either way."""
+import numpy as np
+import pytest
+
+hyp = pytest.importorskip("hypothesis")
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import csc, reorder  # noqa: E402
+from repro.tuning import registry  # noqa: E402
+
+SETTINGS = settings(max_examples=25, deadline=None)
+
+
+def _random_coo(n, nnz, seed):
+    rng = np.random.default_rng(seed)
+    row = rng.integers(0, n, nnz)
+    col = rng.integers(0, n, nnz)
+    val = (rng.random(nnz) + 0.1).astype(np.float32)
+    return csc.coo_from_arrays(row, col, val, (n, n))
+
+
+def _dense(coo):
+    d = np.zeros(coo.shape, np.float64)
+    row = np.asarray(coo.row)
+    keep = row != csc.PAD_IDX
+    d[row[keep], np.asarray(coo.col)[keep]] = np.asarray(coo.val)[keep]
+    return d
+
+
+@SETTINGS
+@given(m=st.integers(1, 200), seed=st.integers(0, 2**31 - 1))
+def test_invert_permutation_is_involutive(m, seed):
+    perm = np.random.default_rng(seed).permutation(m)
+    inv = reorder.invert_permutation(perm)
+    np.testing.assert_array_equal(inv[perm], np.arange(m))
+    np.testing.assert_array_equal(
+        np.asarray(reorder.invert_permutation(inv), np.int64), perm)
+
+
+@SETTINGS
+@given(n=st.integers(4, 120), nnz=st.integers(1, 400),
+       seed=st.integers(0, 2**31 - 1),
+       strat=st.sampled_from(reorder.REORDER_STRATEGIES))
+def test_permutations_are_valid_and_permute_coo_matches_dense(
+        n, nnz, seed, strat):
+    a = _random_coo(n, nnz, seed)
+    perm, inv = reorder.permutation(a, strat)
+    np.testing.assert_array_equal(np.sort(perm), np.arange(n))
+    np.testing.assert_array_equal(inv[perm], np.arange(n))
+    np.testing.assert_array_equal(_dense(csc.permute_coo(a, perm)),
+                                  _dense(a)[perm])
+
+
+@SETTINGS
+@given(n=st.integers(8, 100), nnz=st.integers(8, 300),
+       k=st.integers(1, 6), seed=st.integers(0, 2**31 - 1),
+       strat=st.sampled_from(reorder.REORDER_STRATEGIES))
+def test_executor_round_trip_is_bit_identical(n, nnz, k, seed, strat):
+    registry.clear_caches()
+    a = _random_coo(n, nnz, seed)
+    rng = np.random.default_rng(seed)
+    b = jnp.asarray(rng.standard_normal((n, k)).astype(np.float32))
+    ident = registry.get_executor(a, nnz_per_step=16, rows_per_window=8)
+    ex = registry.get_executor(a, nnz_per_step=16, rows_per_window=8,
+                               reorder=strat)
+    np.testing.assert_array_equal(np.asarray(ex.spmm(b)),
+                                  np.asarray(ident.spmm(b)))

@@ -219,10 +219,14 @@ print("FORWARD OK")
 # host, and an explicit sharded sweep point round-trips through
 # TunedConfig -> autotuned_executor
 a = synth.power_law_adjacency(300, 0.03, 0.9, seed=7)
-cands = exe.sharded_sweep(a, exe.sharded_device_counts())
+cands = exe.sharded_sweep(a, exe.sharded_device_counts(), force=True)
 assert {c["n_devices"] for c in cands} == {2, 4, 8}
+# minimum-work gate: a graph this small fields no perf-elective sharded
+# candidate, and the default autotune sweep therefore stays single-device
+assert exe.sharded_sweep(a, exe.sharded_device_counts()) == []
 cfg_t = exe.autotune(a, (300, 8), iters=1, warmup=1)
 assert cfg_t.measured_us > 0
+assert cfg_t.n_devices is None
 sweep = [dict(nnz_per_step=32, rows_per_window=16, cols_per_block=None,
               window_nnz=None, routing=exe.GATHER, n_devices=4)]
 cfg4 = exe.autotune(a, (300, 8), sweep=sweep, iters=1, warmup=1)

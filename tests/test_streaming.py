@@ -609,6 +609,15 @@ def _gate_rows():
              derived="speedup=6.00x;bit_identical=1;rebuild_us=12000"),
         dict(name="streaming/zero_gap", us_per_call=500.0,
              derived="gap=0;updates=4;infers=20"),
+        dict(name="reorder/g/none", us_per_call=100.0,
+             derived="nnz=1000;steps=10;locality=0.400"),
+        dict(name="reorder/g/island", us_per_call=95.0,
+             derived="speedup_vs_none=1.05x;bit_identical=1;steps=9;"
+                     "locality=0.350"),
+        dict(name="reorder/g/sweep", us_per_call=95.0,
+             derived="winner=island;accepted=1;speedup_vs_none=1.05x"),
+        dict(name="reorder/h/sweep", us_per_call=100.0,
+             derived="winner=none;accepted=0;speedup_vs_none=1.00x"),
     ]
 
 
@@ -692,6 +701,36 @@ def test_gate_accounting_identity():
         derived="submitted=10;served=8;shed=1;rejected=1")})
     problems = gate.check(unasserted, ref, tolerance=3.0)
     assert any("identity=1" in p for p in problems)
+
+
+def test_gate_reorder_bit_identity_winner_floor_and_diversity():
+    ref = _gate_payload(smoke=False)
+    flipped = _gate_payload(**{"reorder/g/island": dict(
+        derived="speedup_vs_none=1.05x;bit_identical=0;steps=9;"
+                "locality=0.350")})
+    problems = gate.check(flipped, ref, tolerance=3.0)
+    assert any(p.startswith("CORRECTNESS") and "reorder/g/island" in p
+               for p in problems)
+    # winner floor is 1/tolerance: 0.34x passes at tol 3, 0.33x trips
+    at_floor = _gate_payload(**{"reorder/g/sweep": dict(
+        derived="winner=island;accepted=1;speedup_vs_none=0.34x")})
+    assert gate.check(at_floor, ref, tolerance=3.0) == []
+    below = _gate_payload(**{"reorder/g/sweep": dict(
+        derived="winner=island;accepted=1;speedup_vs_none=0.33x")})
+    problems = gate.check(below, ref, tolerance=3.0)
+    assert any("REGRESSION" in p and "measures slower" in p
+               for p in problems)
+    missing = dict(smoke=True, rows=[r for r in _gate_rows()
+                                     if not r["name"].startswith("reorder/")])
+    problems = gate.check(missing, ref, tolerance=3.0)
+    assert any("MISSING" in p and "reorder" in p for p in problems)
+    # a full-scale reference whose sweep always accepts (or always
+    # rejects) is a degenerate trajectory: the axis stopped discriminating
+    always = _gate_payload(smoke=False, **{"reorder/h/sweep": dict(
+        derived="winner=degree;accepted=1;speedup_vs_none=1.01x")})
+    problems = gate.check(_gate_payload(), always, tolerance=3.0)
+    assert any(p.startswith("DEGENERATE") and "always accepts" in p
+               for p in problems)
 
 
 def test_gate_round_trips_through_json():

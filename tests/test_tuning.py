@@ -51,7 +51,8 @@ def test_store_roundtrip(tmp_path):
     key = st.key(registry.graph_fingerprint(a), 12)
     assert st.load(key) is None
     st.save(key, cfg, sched)
-    got_cfg, got_sched = st.load(key)
+    got_cfg, got_sched, got_perm = st.load(key)
+    assert got_perm is None  # identity order → no permutation persisted
     assert got_cfg == cfg
     for f in ("win_id", "col_block", "val", "local_row", "local_col",
               "row_map"):
@@ -229,7 +230,7 @@ def test_store_entry_without_report_retuned_for_reporting_caller(tmp_path):
     registry.clear_caches()  # ≈ restart
     cfg = runner.autotune(a, (300, 8), iters=1, warmup=1, store=st)
     assert cfg.bf16_max_err is not None  # re-tuned, report attached
-    entry_cfg, _ = st.load(st.entries()[0])
+    entry_cfg, _, _ = st.load(st.entries()[0])
     assert entry_cfg.bf16_max_err is not None  # and re-persisted
 
 
@@ -421,7 +422,7 @@ def test_autotune_cache_hit_still_populates_store(tmp_path):
     cfg2 = runner.autotune(a, (300, 8), iters=1, warmup=1, store=st)
     assert cfg2 is cfg
     assert len(st.entries()) == 1                   # backfilled on the hit
-    entry_cfg, _ = st.load(st.entries()[0])
+    entry_cfg, _, _ = st.load(st.entries()[0])
     assert entry_cfg == cfg
 
 
@@ -435,7 +436,10 @@ def test_autotune_store_ignores_entry_for_bigger_mesh(tmp_path):
     import dataclasses
 
     sched = registry.get_schedule(a, **cfg.as_schedule_kwargs())
-    st.save(skey, dataclasses.replace(cfg, n_devices=512), sched)
+    # the default-sweep winner may carry a reorder axis; thread its
+    # permutation through so the v2 payload validation stays satisfied
+    perm = runner._winning_perm(a, cfg, registry.graph_fingerprint(a))
+    st.save(skey, dataclasses.replace(cfg, n_devices=512), sched, perm)
     registry.clear_caches()
     runner._AUTOTUNE_CACHE.clear()
     cfg2 = runner.autotune(a, (300, 8), iters=1, warmup=1, store=st)
