@@ -41,7 +41,19 @@ never on timer noise:
 * **open-loop shed accounting** -- every ``openloop/*/goodput`` row must
   carry ``identity=1`` and satisfy
   ``served + shed + rejected == submitted`` (a hard correctness gate:
-  requests must never vanish or be double-counted under overload);
+  requests must never vanish or be double-counted under overload; the
+  ``steady_learned`` head-to-head section is covered by the same sweep);
+* **learned-policy head-to-head** -- the ``steady_learned`` section
+  replays the steady trace under ``LearnedServiceTimePolicy``; its
+  goodput must stay above the same smoke run's heuristic steady goodput
+  divided by ``tolerance`` (smoke-internal, dimensionless -- a collapse
+  means the learned estimates are driving bad shed/dispatch decisions),
+  and its ``pred_err`` (mean absolute relative service-time prediction
+  error, percent) must stay under the larger of ``tolerance x`` the
+  reference's and an absolute ceiling (smoke-scale service times are
+  overhead-dominated and noisy; a genuinely broken model -- compile
+  times in the fit, queueing feedback -- is off by orders of magnitude).
+  A ``pred_err`` row scored on zero warm predictions is DEGENERATE;
 * **streaming repair speedup + bit-identity** -- the
   ``streaming/small_delta/repair`` row must carry ``bit_identical=1``
   (logits after a chain of incremental repairs must match a from-scratch
@@ -88,6 +100,7 @@ _COUNT_RE = re.compile(r"(submitted|served|shed|rejected)=(\d+)")
 _GAP_RE = re.compile(r"gap=(\d+)")
 _VS_NONE_RE = re.compile(r"speedup_vs_none=([0-9.]+)x")
 _ACCEPT_RE = re.compile(r"accepted=([01])")
+_SCORED_RE = re.compile(r"n_scored=(\d+)")
 _REORDER_STRAT_RE = re.compile(r"reorder/[\w]+/(degree|island)")
 _REORDER_SWEEP_RE = re.compile(r"reorder/[\w]+/sweep")
 
@@ -96,6 +109,14 @@ _SINGLE_ROW = "serving/batched_throughput"
 _REPLICA_ROW = "serving/mesh8/hot_replicated"
 _OL_P99_ROW = "openloop/steady/p99"
 _OL_GOODPUT_ROW = "openloop/steady/goodput"
+_OL_LEARNED_ROW = "openloop/steady_learned/goodput"
+_OL_PRED_ERR_ROW = "openloop/steady_learned/pred_err"
+#: absolute pred_err ceiling (percent): smoke-scale service times are
+#: overhead-dominated and noisy, so the gate takes the larger of this and
+#: tolerance x the reference row (when the reference carries one). A
+#: model poisoned by compile times or queueing feedback is off by
+#: thousands of percent, not this
+_PRED_ERR_ABS_CEILING = 150.0
 _STREAM_ROW = "streaming/small_delta/repair"
 _GAP_ROW = "streaming/zero_gap"
 
@@ -104,6 +125,7 @@ _NO_TUNING = "MISSING: no autotune/* rows shared between smoke and reference"
 _NO_MESH = f"MISSING: no {_MESH_ROW} + {_SINGLE_ROW} rows in the smoke JSON"
 _NO_REPLICA = f"MISSING: no {_REPLICA_ROW} row in the smoke JSON"
 _NO_OPENLOOP = "MISSING: no openloop/steady/* rows in the smoke JSON"
+_NO_LEARNED = "MISSING: no openloop/steady_learned/* rows in the smoke JSON"
 _NO_STREAM = f"MISSING: no {_STREAM_ROW} row in the smoke JSON"
 _NO_GAP = f"MISSING: no {_GAP_ROW} row in the smoke JSON"
 _NO_REORDER = "MISSING: no reorder/*/sweep rows in the smoke JSON"
@@ -348,6 +370,46 @@ def check(smoke: dict, reference: dict, tolerance: float) -> list:
         why = "the accept-or-reject axis is not discriminating at scale"
         msg = f"reference reorder sweep {got} across its graphs -- {why}"
         problems.append(f"DEGENERATE: {msg}")
+
+    # 12. learned-policy head-to-head: smoke-internal goodput floor vs the
+    #     heuristic steady section, plus a prediction-error ceiling
+    #     (reference-relative when the reference carries the row, absolute
+    #     otherwise -- the trajectory predates the learned policy)
+    if _OL_LEARNED_ROW not in s_rows or _OL_PRED_ERR_ROW not in s_rows:
+        problems.append(_NO_LEARNED + _GATE_BLIND)
+    else:
+        learned_pct = s_rows[_OL_LEARNED_ROW]["us_per_call"]
+        if _OL_GOODPUT_ROW in s_rows:
+            floor = s_rows[_OL_GOODPUT_ROW]["us_per_call"] / tolerance
+            if learned_pct < floor:
+                got = f"learned-policy steady goodput {learned_pct:.0f}%"
+                heur_pct = s_rows[_OL_GOODPUT_ROW]["us_per_call"]
+                ref = f"heuristic {heur_pct:.0f}% / tolerance {tolerance:g}"
+                why = "learned estimates drive bad shed/dispatch decisions"
+                msg = f"{got} fell below {floor:.0f}% ({ref}) -- {why}"
+                problems.append(f"REGRESSION: {msg}")
+        pe_row = s_rows[_OL_PRED_ERR_ROW]
+        scored = _SCORED_RE.search(pe_row.get("derived", ""))
+        if scored is None or int(scored.group(1)) == 0:
+            got = "scored zero warm predictions"
+            why = "the accuracy report vouches for nothing"
+            msg = f"{_OL_PRED_ERR_ROW} {got} -- {why}"
+            problems.append(f"DEGENERATE: {msg}")
+        else:
+            ref_row = r_rows.get(_OL_PRED_ERR_ROW)
+            ceiling = _PRED_ERR_ABS_CEILING
+            ref = "absolute ceiling"
+            if ref_row is not None:
+                scaled = ref_row["us_per_call"] * tolerance
+                if scaled > ceiling:
+                    ceiling = scaled
+                    ref = f"{tolerance:g}x reference {ref_row['us_per_call']:.0f}%"
+            err_pct = pe_row["us_per_call"]
+            if err_pct > ceiling:
+                got = f"service-time prediction error {err_pct:.0f}%"
+                why = "the ridge model stopped tracking real service times"
+                msg = f"{got} exceeds {ceiling:.0f}% ({ref}) -- {why}"
+                problems.append(f"REGRESSION: {msg}")
     return problems
 
 

@@ -12,6 +12,14 @@ distribution and reports what an operator would page on:
   generous SLA: p50/p95/p99 latency and goodput-under-SLA (fraction of
   submitted requests served within deadline). The regime the p99-ceiling
   and goodput-floor regression gates watch.
+* **steady_learned** — the *same* steady arrival trace replayed against a
+  second engine running ``LearnedServiceTimePolicy`` (online ridge
+  service-time predictor in place of the EWMAs), warm-started from the
+  same store and pinned to the same calibrated EWMAs: a true head-to-head
+  of the scheduling policies, not of the tuning. Reports the same
+  p50/p99/goodput rows plus the predictor's online accuracy
+  (``pred_err``, mean absolute relative error of warm predictions) and
+  the goodput delta vs the heuristic — both regression-gated.
 * **overload** — on/off bursty arrivals at ~2x capacity with a tight SLA,
   a small ``max_queue_depth``, and deadline-aware shedding enabled: the
   admission controller must reject queue overflow and shed provably
@@ -142,17 +150,25 @@ def _variants(loads):
     return out
 
 
+def _compile_all(eng, variants):
+    """Serve every batch size in [1, BATCH] once per graph. The jitted
+    vmapped forward compiles once per batch *size*; the open-loop drive
+    dispatches every size, so compile them all up front — a mid-drive
+    compile stall is hundreds of ms of fake service time that poisons
+    the EWMAs and the percentiles. As a side effect every served batch
+    feeds ``observe_service`` on the engine's policy, so a learned
+    policy leaves this loop fitted across the full batch-size range."""
+    for name, vs in variants.items():
+        for b in range(1, BATCH + 1):
+            eng.serve_batch(name, [vs[i % len(vs)] for i in range(b)])
+
+
 def _calibrate(eng, variants, pops):
     """Closed-loop batch service time per graph (after compile), the
     capacity estimate the arrival rates are scaled from."""
+    _compile_all(eng, variants)
     batch_s = {}
     for name, vs in variants.items():
-        # the jitted vmapped forward compiles once per batch *size*; the
-        # open-loop drive dispatches every size in [1, BATCH], so compile
-        # them all here — a mid-drive compile stall is hundreds of ms of
-        # fake service time that poisons the EWMAs and the percentiles
-        for b in range(1, BATCH + 1):
-            eng.serve_batch(name, [vs[i % len(vs)] for i in range(b)])
         xs = [vs[i % len(vs)] for i in range(BATCH)]
         t0 = time.perf_counter()
         eng.serve_batch(name, xs)
@@ -268,6 +284,7 @@ def _section_rows(tag, eng, wall, sla_s, rate):
 
 def run() -> list:
     from repro.serving.gcn_engine import GCNServingEngine
+    from repro.serving.policy import LearnedServiceTimePolicy
 
     rows = []
     root = tempfile.mkdtemp(prefix="awb-openloop-store-")
@@ -295,6 +312,61 @@ def run() -> list:
         arrivals = _poisson_arrivals(rate, DURATION_S, rng)
         wall = _drive(eng, variants, pops, arrivals, sla_steady)
         rows.extend(_section_rows("steady", eng, wall, sla_steady, rate))
+
+        # steady_learned: the *same* arrival trace against a second engine
+        # whose scheduling decisions read an online ridge service-time
+        # model instead of the EWMAs. Warm-started from the same store
+        # (zero autotune sweeps) and pinned to the same calibrated EWMAs,
+        # so the only difference is the policy. The first _compile_all
+        # pass pays the jit compiles — those serve times are hundreds of
+        # ms of compiler, not service, and a ridge fit on them predicts
+        # every deadline unmeetable (the EWMA-poisoning problem
+        # _pin_ewmas solves, in model form). So: compile under a
+        # throwaway policy, then attach a fresh one and feed it a second,
+        # warm pass — one clean observation per (graph, batch size),
+        # exactly its min_samples. reset_errors() then scopes the
+        # accuracy report to predictions made during the drive.
+        eng_l = GCNServingEngine(
+            store_root=root,
+            max_batch=BATCH,
+            autotune_kwargs=_TUNE_KW,
+            policy=LearnedServiceTimePolicy(),
+        )
+        for name, (ds, params) in loads.items():
+            eng_l.add_graph(name, ds.adj, params)
+        _compile_all(eng_l, variants)  # compile pass: timings are poisoned
+        pol = LearnedServiceTimePolicy()
+        eng_l.policy = pol
+        _compile_all(eng_l, variants)  # warm pass: clean observations
+        _pin_ewmas(eng_l, batch_s)
+        pol.reset_errors()
+        eng_l.shed_unmeetable = True
+        eng_l.max_queue_depth = 8 * BATCH
+        wall_l = _drive(eng_l, variants, pops, arrivals, sla_steady)
+        rows.extend(_section_rows("steady_learned", eng_l, wall_l, sla_steady, rate))
+        rep = pol.prediction_report()
+        rows.append(
+            (
+                "openloop/steady_learned/pred_err",
+                rep["mean_abs_rel_err"] * 1e2,
+                f"n_scored={rep['n_scored']};n_samples={rep['n_samples']};"
+                f"fallbacks={rep['fallbacks']};fitted={int(rep['fitted'])}",
+            )
+        )
+        g_heur = next(v for k, v, _ in rows if k == "openloop/steady/goodput")
+        g_learn = next(v for k, v, _ in rows if k == "openloop/steady_learned/goodput")
+        rows.append(
+            (
+                "openloop/steady_learned/goodput_delta_pp",
+                g_learn - g_heur,
+                f"heuristic_pct={g_heur:.2f};learned_pct={g_learn:.2f}",
+            )
+        )
+        print(
+            f"  head-to-head: learned goodput {g_learn:.1f}% vs heuristic "
+            f"{g_heur:.1f}% ({g_learn - g_heur:+.1f} pp); pred err "
+            f"{rep['mean_abs_rel_err']:.1%} over {rep['n_scored']} predictions"
+        )
 
         # overload: 2x capacity in bursts, tight SLA, tiny queue bound —
         # the admission controller earns its keep

@@ -16,7 +16,7 @@ import jax
 
 from repro import configs as cfgs
 from repro.models import transformer as tr
-from repro.serving.engine import ServeEngine
+from repro.models.transformer_serve import ServeEngine
 from repro.training.checkpoint import CheckpointManager
 
 

@@ -1,54 +1,17 @@
-"""Batched serving engine: prefill + greedy decode over a static-shape KV
-cache, mesh-ready (the decode path is the same ``decode_step`` the dry-run
-lowers for the decode_32k / long_500k cells).
+"""Backward-compat shim: the transformer ``ServeEngine`` moved.
+
+``repro.serving`` is the GCN serving stack; the transformer
+prefill/decode engine that historically lived here is a *model*-side
+utility and now resides at ``repro.models.transformer_serve``. This
+module keeps the old import path resolving (lazily, PEP 562).
 """
+
 from __future__ import annotations
 
-from typing import List, Optional
+from repro.lazyexports import lazy_exports
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.models import transformer as tr
-
-
-class ServeEngine:
-    def __init__(self, cfg: tr.ModelConfig, params, max_seq: int = 256,
-                 compute_dtype=jnp.float32):
-        self.cfg = cfg
-        self.params = params
-        self.max_seq = max_seq
-        self.dtype = compute_dtype
-        self._decode = jax.jit(
-            lambda p, c, t, pos: tr.decode_step(
-                cfg, p, c, t, pos, compute_dtype=compute_dtype))
-
-    def generate(self, prompts: List[List[int]], max_new_tokens: int = 16,
-                 source_embed: Optional[np.ndarray] = None,
-                 ) -> List[List[int]]:
-        """Greedy batched generation. Prompts are left-padded to a common
-        length so positions align (static shapes end-to-end)."""
-        b = len(prompts)
-        plen = max(len(p) for p in prompts)
-        toks = np.zeros((b, plen), np.int32)
-        for i, p in enumerate(prompts):  # right-align
-            toks[i, plen - len(p):] = p
-        batch = {"tokens": jnp.asarray(toks)}
-        if self.cfg.encoder is not None:
-            batch["source_embed"] = jnp.asarray(source_embed)
-
-        logits, cache = tr.prefill(self.cfg, self.params, batch,
-                                   max_seq=self.max_seq,
-                                   compute_dtype=self.dtype)
-        out = [list(p) for p in prompts]
-        token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        for step in range(max_new_tokens):
-            for i in range(b):
-                out[i].append(int(token[i]))
-            if step == max_new_tokens - 1:
-                break
-            pos = jnp.int32(plen + step)
-            logits, cache = self._decode(self.params, cache, token, pos)
-            token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        return out
+__getattr__, __dir__ = lazy_exports(
+    __name__,
+    {"ServeEngine": "repro.models.transformer_serve"},
+    globals(),
+)

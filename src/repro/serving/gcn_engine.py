@@ -102,7 +102,25 @@ from repro.core.schedule import (
     slot_entry_keys,
     value_patch_schedule,
 )
+from repro.serving.errors import (
+    FlushError,
+    RequestFailure,
+    ServingError,
+    UnknownGraphError,
+)
 from repro.serving.placement import REPLICATED, SHARDED, SINGLE, MeshPlacer, Placement
+from repro.serving.policy import (
+    GROW,
+    SHRINK,
+    SVC_FLOOR_S,
+    SVC_SAFETY,
+    GraphState,
+    HeuristicPolicy,
+    LearnedServiceTimePolicy,
+    PolicyState,
+    SchedulingPolicy,
+)
+from repro.serving.types import ACCEPTED, REJECTED, SHED, SubmitTicket
 from repro.tuning import registry, runner, space
 from repro.tuning.space import TunedConfig
 from repro.tuning.store import TuningStore
@@ -112,13 +130,10 @@ from repro.tuning.store import TuningStore
 #: giant graphs to the sharded path before their schedule exists.
 _BYTES_PER_NNZ_EST = 16
 
-#: deadline dispatch headroom: a queue is due at
-#: ``deadline - SAFETY * est - FLOOR``. Dispatching at exactly
-#: ``deadline - est`` lands completions *on* the deadline, where any
-#: jitter is a miss; 50% service-time headroom plus a small floor turns
-#: borderline batches into met deadlines at a modest batching cost.
-_SVC_SAFETY = 1.5
-_SVC_FLOOR_S = 0.010
+#: historical aliases of the dispatch-headroom constants, which now live
+#: with the scheduling policies in ``serving.policy``
+_SVC_SAFETY = SVC_SAFETY
+_SVC_FLOOR_S = SVC_FLOOR_S
 
 #: test seam: the await used by the completion path (monkeypatched to
 #: simulate an asynchronously-failing computation without a real device
@@ -133,68 +148,20 @@ _sleep = time.sleep
 #: the p50/p95/p99 percentiles in ``stats()``.
 _LAT_RESERVOIR = 65536
 
-#: ``SubmitTicket.status`` values.
-ACCEPTED = "accepted"
-REJECTED = "rejected"  # queue at max_queue_depth — the engine is overloaded
-SHED = "shed"  # deadline provably unmeetable under predicted wait
-
-
-@dataclasses.dataclass(frozen=True)
-class SubmitTicket:
-    """Typed admission result of one ``submit`` call.
-
-    ``status == ACCEPTED``: the request is queued under ``rid``.
-    ``status == REJECTED``: the graph's queue sits at ``max_queue_depth``
-    — the overloaded-engine signal; back off and retry.
-    ``status == SHED``: the EDF load map's EWMA-predicted wait already
-    exceeds the request's deadline, so serving it could only produce a
-    deadline miss; it was dropped before costing any device time.
-    ``rid`` is None unless accepted; ``reason`` says why not.
-    """
-    rid: Optional[int]
-    status: str
-    reason: str = ""
-
-    @property
-    def accepted(self) -> bool:
-        return self.status == ACCEPTED
-
-    def __bool__(self) -> bool:  # `if eng.submit(...):` reads naturally
-        return self.accepted
-
-
-class UnknownGraphError(KeyError):
-    """A request named a graph this engine does not hold (never admitted,
-    or removed). One typed error across every path — ``submit``,
-    ``serve_batch``/``infer``, and ``remove_graph`` — so callers catch
-    one thing. Subclasses ``KeyError`` for backward compatibility."""
-
-    def __init__(self, graph_id: str, op: str = "serve"):
-        super().__init__(f"unknown graph {graph_id!r} (op={op})")
-        self.graph_id = graph_id
-        self.op = op
-
-    def __str__(self) -> str:  # KeyError quotes its arg; keep it readable
-        return self.args[0]
-
-
-class RequestFailure(RuntimeError):
-    """A direct ``serve_batch``/``infer`` call failed after exhausting
-    every recovery path (sibling-replica retries, bounded dispatch
-    retries). ``cause`` is the final underlying exception, ``n_failed``
-    the number of requests affected, and ``partial`` the merged logits of
-    the sub-batches that did succeed (None when none did). Served-work
-    counters were not inflated; outstanding-work meters are settled."""
-
-    def __init__(self, graph_id: str, cause: Exception, n_failed: int, partial=None):
-        super().__init__(
-            f"{n_failed} request(s) for graph {graph_id!r} failed after "
-            f"retries: {cause!r}"
-        )
-        self.graph_id = graph_id
-        self.cause = cause
-        self.n_failed = n_failed
-        self.partial = partial
+# SubmitTicket / ACCEPTED / REJECTED / SHED and the typed errors
+# (ServingError, UnknownGraphError, RequestFailure, FlushError) moved to
+# ``serving.types`` / ``serving.errors``; re-exported above from their
+# historical import path.
+__all_reexports__ = (
+    "ACCEPTED",
+    "REJECTED",
+    "SHED",
+    "SubmitTicket",
+    "ServingError",
+    "UnknownGraphError",
+    "RequestFailure",
+    "FlushError",
+)
 
 
 @dataclasses.dataclass
@@ -204,26 +171,6 @@ class _PartFailure:
     offset: int
     n: int
     exc: Exception
-
-
-class FlushError(RuntimeError):
-    """One or more per-graph batches failed during a flush/poll.
-
-    Nothing is lost: ``partial`` holds the successfully served
-    ``{graph_id: logits}``, ``failures`` the ``{graph_id: exception}``,
-    and every failed *request* was restored to its queue (at the front,
-    original order) for retry — when only some of a batch's replica
-    chunks failed, the served chunks' logits still land in ``partial``
-    and only the failed chunks' requests are restored."""
-
-    def __init__(self, failures, partial):
-        super().__init__(
-            f"flush failed for graph(s) {sorted(failures)}; "
-            f"{len(partial)} graph(s) served (see .partial), failed "
-            f"queues restored for retry"
-        )
-        self.failures = failures
-        self.partial = partial
 
 
 @dataclasses.dataclass
@@ -420,6 +367,13 @@ class GCNServingEngine:
     alone exceeds the budget (a budget smaller than one graph cannot be
     honoured — it degrades to one-graph-at-a-time rotation).
 
+    ``policy`` plugs a ``serving.policy.SchedulingPolicy`` into every
+    scheduling choice point — admission placement, replica grow/shrink,
+    submit-time and dispatch-time shedding, and queue ordering/dueness.
+    The default ``HeuristicPolicy()`` reproduces the engine's historical
+    behavior decision-for-decision; ``LearnedServiceTimePolicy()`` swaps
+    the EWMA service-time model for an online-fitted predictor.
+
     Admission control: ``max_queue_depth`` bounds every per-graph queue
     (``submit`` returns a REJECTED ``SubmitTicket`` at the bound; None =
     unbounded, the historical behaviour). ``shed_unmeetable=True`` turns
@@ -437,6 +391,7 @@ class GCNServingEngine:
         *,
         store: Optional[TuningStore] = None,
         store_root=None,
+        policy: Optional[SchedulingPolicy] = None,
         device_budget_bytes: int = 64 << 20,
         devices=None,
         max_batch: int = 32,
@@ -454,6 +409,12 @@ class GCNServingEngine:
         autotune_kwargs: Optional[dict] = None,
     ):
         self.store = store if store is not None else TuningStore(store_root)
+        #: the scheduling seam: every placement, replication, shedding,
+        #: and dispatch-ordering decision goes through this object (see
+        #: ``serving.policy``); default is the extracted heuristics
+        self.policy: SchedulingPolicy = (
+            policy if policy is not None else HeuristicPolicy()
+        )
         self.device_budget_bytes = int(device_budget_bytes)
         self.max_batch = int(max_batch)
         if self.max_batch < 1:
@@ -577,6 +538,64 @@ class GCNServingEngine:
             "update_retunes": 0,
         }
 
+    # ---- policy state snapshot ---------------------------------------------
+
+    def _graph_state(self, gid: str, rec: "Optional[_Resident]" = None) -> GraphState:
+        """One graph's immutable policy-visible state (see
+        ``serving.policy.GraphState``). ``rec`` may be None for a queue
+        whose graph record is absent (scheduler-only test stubs build
+        such states); its graph features degrade to zeros."""
+        if rec is None:
+            rec = self._graphs.get(gid)
+        p = self.placer.placement_of(gid)
+        q = self._pending.get(gid) or []
+        has_coo = rec is not None and rec.coo is not None
+        return GraphState(
+            graph_id=gid,
+            nnz=int(np.asarray(rec.coo.row).shape[0]) if has_coo else 0,
+            n_rows=int(rec.coo.shape[0]) if has_coo else 0,
+            bytes=0 if rec is None else int(rec.bytes),
+            resident=self.placer.is_resident(gid),
+            kind=None if p is None else p.kind,
+            device_index=None if p is None else p.device_index,
+            device_indices=() if p is None else tuple(p.device_indices),
+            queue_depth=len(q),
+            earliest_deadline=_earliest_deadline(q),
+            svc_ewma=self._svc_ewma.get(gid, 0.0),
+            svc_req_ewma=self._svc_req_ewma.get(gid, 0.0),
+            calm_polls=self._calm_polls.get(gid, 0),
+        )
+
+    def _policy_state(self, now: Optional[float] = None) -> PolicyState:
+        """Snapshot everything a scheduling decision may read. Rebuilt
+        before every policy consultation — decisions that mutate engine
+        state (a replica grown, a queue popped) never leak into a stale
+        snapshot."""
+        if now is None:
+            now = time.monotonic()
+        return PolicyState(
+            now=now,
+            n_devices=self.n_devices,
+            budget_bytes=self.placer.budget,
+            used_bytes=tuple(self.placer.used),
+            outstanding_s=tuple(
+                self._dev_outstanding.get(d, 0.0) for d in range(self.n_devices)
+            ),
+            max_replicas=self.max_replicas,
+            replicate_after_s=self.replicate_after_s,
+            replica_shrink_after=self.replica_shrink_after,
+            max_batch=self.max_batch,
+            # every admitted graph, plus any queue without a graph record
+            # (scheduler-only stubs hand-build those)
+            graphs={
+                g: self._graph_state(g)
+                for g in [
+                    *self._graphs,
+                    *(q for q in self._pending if q not in self._graphs),
+                ]
+            },
+        )
+
     # ---- admission ---------------------------------------------------------
 
     def _estimate_bytes(self, a: fmt.COO, params: dict) -> int:
@@ -683,7 +702,8 @@ class GCNServingEngine:
             pcoo=None if perm is None else fmt.permute_coo(host_coo, perm),
         )
         self._graphs[graph_id] = rec
-        placement = self.placer.place(graph_id, est)
+        decision = self.policy.place(self._policy_state(), graph_id, est)
+        placement = self.placer.place(graph_id, est, decision=decision)
         self._admit(rec)
         return AdmitReport(
             graph_id=graph_id,
@@ -1310,18 +1330,22 @@ class GCNServingEngine:
         self._svc_req_ewma.pop(rec.graph_id, None)
         self._calm_polls.pop(rec.graph_id, None)
 
-    def _grow_replica(self, rec: _Resident) -> bool:
-        """Clone ``rec`` onto the coolest device that doesn't yet host it
-        AND has budget room for the clone — replication never evicts
-        resident graphs to make space (a replica is a luxury; forcing it
-        onto a full device would just get it shed by the next budget
-        sweep and re-grown by the next poll, one upload per cycle). Warm
-        by construction: the clone reuses the converged config and host
-        schedule already in memory (same ``TuningStore`` entry), so
-        growth is one upload — no sweep, no rebuild."""
+    def _grow_replica(self, rec: _Resident, device_index: Optional[int] = None) -> bool:
+        """Clone ``rec`` onto ``device_index`` (the policy's pick; None
+        falls back to the placer's coolest-fitting candidate — a device
+        that doesn't yet host it AND has budget room for the clone).
+        Replication never evicts resident graphs to make space (a
+        replica is a luxury; forcing it onto a full device would just
+        get it shed by the next budget sweep and re-grown by the next
+        poll, one upload per cycle). Warm by construction: the clone
+        reuses the converged config and host schedule already in memory
+        (same ``TuningStore`` entry), so growth is one upload — no
+        sweep, no rebuild."""
         if rec.fwd is None:
             return False
-        d = self.placer.replica_candidate(rec.graph_id, rec.bytes)
+        d = device_index
+        if d is None:
+            d = self.placer.replica_candidate(rec.graph_id, rec.bytes)
         if d is None:
             return False
         unit = self._build_unit(rec, d)
@@ -1351,42 +1375,38 @@ class GCNServingEngine:
             self._svc_ewma.pop(rec.graph_id, None)
             self._svc_req_ewma.pop(rec.graph_id, None)
 
-    def _update_replication(self) -> None:
-        """Grow hot graphs' replica sets, shrink idle ones (runs at every
-        ``poll`` and threshold auto-flush).
+    def _update_replication(self, now: Optional[float] = None) -> None:
+        """Consult the policy for one grow/shrink/hold step per graph
+        (runs at every ``poll`` and threshold auto-flush).
 
-        Saturation signal: **per-request service-time EWMA × queue
-        depth** — the backlog seconds a single replica would need to
-        drain the queue. Above ``replicate_after_s`` the graph grows one
-        replica (onto the coolest device); below a quarter of that for
-        ``replica_shrink_after`` consecutive polls, a replicated graph
-        sheds one (from the fullest device, relieving the most memory
-        pressure). Sharded graphs never replicate — they already span the
-        mesh."""
+        The default ``HeuristicPolicy`` signal: **per-request
+        service-time EWMA × queue depth** — the backlog seconds a single
+        replica would need to drain the queue. Above ``replicate_after_s``
+        the graph grows one replica (onto the coolest fitting device);
+        below a quarter of that for ``replica_shrink_after`` consecutive
+        polls, a replicated graph sheds one (from the fullest device,
+        relieving the most memory pressure). Sharded graphs never
+        replicate — they already span the mesh. The policy returns the
+        new calm-poll hysteresis counter; the engine stores it (None
+        clears it). The snapshot is rebuilt per graph: each applied
+        decision changes device occupancy, which the next graph's
+        decision must see."""
         if self.n_devices < 2:
             return
         for gid, rec in list(self._graphs.items()):
             p = self.placer.placement_of(gid)
             if p is None or p.kind == SHARDED:
                 continue
-            depth = len(self._pending.get(gid) or ())
-            backlog = self._svc_req_ewma.get(gid, 0.0) * depth
-            n_rep = len(p.device_indices)
-            if backlog > self.replicate_after_s and n_rep < self.max_replicas:
-                self._grow_replica(rec)
+            dec = self.policy.replication(self._policy_state(now), gid)
+            if dec.action == GROW:
+                if dec.device_index is not None:
+                    self._grow_replica(rec, dec.device_index)
+            elif dec.action == SHRINK:
+                self._drop_replica(rec, dec.device_index)
+            if dec.calm_polls is None:
                 self._calm_polls.pop(gid, None)
-            elif n_rep > 1 and backlog <= self.replicate_after_s / 4:
-                calm = self._calm_polls.get(gid, 0) + 1
-                if calm >= self.replica_shrink_after:
-                    shed = max(
-                        (d for d in p.device_indices if d != p.device_index),
-                        key=lambda d: (self.placer.used[d], d),
-                    )
-                    self._drop_replica(rec, shed)
-                    calm = 0
-                self._calm_polls[gid] = calm
             else:
-                self._calm_polls.pop(gid, None)
+                self._calm_polls[gid] = int(dec.calm_polls)
 
     def _evict_over_budget(self, keep: str) -> None:
         """Per-device budget sweep: every over-budget device sheds
@@ -1677,12 +1697,19 @@ class GCNServingEngine:
     def _note_service(self, gid: str, svc_s: float, n_requests: int) -> None:
         """Fold one completed batch into the per-batch and per-request
         service-time EWMAs (the deadline scheduler's dispatch estimate
-        and the replication saturation signal)."""
+        and the replication saturation signal), then feed the completion
+        to the policy — learned policies fit their service-time model on
+        exactly these observations."""
         old = self._svc_ewma.get(gid)
         self._svc_ewma[gid] = svc_s if old is None else 0.5 * old + 0.5 * svc_s
         per = svc_s / max(1, n_requests)
         old = self._svc_req_ewma.get(gid)
         self._svc_req_ewma[gid] = per if old is None else 0.5 * old + 0.5 * per
+        rec = self._graphs.get(gid)
+        if rec is not None:
+            self.policy.observe_service(
+                gid, n_requests, svc_s, self._graph_state(gid, rec)
+            )
 
     # ---- direct serving ----------------------------------------------------
 
@@ -1768,16 +1795,12 @@ class GCNServingEngine:
             )
         deadline = None if deadline_s is None else now + float(deadline_s)
         if self.shed_unmeetable and deadline is not None:
-            wait = self._predicted_wait(graph_id, deadline)
-            if now + wait > deadline:
+            dec = self.policy.shed_on_submit(
+                self._policy_state(now), graph_id, deadline
+            )
+            if dec.shed:
                 self.counters["shed"] += 1
-                return SubmitTicket(
-                    None,
-                    SHED,
-                    f"predicted wait {wait * 1e3:.1f} ms exceeds deadline "
-                    f"{float(deadline_s) * 1e3:.1f} ms for graph "
-                    f"{graph_id!r}",
-                )
+                return SubmitTicket(None, SHED, dec.reason)
         rid = self._next_rid
         self._next_rid += 1
         self._pending.setdefault(graph_id, []).append(
@@ -1787,7 +1810,7 @@ class GCNServingEngine:
             # a queue hot enough to hit the threshold is the saturation
             # signal's strongest form — give replication a chance to grow
             # before the batch serves
-            self._update_replication()
+            self._update_replication(now)
             served = self._serve_queues([graph_id], now=now)
             for gid, out in served.items():
                 self._ready.setdefault(gid, []).append(out)
@@ -1821,33 +1844,16 @@ class GCNServingEngine:
         return done
 
     def _predicted_wait(self, graph_id: str, deadline: Optional[float] = None) -> float:
-        """EWMA-predicted completion delay (seconds from now) of a
-        request submitted to ``graph_id`` now: every queue EDF-ahead of
-        it is absorbed into the per-device load map — co-located queues
-        serialize, replicated queues split — and the request's own
-        graph's batch estimate completes on top. This is the admission
-        controller's shed predicate: a deadline below this wait cannot
-        be met, so serving the request could only buy a deadline miss."""
-        p = self.placer.placement_of(graph_id)
-        est = self._svc_ewma.get(graph_id, 0.0)
-        if p is None:
-            return est
-        my_key = _earliest_deadline(self._pending.get(graph_id) or [])
-        if deadline is not None:
-            my_key = min(my_key, deadline)
-        load: Dict[int, float] = {}
-        order = sorted(
-            ((g, q) for g, q in self._pending.items() if q and g != graph_id),
-            key=lambda t: (_earliest_deadline(t[1]), t[0]),
-        )
-        for gid, q in order:
-            if (_earliest_deadline(q), gid) > (my_key, graph_id):
-                continue  # EDF-behind: dispatches after us, cannot delay us
-            ahead = self.placer.placement_of(gid)
-            if ahead is None:
-                continue
-            self._absorb(load, ahead, self._svc_ewma.get(gid, 0.0))
-        return self._absorb(load, p, est)
+        """Policy-predicted completion delay (seconds from now) of a
+        request submitted to ``graph_id`` now (see
+        ``serving.policy.HeuristicPolicy.predicted_wait``: every queue
+        EDF-ahead of it is absorbed into the per-device load map and the
+        request's own graph's batch estimate completes on top). This is
+        the admission controller's shed predicate: a deadline below this
+        wait cannot be met, so serving the request could only buy a
+        deadline miss. Kept as a thin delegate for callers and tests
+        that probe the predicate directly."""
+        return self.policy.predicted_wait(self._policy_state(), graph_id, deadline)
 
     def poll(self, now: Optional[float] = None) -> Dict[str, jax.Array]:
         """Serve every queue that is *due* and return its batched logits
@@ -1875,24 +1881,11 @@ class GCNServingEngine:
         shrink here too (see ``_update_replication``)."""
         if now is None:
             now = time.monotonic()
-        self._update_replication()
-        order = sorted(
-            ((g, q) for g, q in self._pending.items() if q),
-            key=lambda t: (_earliest_deadline(t[1]), t[0]),
-        )
-        load: Dict[int, float] = {}  # device -> cumulative busy seconds
-        threshold, due_upto = [], -1
-        for i, (gid, q) in enumerate(order):
-            done = self._absorb(
-                load, self.placer.placement_of(gid), self._svc_ewma.get(gid, 0.0)
-            )
-            if len(q) >= self.max_batch:
-                threshold.append(gid)
-            slack = _SVC_SAFETY * done + _SVC_FLOOR_S
-            if _earliest_deadline(q) - slack <= now:
-                due_upto = i
-        cut = due_upto + 1
-        due = {g for g, _ in order[:cut]} | set(threshold)
+        self._update_replication(now)
+        due = set(self.policy.due_queues(self._policy_state(now)))
+        # max_batch threshold queues serve regardless of deadlines — the
+        # batching bound is the engine's, not the policy's
+        due |= {g for g, q in self._pending.items() if len(q) >= self.max_batch}
         return self._drain(self._serve_queues(list(due), now=now))
 
     def flush(self) -> Dict[str, jax.Array]:
@@ -1947,10 +1940,13 @@ class GCNServingEngine:
         graphs after every healthy graph was served."""
         if now is None:
             now = time.monotonic()
-        order = sorted(
-            (g for g in graph_ids if self._pending.get(g)),
-            key=lambda g: (_earliest_deadline(self._pending[g]), g),
-        )
+        # one snapshot serves every ordering + shed decision of this
+        # cycle: EWMAs and queues only mutate in the await loop below,
+        # after all dispatch decisions are made
+        state = self._policy_state(now)
+        order = self.policy.dispatch_order(
+            state, [g for g in graph_ids if self._pending.get(g)]
+        ).graph_ids
         served: Dict[str, jax.Array] = {}
         failures: Dict[str, Exception] = {}
         inflight = []
@@ -1961,10 +1957,12 @@ class GCNServingEngine:
         for gid in order:
             reqs = self._pending.pop(gid)
             if self.shed_unmeetable:
-                est = self._svc_ewma.get(gid, 0.0)
                 keep = []
                 for r in reqs:
-                    if r.deadline is not None and now + est > r.deadline:
+                    if (
+                        r.deadline is not None
+                        and self.policy.shed_at_dispatch(state, gid, r.deadline).shed
+                    ):
                         self.counters["shed"] += 1
                     else:
                         keep.append(r)

@@ -37,6 +37,7 @@ The placer is pure host-side bookkeeping over device *indices* — no jax
 imports — so placement policy is unit-testable without a mesh; the engine
 maps index → ``jax.Device``.
 """
+
 from __future__ import annotations
 
 import dataclasses
@@ -59,6 +60,7 @@ class Placement:
     first — ``device_index`` stays the primary, which is never dropped);
     any one replica can serve any request.
     """
+
     kind: str
     device_index: Optional[int]
     n_devices: int
@@ -86,8 +88,9 @@ class MeshPlacer:
     one replica frees exactly that device's share.
     """
 
-    def __init__(self, n_devices: int, per_device_budget_bytes: int, *,
-                 rebalance_after: int = 4):
+    def __init__(
+        self, n_devices: int, per_device_budget_bytes: int, *, rebalance_after: int = 4
+    ):
         if n_devices < 1:
             raise ValueError(f"n_devices must be >= 1, got {n_devices}")
         self.n_devices = int(n_devices)
@@ -105,7 +108,7 @@ class MeshPlacer:
     def free_bytes(self, device_index: int) -> int:
         return self.budget - self.used[device_index]
 
-    def place(self, graph_id: str, nbytes: int) -> Placement:
+    def place(self, graph_id: str, nbytes: int, decision=None) -> Placement:
         """Decide (and record) where a new graph goes.
 
         Giant graphs — footprint over any single device's budget — go
@@ -114,15 +117,42 @@ class MeshPlacer:
         rule already degrades that to one-graph-at-a-time rotation).
         Everything else is worst-fit packed: the device with the most
         free budget, ties to the lowest index (deterministic).
+
+        ``decision`` overrides the built-in rule with an externally-made
+        placement: any object with ``.kind`` (``SINGLE``/``SHARDED``)
+        and ``.device_index`` attributes — in practice a
+        ``serving.policy.PlaceDecision`` (duck-typed so this module
+        stays import-free of the policy layer). The placer validates it
+        (sharded needs a multi-device mesh; the device index must be on
+        the mesh) and records it verbatim.
         """
         if graph_id in self.placements:
             raise ValueError(f"graph {graph_id!r} already placed")
-        if nbytes > self.budget and self.n_devices > 1:
+        if decision is None:
+            if nbytes > self.budget and self.n_devices > 1:
+                p = Placement(SHARDED, None, self.n_devices)
+            else:
+                d = max(range(self.n_devices), key=lambda i: (self.free_bytes(i), -i))
+                p = Placement(SINGLE, d, 1)
+        elif decision.kind == SHARDED:
+            if self.n_devices < 2:
+                raise ValueError(
+                    f"graph {graph_id!r}: sharded placement needs a multi-device mesh"
+                )
             p = Placement(SHARDED, None, self.n_devices)
+        elif decision.kind == SINGLE:
+            d = decision.device_index
+            if d is None or not 0 <= int(d) < self.n_devices:
+                raise ValueError(
+                    f"graph {graph_id!r}: device_index {d!r} is not on "
+                    f"this {self.n_devices}-device mesh"
+                )
+            p = Placement(SINGLE, int(d), 1)
         else:
-            d = max(range(self.n_devices),
-                    key=lambda i: (self.free_bytes(i), -i))
-            p = Placement(SINGLE, d, 1)
+            raise ValueError(
+                f"graph {graph_id!r}: placement decision kind must be "
+                f"{SINGLE!r} or {SHARDED!r}, got {decision.kind!r}"
+            )
         self.placements[graph_id] = p
         return p
 
@@ -141,7 +171,8 @@ class MeshPlacer:
         if p.kind == REPLICATED:
             raise ValueError(
                 f"graph {graph_id!r} is replicated; replicas account "
-                "per-device through add_replica")
+                "per-device through add_replica"
+            )
         shares = self._shares(p, nbytes)
         self._resident_bytes[graph_id] = dict(zip(p.device_indices, shares))
         for d, share in zip(p.device_indices, shares):
@@ -197,8 +228,9 @@ class MeshPlacer:
 
     # ---- replication (engine calls when one graph saturates a device) ------
 
-    def replica_candidate(self, graph_id: str,
-                          nbytes: Optional[int] = None) -> Optional[int]:
+    def replica_candidate(
+        self, graph_id: str, nbytes: Optional[int] = None
+    ) -> Optional[int]:
         """The device the next replica of ``graph_id`` should land on —
         the coolest (most free budget, ties to the lowest index) device
         not already hosting a replica — or None when every mesh device
@@ -213,15 +245,20 @@ class MeshPlacer:
         p = self.placements[graph_id]
         if p.kind == SHARDED or not self.is_resident(graph_id):
             return None
-        free = [d for d in range(self.n_devices)
-                if d not in p.device_indices
-                and (nbytes is None or self.free_bytes(d) >= nbytes)]
+        free = []
+        for d in range(self.n_devices):
+            if d in p.device_indices:
+                continue
+            if nbytes is not None and self.free_bytes(d) < nbytes:
+                continue
+            free.append(d)
         if not free:
             return None
         return max(free, key=lambda d: (self.free_bytes(d), -d))
 
-    def add_replica(self, graph_id: str, nbytes: int,
-                    device_index: Optional[int] = None) -> int:
+    def add_replica(
+        self, graph_id: str, nbytes: int, device_index: Optional[int] = None
+    ) -> int:
         """Grow ``graph_id``'s replica set by one device and account
         ``nbytes`` (one full clone footprint) there. ``device_index``
         defaults to ``replica_candidate``; raises when the graph cannot
@@ -231,25 +268,26 @@ class MeshPlacer:
         if p.kind == SHARDED:
             raise ValueError(
                 f"graph {graph_id!r} is sharded across the mesh; "
-                "sharded graphs cannot replicate")
+                "sharded graphs cannot replicate"
+            )
         if not self.is_resident(graph_id):
             raise ValueError(
-                f"graph {graph_id!r} is not resident; admit it before "
-                "replicating")
+                f"graph {graph_id!r} is not resident; admit it before replicating"
+            )
         if device_index is None:
             device_index = self.replica_candidate(graph_id)
             if device_index is None:
                 raise ValueError(
                     f"graph {graph_id!r} already has a replica on every "
-                    f"device of this {self.n_devices}-device mesh")
+                    f"device of this {self.n_devices}-device mesh"
+                )
         device_index = int(device_index)
         if device_index in p.device_indices:
             raise ValueError(
-                f"graph {graph_id!r} already has a replica on device "
-                f"{device_index}")
+                f"graph {graph_id!r} already has a replica on device {device_index}"
+            )
         replicas = tuple(p.device_indices) + (device_index,)
-        self.placements[graph_id] = Placement(
-            REPLICATED, p.device_index, 1, replicas)
+        self.placements[graph_id] = Placement(REPLICATED, p.device_index, 1, replicas)
         self._resident_bytes[graph_id][device_index] = int(nbytes)
         self.used[device_index] += int(nbytes)
         return device_index
@@ -265,16 +303,20 @@ class MeshPlacer:
         if device_index == p.device_index:
             raise ValueError(
                 f"device {device_index} holds graph {graph_id!r}'s "
-                "primary replica; evict the graph instead of dropping it")
+                "primary replica; evict the graph instead of dropping it"
+            )
         if device_index not in p.replicas:
             raise ValueError(
-                f"graph {graph_id!r} has no replica on device "
-                f"{device_index}")
+                f"graph {graph_id!r} has no replica on device {device_index}"
+            )
         nbytes = self._resident_bytes[graph_id].pop(device_index)
         self.used[device_index] -= nbytes
         rest = tuple(d for d in p.replicas if d != device_index)
-        new = (Placement(SINGLE, p.device_index, 1) if len(rest) == 1
-               else Placement(REPLICATED, p.device_index, 1, rest))
+        new = (
+            Placement(SINGLE, p.device_index, 1)
+            if len(rest) == 1
+            else Placement(REPLICATED, p.device_index, 1, rest)
+        )
         self.placements[graph_id] = new
         return new
 
@@ -294,8 +336,9 @@ class MeshPlacer:
         if self.n_devices < 2:
             return None
         hot = max(range(self.n_devices), key=lambda d: (self.evictions[d], d))
-        cool = min(range(self.n_devices),
-                   key=lambda d: (self.evictions[d], self.used[d], d))
+        cool = min(
+            range(self.n_devices), key=lambda d: (self.evictions[d], self.used[d], d)
+        )
         if hot == cool:
             return None
         if self.evictions[hot] < self.rebalance_after:
@@ -312,7 +355,8 @@ class MeshPlacer:
         if old.kind != SINGLE:
             raise ValueError(
                 f"cannot move {old.kind} graph {graph_id!r}; only "
-                "single-device placements migrate")
+                "single-device placements migrate"
+            )
         per_dev = self._resident_bytes.get(graph_id)
         nbytes = None if per_dev is None else per_dev[old.device_index]
         self.unaccount(graph_id)
@@ -326,8 +370,7 @@ class MeshPlacer:
 
     # ---- reporting ---------------------------------------------------------
 
-    def device_report(self,
-                      extra: Optional[Dict[int, dict]] = None) -> List[dict]:
+    def device_report(self, extra: Optional[Dict[int, dict]] = None) -> List[dict]:
         """Per-device occupancy snapshot for ``stats()`` — replicated
         graphs appear on every device currently hosting one of their
         replicas. ``extra`` merges caller-side per-device fields into
@@ -338,8 +381,16 @@ class MeshPlacer:
             for d in p.device_indices:
                 if self.resident_on(gid, d):
                     graphs[d].append(gid)
-        return [{"device": d, "used_bytes": self.used[d],
-                 "budget_bytes": self.budget,
-                 "evictions": self.evictions[d], "resident": graphs[d],
-                 **(extra.get(d, {}) if extra else {})}
-                for d in range(self.n_devices)]
+        rows = []
+        for d in range(self.n_devices):
+            row = {
+                "device": d,
+                "used_bytes": self.used[d],
+                "budget_bytes": self.budget,
+                "evictions": self.evictions[d],
+                "resident": graphs[d],
+            }
+            if extra:
+                row.update(extra.get(d, {}))
+            rows.append(row)
+        return rows

@@ -1,0 +1,458 @@
+"""Trace equivalence: ``HeuristicPolicy`` reproduces the pre-refactor
+scheduling decisions decision-for-decision.
+
+The oracle functions below are line-for-line transcriptions of the
+engine code *before* the policy seam existed (``placer.place`` worst-fit
++ sharded routing, ``_update_replication`` with calm-poll hysteresis,
+``_predicted_wait``'s EDF load-map absorption, ``poll``'s dueness cut,
+``_serve_queues``'s EDF dispatch order and dispatch-time shed). The
+suite replays them against ``HeuristicPolicy`` on hand-recorded
+scenarios — single, replicated, and sharded-giant routes — and on a
+randomized fuzz sweep, asserting bit-identical decisions everywhere.
+
+Pure host-side: ``serving.policy`` imports no jax, so the whole suite
+runs without devices (engine-level equivalence rides on the pre-existing
+clock-injected suites in test_overload/test_placement/test_streaming,
+which pin the same behaviors through the real engine)."""
+import numpy as np
+import pytest
+
+from repro.serving.placement import REPLICATED, SHARDED, SINGLE
+from repro.serving.policy import (
+    GROW,
+    HOLD,
+    SHRINK,
+    SVC_FLOOR_S,
+    SVC_SAFETY,
+    DispatchOrder,
+    GraphState,
+    HeuristicPolicy,
+    PolicyState,
+    ReplicaDecision,
+    absorb_load,
+)
+
+
+# ---------------------------------------------------------------------------
+# state builders
+# ---------------------------------------------------------------------------
+
+def G(gid, *, kind=SINGLE, dev=0, devs=None, depth=0, ed=float("inf"),
+      ewma=0.0, req_ewma=0.0, calm=0, nbytes=1 << 20, resident=True,
+      nnz=1000, rows=100):
+    if devs is None:
+        devs = (dev,) if kind == SINGLE else ()
+    return GraphState(
+        graph_id=gid, nnz=nnz, n_rows=rows, bytes=nbytes, resident=resident,
+        kind=kind, device_index=None if kind == SHARDED else dev,
+        device_indices=tuple(devs), queue_depth=depth, earliest_deadline=ed,
+        svc_ewma=ewma, svc_req_ewma=req_ewma, calm_polls=calm)
+
+
+def S(graphs, *, now=1000.0, n_devices=2, budget=64 << 20, used=None,
+      max_replicas=None, replicate_after_s=0.25, shrink_after=3,
+      max_batch=32):
+    used = tuple(used or [0] * n_devices)
+    return PolicyState(
+        now=now, n_devices=n_devices, budget_bytes=budget, used_bytes=used,
+        outstanding_s=tuple(0.0 for _ in range(n_devices)),
+        max_replicas=n_devices if max_replicas is None else max_replicas,
+        replicate_after_s=replicate_after_s,
+        replica_shrink_after=shrink_after, max_batch=max_batch,
+        graphs={g.graph_id: g for g in graphs})
+
+
+# ---------------------------------------------------------------------------
+# oracles: the pre-refactor engine code, transcribed verbatim onto the
+# snapshot (placer.place / _update_replication / _predicted_wait / poll /
+# _serve_queues, at commit d36f8ad)
+# ---------------------------------------------------------------------------
+
+def oracle_place(state, nbytes):
+    if nbytes > state.budget_bytes and state.n_devices > 1:
+        return (SHARDED, None)
+    d = max(range(state.n_devices),
+            key=lambda i: (state.budget_bytes - state.used_bytes[i], -i))
+    return (SINGLE, d)
+
+
+def oracle_replica_candidate(state, g):
+    # placer.replica_candidate(gid, rec.bytes)
+    if g.kind == SHARDED or not g.resident:
+        return None
+    free = [d for d in range(state.n_devices)
+            if d not in g.device_indices
+            and state.budget_bytes - state.used_bytes[d] >= g.bytes]
+    if not free:
+        return None
+    return max(free, key=lambda d: (state.budget_bytes - state.used_bytes[d],
+                                    -d))
+
+
+def oracle_replication(state, gid):
+    """The old ``_update_replication`` loop body, expressed as the
+    (action, device, new_calm) triple the engine now applies."""
+    g = state.graphs[gid]
+    backlog = g.svc_req_ewma * g.queue_depth
+    n_rep = len(g.device_indices)
+    if backlog > state.replicate_after_s and n_rep < state.max_replicas:
+        return (GROW, oracle_replica_candidate(state, g), None)
+    if n_rep > 1 and backlog <= state.replicate_after_s / 4:
+        calm = g.calm_polls + 1
+        if calm >= state.replica_shrink_after:
+            shed = max((d for d in g.device_indices if d != g.device_index),
+                       key=lambda d: (state.used_bytes[d], d))
+            return (SHRINK, shed, 0)
+        return (HOLD, None, calm)
+    return (HOLD, None, None)
+
+
+def oracle_absorb(load, g, est):
+    devs = g.device_indices
+    if g.kind == REPLICATED:
+        start = min(load.get(d, 0.0) for d in devs)
+        done = start + est
+        share = est / len(devs)
+        for d in devs:
+            load[d] = load.get(d, 0.0) + share
+    else:
+        start = max((load.get(d, 0.0) for d in devs), default=0.0)
+        done = start + est
+        for d in devs:
+            load[d] = done
+    return done
+
+
+def oracle_predicted_wait(state, graph_id, deadline=None):
+    g = state.graphs[graph_id]
+    est = g.svc_ewma
+    if g.kind is None:
+        return est
+    my_key = g.earliest_deadline
+    if deadline is not None:
+        my_key = min(my_key, deadline)
+    load = {}
+    order = sorted(((gid, s) for gid, s in state.graphs.items()
+                    if s.queue_depth and gid != graph_id),
+                   key=lambda t: (t[1].earliest_deadline, t[0]))
+    for gid, s in order:
+        if (s.earliest_deadline, gid) > (my_key, graph_id):
+            continue
+        if s.kind is None:
+            continue
+        oracle_absorb(load, s, s.svc_ewma)
+    return oracle_absorb(load, g, est)
+
+
+def oracle_due(state):
+    """The old ``poll`` dueness cut (without the max_batch threshold
+    union, which stayed engine-side)."""
+    order = sorted(((gid, s) for gid, s in state.graphs.items()
+                    if s.queue_depth),
+                   key=lambda t: (t[1].earliest_deadline, t[0]))
+    load, due_upto = {}, -1
+    for i, (gid, s) in enumerate(order):
+        done = oracle_absorb(load, s, s.svc_ewma)
+        slack = SVC_SAFETY * done + SVC_FLOOR_S
+        if s.earliest_deadline - slack <= state.now:
+            due_upto = i
+    return tuple(g for g, _ in order[:due_upto + 1])
+
+
+def oracle_dispatch_order(state, ids):
+    return tuple(sorted((g for g in ids if g in state.graphs),
+                 key=lambda g: (state.graphs[g].earliest_deadline, g)))
+
+
+# ---------------------------------------------------------------------------
+# recorded scenarios
+# ---------------------------------------------------------------------------
+
+POL = HeuristicPolicy()
+
+
+def assert_replication_equal(state, gid):
+    want = oracle_replication(state, gid)
+    got = POL.replication(state, gid)
+    assert (got.action, got.device_index, got.calm_polls) == want, (
+        gid, want, got)
+
+
+def test_place_worst_fit_and_sharded_route():
+    st = S([], used=[10 << 20, 5 << 20])
+    assert POL.place(st, "g", 1 << 20) == \
+        type(POL.place(st, "g", 1 << 20))(*oracle_place(st, 1 << 20))
+    # worst-fit: device 1 has more free budget
+    assert POL.place(st, "g", 1 << 20).device_index == 1
+    # ties break to the lowest index
+    st = S([], used=[7, 7, 7], n_devices=3)
+    assert POL.place(st, "g", 4).device_index == 0
+    # giant graph on a multi-device mesh -> sharded
+    giant = (64 << 20) + 1
+    assert POL.place(st, "g", giant).kind == SHARDED
+    # ...but single on a 1-device mesh (engine degrades to rotation)
+    st1 = S([], n_devices=1, used=[0])
+    assert POL.place(st1, "g", giant).kind == SINGLE
+    assert POL.place(st1, "g", giant).device_index == 0
+
+
+def test_place_fuzz_matches_oracle():
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        n = int(rng.integers(1, 5))
+        budget = int(rng.integers(1, 1 << 22))
+        used = [int(rng.integers(0, 1 << 22)) for _ in range(n)]
+        st = S([], n_devices=n, budget=budget, used=used)
+        nbytes = int(rng.integers(0, 1 << 23))
+        dec = POL.place(st, "g", nbytes)
+        assert (dec.kind, dec.device_index) == oracle_place(st, nbytes)
+
+
+def test_replication_grow_onto_coolest_fitting_device():
+    g = G("hot", depth=8, req_ewma=0.1, nbytes=4 << 20)  # backlog 0.8 s
+    st = S([g], n_devices=4, used=[8 << 20, 1 << 20, 3 << 20, 2 << 20])
+    assert_replication_equal(st, "hot")
+    dec = POL.replication(st, "hot")
+    assert dec.action == GROW and dec.device_index == 1  # most free budget
+    assert dec.calm_polls is None  # grow clears the hysteresis counter
+
+
+def test_replication_grow_skips_full_and_hosting_devices():
+    # device 1 hosts a replica already; device 2 has no room -> device 3
+    g = G("hot", kind=REPLICATED, dev=0, devs=(0, 1), depth=8, req_ewma=0.1,
+          nbytes=4 << 20)
+    full = (64 << 20) - (1 << 20)
+    st = S([g], n_devices=4, used=[0, 0, full, 2 << 20])
+    assert_replication_equal(st, "hot")
+    assert POL.replication(st, "hot").device_index == 3
+    # nothing fits anywhere -> GROW with device None (engine no-ops)
+    st = S([g], n_devices=3, used=[0, 0, full])
+    assert_replication_equal(st, "hot")
+    dec = POL.replication(st, "hot")
+    assert dec.action == GROW and dec.device_index is None
+
+
+def test_replication_respects_max_replicas_and_sharded():
+    g = G("hot", kind=REPLICATED, dev=0, devs=(0, 1), depth=50, req_ewma=1.0)
+    st = S([g], max_replicas=2)
+    assert_replication_equal(st, "hot")
+    assert POL.replication(st, "hot").action == HOLD
+    sharded = G("big", kind=SHARDED, devs=(0, 1), depth=50, req_ewma=1.0)
+    assert POL.replication(S([sharded]), "big").action == HOLD
+    # evicted graphs can be asked to grow but get no device
+    ev = G("cold", depth=50, req_ewma=1.0, resident=False)
+    dec = POL.replication(S([ev]), "cold")
+    assert dec.action == GROW and dec.device_index is None
+
+
+def test_replication_shrink_hysteresis_trace():
+    """The recorded calm-poll sequence: two calm polls HOLD with the
+    counter carried, the third SHRINKs the fullest secondary and resets
+    the counter — exactly the old ``_calm_polls`` dance."""
+    def at(calm):
+        g = G("h", kind=REPLICATED, dev=0, devs=(0, 1, 2), depth=0,
+              req_ewma=1.0, calm=calm)
+        return S([g], n_devices=3, used=[5, 9, 7], shrink_after=3)
+
+    for calm, want in [(0, (HOLD, None, 1)), (1, (HOLD, None, 2)),
+                       (2, (SHRINK, 1, 0))]:  # device 1: fullest secondary
+        assert_replication_equal(at(calm), "h")
+        got = POL.replication(at(calm), "h")
+        assert (got.action, got.device_index, got.calm_polls) == want
+    # mid-zone backlog (between /4 and the grow bar): counter clears
+    g = G("h", kind=REPLICATED, dev=0, devs=(0, 1), depth=1,
+          req_ewma=0.1, calm=2)  # backlog 0.1: > 0.0625, <= 0.25
+    dec = POL.replication(S([g]), "h")
+    assert (dec.action, dec.calm_polls) == (HOLD, None)
+    # shrink never sheds the primary: fullest device overall is 0 (the
+    # primary), so device 2 (fuller secondary) goes
+    g = G("h", kind=REPLICATED, dev=0, devs=(0, 1, 2), depth=0,
+          req_ewma=1.0, calm=2)
+    st = S([g], n_devices=3, used=[99, 3, 7])
+    assert_replication_equal(st, "h")
+    assert POL.replication(st, "h").device_index == 2
+
+
+def test_predicted_wait_serializes_colocated_edf_ahead():
+    """The recorded submit-shed scenario of test_overload, replayed pure:
+    g1's earlier deadline serializes ahead of g2 on the same device, so
+    g2's wait is both EWMAs stacked."""
+    g1 = G("g1", depth=1, ed=1000.5, ewma=1.0)
+    g2 = G("g2", depth=0, ewma=1.0)
+    st = S([g1, g2], n_devices=1, used=[0])
+    for dl in (1001.5, 1002.5, None):
+        assert POL.predicted_wait(st, "g2", dl) == \
+            oracle_predicted_wait(st, "g2", dl)
+    assert POL.predicted_wait(st, "g2", 1001.5) == pytest.approx(2.0)
+    # EDF-behind queues cannot delay us: g3's later deadline is skipped
+    g3 = G("g3", depth=1, ed=5000.0, ewma=10.0)
+    st = S([g1, g2, g3], n_devices=1, used=[0])
+    assert POL.predicted_wait(st, "g2", 1001.5) == pytest.approx(2.0)
+    assert POL.predicted_wait(st, "g2", 1001.5) == \
+        oracle_predicted_wait(st, "g2", 1001.5)
+
+
+def test_predicted_wait_replicated_splits_and_sharded_spans():
+    busy = G("busy", depth=1, ed=1000.0, ewma=50.0)
+    hot = G("hot", kind=REPLICATED, dev=0, devs=(0, 1), depth=0, ewma=10.0)
+    st = S([busy, hot])
+    # the replicated queue anchors on its idle replica (device 1), not
+    # behind busy's 50 s backlog on device 0
+    assert POL.predicted_wait(st, "hot", 1100.0) == \
+        oracle_predicted_wait(st, "hot", 1100.0) == pytest.approx(10.0)
+    big = G("big", kind=SHARDED, devs=(0, 1), depth=0, ewma=5.0)
+    st = S([busy, big])
+    # sharded starts when its busiest mesh device frees: behind busy
+    assert POL.predicted_wait(st, "big", 1100.0) == \
+        oracle_predicted_wait(st, "big", 1100.0) == pytest.approx(55.0)
+
+
+def test_shed_on_submit_boundary_and_reason():
+    g = G("g", depth=0, ewma=1.0)
+    st = S([g], n_devices=1, used=[0], now=1000.0)
+    dec = POL.shed_on_submit(st, "g", 1000.5)
+    assert dec.shed and "predicted wait" in dec.reason
+    assert dec.predicted_wait_s == pytest.approx(1.0)
+    assert not POL.shed_on_submit(st, "g", 1001.5).shed
+    # exactly at the boundary: now + wait == deadline is NOT shed
+    assert not POL.shed_on_submit(st, "g", 1001.0).shed
+
+
+def test_shed_at_dispatch_matches_old_gate():
+    g = G("g", depth=1, ed=1000.05, ewma=0.0)
+    st = S([g], n_devices=1, used=[0], now=1000.2)
+    # old gate: now + est > deadline, est = svc_ewma (0.0 here)
+    assert POL.shed_at_dispatch(st, "g", 1000.05).shed
+    assert not POL.shed_at_dispatch(st, "g", 1000.2).shed
+    st2 = S([G("g", depth=1, ed=1000.05, ewma=0.5)], n_devices=1,
+            used=[0], now=1000.0)
+    assert POL.shed_at_dispatch(st2, "g", 1000.05).shed
+    assert not POL.shed_at_dispatch(st2, "g", 1000.6).shed
+
+
+def test_due_queues_edf_prefix_trace():
+    """The recorded load-map scenarios of test_placement, replayed pure:
+    co-located queues stack, separate devices don't, sharded spans the
+    mesh, replicated follows its least-loaded clone."""
+    # stacked: a due at 984.99, b (behind a) due at 970.99
+    a = G("a", dev=0, depth=1, ed=1000.0, ewma=10.0)
+    b = G("b", dev=0, depth=1, ed=1001.0, ewma=10.0)
+    st = S([a, b], now=969.0)
+    assert POL.due_queues(st) == oracle_due(st) == ()
+    st = S([a, b], now=975.0)
+    assert POL.due_queues(st) == oracle_due(st) == ("a", "b")
+    # independent devices: only a at 985.5
+    b1 = G("b", dev=1, depth=1, ed=1001.0, ewma=10.0)
+    st = S([a, b1], now=975.0)
+    assert POL.due_queues(st) == oracle_due(st) == ()
+    st = S([a, b1], now=985.5)
+    assert POL.due_queues(st) == oracle_due(st) == ("a",)
+    # sharded synchronizes the mesh: b stacks behind s on device 1
+    s_ = G("s", kind=SHARDED, devs=(0, 1), depth=1, ed=1000.0, ewma=10.0)
+    st = S([s_, b1], now=975.0)
+    assert POL.due_queues(st) == oracle_due(st) == ("s", "b")
+    # replicated follows the least-loaded replica
+    busy = G("busy", dev=0, depth=1, ed=1000.0, ewma=50.0)
+    hot = G("hot", kind=REPLICATED, dev=0, devs=(0, 1), depth=1,
+            ed=1100.0, ewma=10.0)
+    st = S([busy, hot], now=1020.0)
+    assert POL.due_queues(st) == oracle_due(st) == ("busy",)
+    st = S([busy, hot], now=1090.0)
+    assert POL.due_queues(st) == oracle_due(st) == ("busy", "hot")
+
+
+def test_dispatch_order_edf_ties_by_graph_id():
+    gs = [G("z", depth=1, ed=5.0), G("a", depth=1, ed=5.0),
+          G("m", depth=1, ed=1.0), G("q", depth=1)]
+    st = S(gs)
+    got = POL.dispatch_order(st, ["z", "a", "m", "q"])
+    assert isinstance(got, DispatchOrder)
+    assert got.graph_ids == oracle_dispatch_order(st, ["z", "a", "m", "q"])
+    assert got.graph_ids == ("m", "a", "z", "q")
+
+
+# ---------------------------------------------------------------------------
+# randomized sweep across mixed meshes/routes
+# ---------------------------------------------------------------------------
+
+def _random_state(rng):
+    n_dev = int(rng.integers(1, 5))
+    budget = 64 << 20
+    graphs = []
+    for i in range(int(rng.integers(0, 6))):
+        kind = rng.choice([SINGLE, REPLICATED, SHARDED]
+                          if n_dev > 1 else [SINGLE])
+        if kind == SINGLE:
+            devs = (int(rng.integers(0, n_dev)),)
+        elif kind == SHARDED:
+            devs = tuple(range(n_dev))
+        else:
+            k = int(rng.integers(2, n_dev + 1))
+            devs = tuple(int(d) for d in
+                         rng.choice(n_dev, size=k, replace=False))
+        graphs.append(G(
+            f"g{i}", kind=kind, dev=devs[0], devs=devs,
+            depth=int(rng.integers(0, 6)),
+            ed=float("inf") if rng.random() < 0.3
+            else 1000.0 + float(rng.random()) * 30.0,
+            ewma=float(rng.random()) * 10.0,
+            req_ewma=float(rng.random()),
+            calm=int(rng.integers(0, 4)),
+            nbytes=int(rng.integers(1, budget // 2)),
+            resident=bool(rng.random() < 0.9)))
+    used = [int(rng.integers(0, budget)) for _ in range(n_dev)]
+    return S(graphs, now=1000.0 + float(rng.random()) * 40.0,
+             n_devices=n_dev, used=used,
+             max_replicas=int(rng.integers(1, n_dev + 1)),
+             shrink_after=int(rng.integers(1, 4)))
+
+
+def test_fuzz_all_decisions_match_oracle():
+    rng = np.random.default_rng(42)
+    for _ in range(300):
+        st = _random_state(rng)
+        ids = list(st.graphs)
+        assert POL.due_queues(st) == oracle_due(st)
+        pending = [g for g in ids if st.graphs[g].queue_depth]
+        assert POL.dispatch_order(st, pending).graph_ids == \
+            oracle_dispatch_order(st, pending)
+        nbytes = int(rng.integers(0, (64 << 20) * 2))
+        assert (POL.place(st, "new", nbytes).kind,
+                POL.place(st, "new", nbytes).device_index) == \
+            oracle_place(st, nbytes)
+        for g in ids:
+            s = st.graphs[g]
+            if s.kind is not None and s.kind != SHARDED:
+                got = POL.replication(st, g)
+                assert isinstance(got, ReplicaDecision)
+                assert (got.action, got.device_index, got.calm_polls) == \
+                    oracle_replication(st, g)
+            dl = None if rng.random() < 0.3 else \
+                st.now + float(rng.random()) * 20.0
+            assert POL.predicted_wait(st, g, dl) == \
+                pytest.approx(oracle_predicted_wait(st, g, dl), abs=1e-12)
+            if dl is not None:
+                wait = oracle_predicted_wait(st, g, dl)
+                assert POL.shed_on_submit(st, g, dl).shed == \
+                    (st.now + wait > dl)
+                assert POL.shed_at_dispatch(st, g, dl).shed == \
+                    (st.now + s.svc_ewma > dl)
+
+
+def test_absorb_load_shared_helper_matches_oracle():
+    rng = np.random.default_rng(7)
+    for _ in range(100):
+        n_dev = int(rng.integers(1, 5))
+        kind = rng.choice([SINGLE, REPLICATED, SHARDED])
+        k = n_dev if kind == SHARDED else int(rng.integers(1, n_dev + 1))
+        devs = tuple(int(d) for d in rng.choice(n_dev, size=k, replace=False))
+        if kind == REPLICATED and not devs:
+            continue
+        g = G("g", kind=kind, dev=devs[0], devs=devs)
+        la = {int(d): float(rng.random()) for d in
+              rng.choice(n_dev, size=int(rng.integers(0, n_dev + 1)),
+                         replace=False)}
+        lb = dict(la)
+        est = float(rng.random())
+        assert absorb_load(la, kind, devs, est) == oracle_absorb(lb, g, est)
+        assert la == lb

@@ -605,6 +605,10 @@ def _gate_rows():
         dict(name="openloop/steady/p99", us_per_call=1000.0, derived=""),
         dict(name="openloop/steady/goodput", us_per_call=90.0,
              derived="identity=1;submitted=10;served=8;shed=1;rejected=1"),
+        dict(name="openloop/steady_learned/goodput", us_per_call=88.0,
+             derived="identity=1;submitted=10;served=8;shed=1;rejected=1"),
+        dict(name="openloop/steady_learned/pred_err", us_per_call=40.0,
+             derived="n_scored=24;n_samples=30;fallbacks=2;fitted=1"),
         dict(name="streaming/small_delta/repair", us_per_call=2000.0,
              derived="speedup=6.00x;bit_identical=1;rebuild_us=12000"),
         dict(name="streaming/zero_gap", us_per_call=500.0,
@@ -688,6 +692,36 @@ def test_gate_p99_ceiling_edges():
         "openloop/steady/p99": dict(us_per_call=3000.1)})
     problems = gate.check(above, ref, tolerance=3.0)
     assert any("REGRESSION" in p and "p99" in p for p in problems)
+
+
+def test_gate_learned_head_to_head():
+    ref = _gate_payload(smoke=False)
+    # goodput below the smoke-internal heuristic floor (90 / 3.0 = 30)
+    bad = _gate_payload(**{"openloop/steady_learned/goodput": dict(
+        us_per_call=29.9)})
+    problems = gate.check(bad, ref, tolerance=3.0)
+    assert any("REGRESSION" in p and "learned-policy" in p for p in problems)
+    # zero scored predictions: the accuracy report vouches for nothing
+    unscored = _gate_payload(**{"openloop/steady_learned/pred_err": dict(
+        derived="n_scored=0;n_samples=0;fallbacks=9;fitted=0")})
+    problems = gate.check(unscored, ref, tolerance=3.0)
+    assert any(p.startswith("DEGENERATE") and "pred_err" in p
+               for p in problems)
+    # error ceiling is max(absolute, tolerance x reference): with the
+    # fixture reference at 40% the 150% absolute ceiling dominates
+    wild = _gate_payload(**{"openloop/steady_learned/pred_err": dict(
+        us_per_call=150.1)})
+    problems = gate.check(wild, ref, tolerance=3.0)
+    assert any("REGRESSION" in p and "prediction error" in p
+               for p in problems)
+    at_ceiling = _gate_payload(**{"openloop/steady_learned/pred_err": dict(
+        us_per_call=150.0)})
+    assert gate.check(at_ceiling, ref, tolerance=3.0) == []
+    # both head-to-head rows absent: the gate reports itself blind
+    missing = dict(smoke=True, rows=[r for r in _gate_rows()
+                                     if "steady_learned" not in r["name"]])
+    problems = gate.check(missing, ref, tolerance=3.0)
+    assert any("MISSING" in p and "steady_learned" in p for p in problems)
 
 
 def test_gate_accounting_identity():

@@ -7,7 +7,7 @@ import numpy as np
 from repro.core import autotuner, gcn, profiler, schedule
 from repro.graphs import synth
 from repro.kernels import spmm_pallas
-from repro.serving.engine import ServeEngine
+from repro.models.transformer_serve import ServeEngine
 from repro import configs
 from repro.models import transformer as tr
 
