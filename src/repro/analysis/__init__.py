@@ -1,0 +1,18 @@
+"""repro-lint: AST-based invariant checks for the AWB-GCN reproduction.
+
+The passes machine-check the invariants the codebase lives by (DESIGN.md
+§14): no host syncs or tracer-dependent Python control flow inside
+``@jax.jit``-reachable bodies, ``# guarded-by:`` lock discipline on the
+serving engine's swap-protected state, a fixed lock-acquisition order,
+and counters settled only through annotated settlement helpers or
+``finally`` blocks. Findings gate CI against ``waivers.toml``.
+
+Pure stdlib on purpose: the CI lint job runs without jax/numpy.
+
+    python -m repro.analysis src benchmarks
+"""
+
+from repro.analysis.driver import run_analysis, self_check
+from repro.analysis.findings import Finding, Waiver, load_waivers
+
+__all__ = ["Finding", "Waiver", "load_waivers", "run_analysis", "self_check"]

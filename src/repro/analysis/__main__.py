@@ -1,0 +1,100 @@
+"""CLI driver: ``python -m repro.analysis [paths...]``.
+
+Exit status 0 = no unwaived findings (and, with ``--self-check``, every
+fixture still triggers exactly its stated rules); 1 otherwise. The CI
+lint job runs both modes (DESIGN.md §14)."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis.driver import (
+    ALL_RULES,
+    render_report,
+    run_analysis,
+    self_check,
+)
+
+_DEFAULT_WAIVERS = Path(__file__).with_name("waivers.toml")
+_DEFAULT_FIXTURES = Path("tests") / "fixtures" / "analysis"
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST-based JAX-hazard, lock-discipline and "
+        "counter-settlement checks (DESIGN.md §14)",
+    )
+    parser.add_argument(
+        "paths",
+        nargs="*",
+        default=["src", "benchmarks"],
+        help="files or directories to analyze (default: src benchmarks)",
+    )
+    parser.add_argument(
+        "--waivers",
+        default=str(_DEFAULT_WAIVERS),
+        help="waiver TOML (default: the committed analysis/waivers.toml)",
+    )
+    parser.add_argument(
+        "--no-waivers",
+        action="store_true",
+        help="report every finding, waived or not",
+    )
+    parser.add_argument(
+        "--self-check",
+        action="store_true",
+        help="verify every fixture still triggers exactly its stated rules",
+    )
+    parser.add_argument(
+        "--fixtures",
+        default=str(_DEFAULT_FIXTURES),
+        help="fixture directory for --self-check",
+    )
+    parser.add_argument("--json", action="store_true", help="machine output")
+    parser.add_argument(
+        "--list-rules", action="store_true", help="print rule ids and exit"
+    )
+    parser.add_argument(
+        "-v", "--verbose", action="store_true", help="also print waived findings"
+    )
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rule in ALL_RULES:
+            print(rule)
+        return 0
+
+    if args.self_check:
+        problems = self_check(args.fixtures)
+        for p in problems:
+            print(p)
+        if not problems:
+            print("self-check: every fixture triggers exactly its stated rules")
+        return 1 if problems else 0
+
+    waivers_path = None if args.no_waivers else args.waivers
+    report = run_analysis(args.paths, waivers_path)
+    if args.json:
+        print(
+            json.dumps(
+                {
+                    "unwaived": [f.__dict__ for f in report.unwaived],
+                    "waived": [f.__dict__ for f in report.waived],
+                    "stale_waivers": [w.__dict__ for w in report.stale_waivers],
+                    "errors": report.errors,
+                },
+                indent=2,
+            )
+        )
+    else:
+        for line in render_report(report, verbose=args.verbose):
+            print(line)
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,257 @@
+"""Jit-site discovery and the lightweight per-module call-graph walk.
+
+Roots are every function a ``jax.jit`` decoration site names in the
+module: ``@jax.jit`` / ``@functools.partial(jax.jit, ...)`` decorators,
+``jax.jit(fn)`` / ``jax.jit(self._method)`` wrapping calls, lambdas
+passed to ``jax.jit``, and ``jax.vmap`` chains inside the jit call
+(``jax.jit(jax.vmap(ex._forward_impl, ...))``). ``static_argnames``
+travel with each root — those parameters are Python values, not
+tracers, so branching on them is legal.
+
+Reachability is transitive over *references*, not just call
+expressions: a reachable body that mentions a module-level function by
+name (e.g. hands ``functools.partial(_kernel, ...)`` to
+``pl.pallas_call``) pulls that function into the jit-reachable set, and
+``self._method`` references pull in same-class methods. Cross-module
+edges are intentionally not followed — the walk stays cheap and each
+module is checked against its own jit sites.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, FrozenSet, List, Optional, Set, Tuple
+
+from repro.analysis.modules import FuncInfo, FuncNode, ModuleInfo
+
+
+@dataclasses.dataclass
+class JitRoot:
+    func: FuncInfo
+    static_argnames: FrozenSet[str]
+    site_line: int
+    #: True when named at a jit decoration site; False for helpers pulled
+    #: in transitively (their keyword-only params are treated as
+    #: partial-bound statics by the hazard pass)
+    is_root: bool = True
+
+
+def _static_argnames(call: ast.Call) -> FrozenSet[str]:
+    for kw in call.keywords:
+        if kw.arg != "static_argnames":
+            continue
+        names: Set[str] = set()
+        value = kw.value
+        elts = value.elts if isinstance(value, (ast.Tuple, ast.List)) else [value]
+        for e in elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                names.add(e.value)
+        return frozenset(names)
+    return frozenset()
+
+
+def _is_jit(module: ModuleInfo, node: ast.AST) -> bool:
+    return module.resolves_to(node, "jax.jit")
+
+
+def _partial_of_jit(module: ModuleInfo, node: ast.AST) -> Optional[ast.Call]:
+    """``functools.partial(jax.jit, ...)`` → the partial call node."""
+    if (
+        isinstance(node, ast.Call)
+        and module.resolves_to(node.func, "functools.partial")
+        and node.args
+        and _is_jit(module, node.args[0])
+    ):
+        return node
+    return None
+
+
+def _unwrap_transforms(module: ModuleInfo, node: ast.AST) -> ast.AST:
+    """Peel ``jax.jit`` / ``jax.vmap`` / ``jax.grad`` / ``functools.
+    partial`` wrappers off a function expression."""
+    wrappers = (
+        "jax.jit",
+        "jax.vmap",
+        "jax.grad",
+        "jax.value_and_grad",
+        "jax.custom_vjp",
+        "functools.partial",
+    )
+    while (
+        isinstance(node, ast.Call)
+        and node.args
+        and any(module.resolves_to(node.func, w) for w in wrappers)
+    ):
+        node = node.args[0]
+    return node
+
+
+def _resolve_target(
+    module: ModuleInfo,
+    node: ast.AST,
+    enclosing_class: Optional[str],
+    _visited: Optional[Set[str]] = None,
+) -> List[FuncInfo]:
+    """Function(s) a jit argument expression denotes within this module.
+
+    Follows one level of dynamic method aliasing per step
+    (``self._spmm_impl = self._gather_impl if ... else self._onehot_impl``
+    then ``jax.jit(self._spmm_impl)``), bounded by a visited set."""
+    visited = _visited if _visited is not None else set()
+    node = _unwrap_transforms(module, node)
+    if isinstance(node, ast.IfExp):
+        return _resolve_target(
+            module, node.body, enclosing_class, visited
+        ) + _resolve_target(module, node.orelse, enclosing_class, visited)
+    if isinstance(node, ast.BoolOp):
+        out: List[FuncInfo] = []
+        for v in node.values:
+            out.extend(_resolve_target(module, v, enclosing_class, visited))
+        return out
+    if isinstance(node, ast.Name):
+        info = module.functions.get(node.id)
+        if info is not None:
+            return [info]
+        # nested/local function: match by bare name, conservatively
+        return list(module.methods_by_name.get(node.id, []))
+    if isinstance(node, ast.Attribute):
+        # ``self._m`` prefers the enclosing class; ``ex._m`` (any other
+        # receiver) conservatively maps to every method of that name
+        candidates = module.methods_by_name.get(node.attr, [])
+        if (
+            isinstance(node.value, ast.Name)
+            and node.value.id == "self"
+            and enclosing_class is not None
+        ):
+            own = [c for c in candidates if c.class_name == enclosing_class]
+            if own:
+                return own
+        if candidates:
+            return list(candidates)
+        return _resolve_attr_alias(module, node.attr, visited)
+    if isinstance(node, ast.Lambda):
+        qual = f"<lambda:{node.lineno}>"
+        info = FuncInfo(qual, node, enclosing_class)
+        module.functions.setdefault(qual, info)
+        return [info]
+    return []
+
+
+def _resolve_attr_alias(
+    module: ModuleInfo, attr: str, visited: Set[str]
+) -> List[FuncInfo]:
+    """Resolve a dynamically-bound callable attribute by following every
+    ``<recv>.<attr> = <expr>`` assignment in the module."""
+    if attr in visited:
+        return []
+    visited.add(attr)
+    out: List[FuncInfo] = []
+    for node in ast.walk(module.tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        for t in node.targets:
+            if isinstance(t, ast.Attribute) and t.attr == attr:
+                cls = None
+                fn = module.enclosing_function(t)
+                if fn is not None:
+                    info = module.functions.get(module.qualname_of(fn))
+                    cls = info.class_name if info else None
+                out.extend(_resolve_target(module, node.value, cls, visited))
+    return out
+
+
+def find_jit_roots(module: ModuleInfo) -> List[JitRoot]:
+    roots: List[JitRoot] = []
+    seen: Set[Tuple[int, int]] = set()
+
+    def add(info: FuncInfo, static: FrozenSet[str], line: int) -> None:
+        key = (id(info.node), 0)
+        if key in seen:
+            return
+        seen.add(key)
+        roots.append(JitRoot(info, static, line))
+
+    # decorator sites
+    for info in module.functions.values():
+        node = info.node
+        for dec in getattr(node, "decorator_list", []):
+            if _is_jit(module, dec):
+                add(info, frozenset(), dec.lineno)
+            elif isinstance(dec, ast.Call) and _is_jit(module, dec.func):
+                add(info, _static_argnames(dec), dec.lineno)
+            else:
+                partial = _partial_of_jit(module, dec)
+                if partial is not None:
+                    add(info, _static_argnames(partial), dec.lineno)
+
+    # wrapping-call sites: jax.jit(<fn expr>, ...)
+    for node in ast.walk(module.tree):
+        if not (isinstance(node, ast.Call) and _is_jit(module, node.func)):
+            continue
+        if not node.args:
+            continue
+        enclosing = module.enclosing_function(node)
+        enclosing_class = None
+        if enclosing is not None:
+            qual = module.qualname_of(enclosing)
+            info = module.functions.get(qual)
+            enclosing_class = info.class_name if info else None
+        static = _static_argnames(node)
+        for target in _resolve_target(module, node.args[0], enclosing_class):
+            add(target, static, node.lineno)
+    return roots
+
+
+def _referenced_functions(module: ModuleInfo, info: FuncInfo) -> Set[str]:
+    """Qualnames of module functions the body of ``info`` references."""
+    refs: Set[str] = set()
+    body = info.node.body
+    nodes = body if isinstance(body, list) else [body]  # Lambda body is an expr
+    for stmt in nodes:
+        for node in ast.walk(stmt):
+            if isinstance(node, FuncNode):  # nested defs walk on their own
+                continue
+            if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+                target = module.functions.get(node.id)
+                if target is not None and target.class_name is None:
+                    refs.add(target.qualname)
+            elif (
+                isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id in ("self", "cls")
+            ):
+                cands = [
+                    c
+                    for c in module.methods_by_name.get(node.attr, [])
+                    if c.class_name == info.class_name
+                ]
+                if not cands:
+                    # dynamically-bound alias (``self._spmm = jax.jit(...)``)
+                    cands = _resolve_attr_alias(module, node.attr, set())
+                for cand in cands:
+                    refs.add(cand.qualname)
+    return refs
+
+
+def jit_reachable(module: ModuleInfo) -> Dict[str, JitRoot]:
+    """qualname -> the root it is reachable from (first wins), closed
+    transitively over same-module references."""
+    reachable: Dict[str, JitRoot] = {}
+    queue: List[Tuple[FuncInfo, JitRoot]] = []
+    for root in find_jit_roots(module):
+        if root.func.qualname not in reachable:
+            reachable[root.func.qualname] = root
+            queue.append((root.func, root))
+    while queue:
+        info, root = queue.pop()
+        for qual in _referenced_functions(module, info):
+            if qual in reachable:
+                continue
+            callee = module.functions[qual]
+            # static_argnames do not propagate: a callee's params are
+            # whatever the caller passed, traced until proven otherwise
+            sub = JitRoot(callee, frozenset(), root.site_line, is_root=False)
+            reachable[qual] = sub
+            queue.append((callee, sub))
+    return reachable

@@ -1,0 +1,120 @@
+"""Counter-settlement pass: ``stats()`` counters move exactly once.
+
+Every mutation of a ``.counters[...]`` entry (or reassignment of the
+whole ``.counters`` dict) must happen inside a ``finally:`` block or
+inside a function annotated as a settlement helper — a comment on, or
+directly above, its ``def`` line:
+
+    # counter-settlement: <names or *>
+    def _count(self, key, n=1): ...
+
+The exactly-once discipline PRs 5–6 enforce by hand: served-work
+counters settle only when completion is proven, failure counters settle
+on the failure path — routing every bump through an annotated helper
+(or a ``finally``) makes an ad-hoc ``self.counters["x"] += 1`` in new
+code a lint failure instead of a review catch.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import List, Optional, Tuple
+
+from repro.analysis.findings import Finding
+from repro.analysis.modules import FuncNode, ModuleInfo
+
+RULE_SETTLEMENT = "counter-settlement"
+
+_SETTLEMENT_RE = re.compile(r"counter-settlement(?::\s*(.*))?")
+
+
+def _settlement_annotation(module: ModuleInfo, func: ast.AST) -> Optional[str]:
+    """The annotation's name list, if the def (or the line above it,
+    skipping decorators) carries one."""
+    first = min(
+        [func.lineno] + [d.lineno for d in getattr(func, "decorator_list", [])]
+    )
+    for line in (func.lineno, first, first - 1):
+        m = _SETTLEMENT_RE.search(module.comment_on(line))
+        if m:
+            return (m.group(1) or "*").strip() or "*"
+    return None
+
+
+def _counter_target(node: ast.AST) -> Optional[Tuple[ast.AST, Optional[str]]]:
+    """(node, key) when ``node`` is a ``<recv>.counters[...]`` subscript
+    target; key is the literal string index when there is one."""
+    if (
+        isinstance(node, ast.Subscript)
+        and isinstance(node.value, ast.Attribute)
+        and node.value.attr == "counters"
+    ):
+        key = None
+        if isinstance(node.slice, ast.Constant) and isinstance(node.slice.value, str):
+            key = node.slice.value
+        return node, key
+    return None
+
+
+def _in_finally(module: ModuleInfo, node: ast.AST) -> bool:
+    cur = node
+    parent = module.parents.get(cur)
+    while parent is not None:
+        if isinstance(parent, ast.Try) and any(
+            cur is s or _contains(s, cur) for s in parent.finalbody
+        ):
+            return True
+        cur, parent = parent, module.parents.get(parent)
+    return False
+
+
+def _contains(root: ast.AST, node: ast.AST) -> bool:
+    return any(n is node for n in ast.walk(root))
+
+
+def check_module(module: ModuleInfo) -> List[Finding]:
+    findings: List[Finding] = []
+    for node in ast.walk(module.tree):
+        mutated: Optional[Tuple[ast.AST, Optional[str]]] = None
+        if isinstance(node, ast.AugAssign):
+            mutated = _counter_target(node.target)
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                mutated = mutated or _counter_target(t)
+                # whole-dict replacement also settles every counter
+                if (
+                    isinstance(t, ast.Attribute)
+                    and t.attr == "counters"
+                    and not isinstance(node.value, ast.Name)
+                ):
+                    mutated = mutated or (t, None)
+        if mutated is None:
+            continue
+        target_node, key = mutated
+        func = module.enclosing_function(node)
+        if func is not None and func.name == "__init__":
+            continue  # construction defines the counters, nothing settles
+        if func is not None:
+            names = _settlement_annotation(module, func)
+            if names is not None:
+                allowed = {n.strip() for n in names.split(",")}
+                if "*" in allowed or key is None or key in allowed:
+                    continue
+        if _in_finally(module, node):
+            continue
+        what = f'counters[{key!r}]' if key is not None else "counters"
+        findings.append(
+            Finding(
+                rule=RULE_SETTLEMENT,
+                path=module.path,
+                line=node.lineno,
+                symbol=module.qualname_of(node),
+                message=(
+                    f"mutation of {what} outside a settlement helper or "
+                    "`finally` block — annotate the helper with "
+                    "`# counter-settlement: <names>` or route through one"
+                ),
+            )
+        )
+    return findings

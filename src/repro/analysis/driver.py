@@ -1,0 +1,136 @@
+"""Pass orchestration: collect files, run every rule, apply waivers.
+
+``--self-check`` mode re-runs the passes over the committed fixture
+files (``tests/fixtures/analysis/``); each fixture's ``# expect:``
+header states exactly which rules must fire on it, so a refactor that
+silently blinds a rule fails CI the same way a real finding does.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from pathlib import Path
+from typing import Iterable, List, Sequence
+
+from repro.analysis import counters, jax_hazards, locks
+from repro.analysis.findings import Finding, Waiver, load_waivers, split_findings
+from repro.analysis.modules import ModuleInfo, parse_module
+
+_PASSES = (jax_hazards.check_module, locks.check_module, counters.check_module)
+
+ALL_RULES = (
+    jax_hazards.RULE_NP_CALL,
+    jax_hazards.RULE_TRACED_BRANCH,
+    jax_hazards.RULE_HOST_SYNC,
+    jax_hazards.RULE_MUTABLE_GLOBAL,
+    locks.RULE_GUARD,
+    locks.RULE_ORDER,
+    counters.RULE_SETTLEMENT,
+)
+
+_EXPECT_RE = re.compile(r"#\s*expect:\s*(.*)")
+
+
+@dataclasses.dataclass
+class Report:
+    findings: List[Finding]
+    unwaived: List[Finding]
+    waived: List[Finding]
+    stale_waivers: List[Waiver]
+    errors: List[str]
+
+    @property
+    def ok(self) -> bool:
+        return not self.unwaived and not self.errors
+
+
+def collect_files(paths: Sequence[str]) -> List[Path]:
+    files: List[Path] = []
+    for raw in paths:
+        p = Path(raw)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            files.append(p)
+    return files
+
+
+def analyze_file(path: Path) -> List[Finding]:
+    module = parse_module(str(path))
+    findings: List[Finding] = []
+    for check in _PASSES:
+        findings.extend(check(module))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))
+
+
+def run_analysis(paths: Sequence[str], waivers_path=None) -> Report:
+    waivers = load_waivers(waivers_path) if waivers_path else []
+    findings: List[Finding] = []
+    errors: List[str] = []
+    for path in collect_files(paths):
+        try:
+            findings.extend(analyze_file(path))
+        except SyntaxError as e:  # pragma: no cover - tree is py-clean
+            errors.append(f"{path}: syntax error: {e}")
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    unwaived, waived, stale = split_findings(findings, waivers)
+    return Report(findings, unwaived, waived, stale, errors)
+
+
+def self_check(fixtures_dir) -> List[str]:
+    """Run every fixture and return mismatch descriptions (empty = pass).
+
+    Fixture header: ``# expect: rule-a, rule-b`` or ``# expect: none``.
+    The comparison is on the *set* of rules fired — a fixture that stops
+    triggering its rule (or starts triggering another) fails."""
+    problems: List[str] = []
+    fixtures = sorted(Path(fixtures_dir).glob("*.py"))
+    if not fixtures:
+        return [f"no fixtures found under {fixtures_dir}"]
+    for path in fixtures:
+        header = path.read_text(encoding="utf-8").splitlines()
+        expected: set = set()
+        stated = False
+        for line in header[:5]:
+            m = _EXPECT_RE.search(line)
+            if m:
+                stated = True
+                names = m.group(1).strip()
+                if names.lower() != "none":
+                    expected = {n.strip() for n in names.split(",") if n.strip()}
+                break
+        if not stated:
+            problems.append(f"{path}: missing `# expect:` header")
+            continue
+        unknown = expected - set(ALL_RULES)
+        if unknown:
+            problems.append(f"{path}: unknown rules in header: {sorted(unknown)}")
+            continue
+        fired = {f.rule for f in analyze_file(path)}
+        if fired != expected:
+            problems.append(
+                f"{path}: expected {sorted(expected) or ['none']}, "
+                f"fired {sorted(fired) or ['none']}"
+            )
+    return problems
+
+
+def render_report(report: Report, verbose: bool = False) -> Iterable[str]:
+    for err in report.errors:
+        yield f"ERROR: {err}"
+    for f in report.unwaived:
+        yield f.render()
+    if verbose:
+        for f in report.waived:
+            yield f"waived: {f.render()}"
+    for w in report.stale_waivers:
+        yield (
+            f"warning: stale waiver ({w.rule}, {w.path}, {w.symbol}) "
+            "matches no finding — remove it"
+        )
+    yield (
+        f"{len(report.findings)} finding(s): "
+        f"{len(report.unwaived)} unwaived, {len(report.waived)} waived, "
+        f"{len(report.stale_waivers)} stale waiver(s)"
+    )

@@ -1,0 +1,185 @@
+"""Runtime race-assertion mode (DESIGN.md §14).
+
+The static lock pass proves *lexical* discipline; this module checks the
+same contract dynamically: inside a ``guarded(engine)`` scope, every
+write to a ``guarded-by:``-annotated field of a *published* record must
+happen on a thread that currently holds the named lock. The guarded
+field map is parsed at runtime from the engine module's own source via
+``locks.collect_guarded`` — one source of truth with the static pass,
+so an annotation added to the engine is enforced by both without
+touching this file.
+
+Mechanics: the engine's lock attributes are swapped for ``OwnedLock``
+wrappers that record the holder thread, and ``__setattr__`` on the
+annotated classes is patched to consult them. Records still under
+construction (not yet reachable from the engine's registry) are exempt,
+mirroring the static pass's fresh-object rule. By default violations
+are *recorded* (``.violations``) so a fuzz harness can drive many
+threads and assert at the end; ``strict=True`` raises at the faulting
+write, turning any reproduced race into a stack trace that names the
+field and the missing lock.
+
+Container *mutations* (``rec.replicas[d] = unit``) are attribute reads,
+not writes — the static pass covers those; this mode catches the
+torn-publication class of bug (field written without the swap lock).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import sys
+import threading
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.locks import collect_guarded
+from repro.analysis.modules import ModuleInfo
+
+
+class OwnedLock:
+    """A ``threading.Lock`` that knows which thread holds it."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._owner: Optional[int] = None
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        got = self._lock.acquire(blocking, timeout)
+        if got:
+            self._owner = threading.get_ident()
+        return got
+
+    def release(self) -> None:
+        self._owner = None
+        self._lock.release()
+
+    def __enter__(self) -> "OwnedLock":
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def locked(self) -> bool:
+        return self._lock.locked()
+
+    def held_by_me(self) -> bool:
+        return self._owner == threading.get_ident()
+
+
+class RaceViolation(AssertionError):
+    pass
+
+
+@dataclasses.dataclass
+class Violation:
+    thread: str
+    cls: str
+    field: str
+    lock: str
+
+    def render(self) -> str:
+        return (
+            f"thread {self.thread!r} wrote {self.cls}.{self.field} "
+            f"without holding `{self.lock}`"
+        )
+
+
+class guarded:
+    """Context manager arming the race assertions on one engine.
+
+    ``with guarded(engine) as g: ... ; assert not g.violations``
+    """
+
+    def __init__(self, engine, *, strict: bool = False):
+        self.engine = engine
+        self.strict = strict
+        self.violations: List[Violation] = []
+        self._fields = self._guarded_fields(type(engine))
+        self._patched: List[Tuple[type, Optional[object]]] = []
+        self._saved_locks: Dict[str, object] = {}
+
+    # ---- guarded-field map, from the engine module's annotations -------
+
+    @staticmethod
+    def _guarded_fields(engine_cls) -> Dict[str, Dict[str, str]]:
+        mod = sys.modules[engine_cls.__module__]
+        path = inspect.getsourcefile(mod)
+        with open(path, "r", encoding="utf-8") as fh:
+            info = ModuleInfo(path, fh.read())
+        return collect_guarded(info)
+
+    # ---- arm / disarm ---------------------------------------------------
+
+    def __enter__(self) -> "guarded":
+        engine = self.engine
+        mod = sys.modules[type(engine).__module__]
+        # swap every named lock for an owner-tracking wrapper
+        for fields in self._fields.values():
+            for lock_name in fields.values():
+                if lock_name not in self._saved_locks and hasattr(
+                    engine, lock_name
+                ):
+                    self._saved_locks[lock_name] = getattr(engine, lock_name)
+                    object.__setattr__(engine, lock_name, OwnedLock())
+        # patch __setattr__ on each annotated class found in the module
+        for cls_name in self._fields:
+            cls = getattr(mod, cls_name, None)
+            if cls is None and cls_name == type(engine).__name__:
+                cls = type(engine)
+            if not isinstance(cls, type):
+                continue
+            self._patched.append((cls, cls.__dict__.get("__setattr__")))
+            cls.__setattr__ = self._make_setattr(cls_name)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        for cls, original in self._patched:
+            if original is None:
+                del cls.__setattr__
+            else:
+                cls.__setattr__ = original
+        self._patched.clear()
+        for lock_name, lock in self._saved_locks.items():
+            object.__setattr__(self.engine, lock_name, lock)
+        self._saved_locks.clear()
+
+    # ---- the check -------------------------------------------------------
+
+    def _make_setattr(self, cls_name: str):
+        fields = self._fields[cls_name]
+        checker = self
+
+        def guarded_setattr(obj, name, value):
+            lock_name = fields.get(name)
+            if (
+                lock_name is not None
+                and name not in checker._saved_locks
+                and checker._published(obj)
+            ):
+                lock = getattr(checker.engine, lock_name, None)
+                if isinstance(lock, OwnedLock) and not lock.held_by_me():
+                    checker._violate(cls_name, name, lock_name)
+            object.__setattr__(obj, name, value)
+
+        return guarded_setattr
+
+    def _published(self, obj) -> bool:
+        """Is ``obj`` reachable by other threads? The engine itself
+        always is; a record only once the engine registry holds it
+        (constructor writes on a fresh record are thread-local)."""
+        if obj is self.engine:
+            return True
+        registry = getattr(self.engine, "_graphs", None)
+        if registry is None:
+            return True  # unknown engine shape: err on checking
+        try:
+            return any(r is obj for r in list(registry.values()))
+        except RuntimeError:  # registry resized mid-iteration: retry once
+            return any(r is obj for r in list(registry.values()))
+
+    def _violate(self, cls_name: str, field: str, lock_name: str) -> None:
+        v = Violation(threading.current_thread().name, cls_name, field, lock_name)
+        self.violations.append(v)
+        if self.strict:
+            raise RaceViolation(v.render())

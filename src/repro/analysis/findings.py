@@ -1,0 +1,87 @@
+"""Finding/waiver model and the TOML waiver file.
+
+A waiver matches on ``(rule, path, symbol)`` — line numbers drift with
+every edit, the enclosing symbol does not. Every waiver must carry a
+one-line ``reason``; an entry that matches nothing is reported as stale
+(warning, not failure) so the file stays honest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from pathlib import PurePosixPath
+from typing import Iterable, List, Sequence, Tuple
+
+try:  # py3.11+
+    import tomllib
+except ModuleNotFoundError:  # pragma: no cover - py3.10 fallback
+    import tomli as tomllib
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str  # posix-style, as passed on the command line
+    line: int
+    symbol: str  # enclosing qualified name, e.g. "Engine._admit"
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} [{self.symbol}] {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Waiver:
+    rule: str
+    path: str
+    symbol: str
+    reason: str
+
+    def matches(self, finding: Finding) -> bool:
+        if self.rule != finding.rule or self.symbol != finding.symbol:
+            return False
+        # suffix match so waivers written repo-relative keep matching
+        # when the analyzer is invoked from elsewhere with longer paths
+        fp = PurePosixPath(finding.path.replace("\\", "/"))
+        wp = PurePosixPath(self.path)
+        return fp == wp or fp.as_posix().endswith("/" + wp.as_posix())
+
+
+def load_waivers(path) -> List[Waiver]:
+    with open(path, "rb") as fh:
+        data = tomllib.load(fh)
+    waivers = []
+    for i, entry in enumerate(data.get("waiver", [])):
+        missing = {"rule", "path", "symbol", "reason"} - set(entry)
+        if missing:
+            raise ValueError(
+                f"waiver #{i + 1} in {path} is missing {sorted(missing)}"
+            )
+        if not str(entry["reason"]).strip():
+            raise ValueError(f"waiver #{i + 1} in {path} has an empty reason")
+        waivers.append(
+            Waiver(
+                rule=str(entry["rule"]),
+                path=str(entry["path"]),
+                symbol=str(entry["symbol"]),
+                reason=str(entry["reason"]),
+            )
+        )
+    return waivers
+
+
+def split_findings(
+    findings: Iterable[Finding], waivers: Sequence[Waiver]
+) -> Tuple[List[Finding], List[Finding], List[Waiver]]:
+    """Partition into (unwaived, waived) and return the stale waivers."""
+    unwaived, waived = [], []
+    used = set()
+    for f in findings:
+        hit = next((w for w in waivers if w.matches(f)), None)
+        if hit is None:
+            unwaived.append(f)
+        else:
+            waived.append(f)
+            used.add(id(hit))
+    stale = [w for w in waivers if id(w) not in used]
+    return unwaived, waived, stale

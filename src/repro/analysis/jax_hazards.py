@@ -1,0 +1,258 @@
+"""JAX tracing-hazard pass over jit-reachable function bodies.
+
+Rules (all scoped to bodies ``callgraph.jit_reachable`` proves a jit
+decoration site can reach):
+
+* ``jax-np-call`` — a ``np.*`` / ``numpy.*`` call: silently materializes
+  the tracer to host, breaking tracing or forcing a sync.
+* ``jax-traced-branch`` — Python ``if``/``while`` on a *traced* value:
+  raises ``TracerBoolConversionError`` at trace time (or worse, bakes
+  one branch in).
+* ``jax-host-sync`` — ``.item()`` / ``float()`` / ``int()`` / ``bool()``
+  on a traced value: a device→host sync in the hot path.
+* ``jax-mutable-global`` — reading a module-level mutable container
+  inside a jit body: the value is baked in at trace time, later host
+  mutations are invisible to the compiled function.
+
+Taint (≈ "traced"): a root's parameters minus its ``static_argnames``
+and ``self``/``cls``; for helpers reached through the call graph,
+positional parameters only — keyword-only helper parameters are bound
+statically via ``functools.partial`` throughout this codebase (Pallas
+kernel bodies), and ``self.*`` attributes are Python state, not
+tracers. Static metadata (``x.shape`` / ``.ndim`` / ``.dtype`` /
+``.size``, ``len()``) drops taint; assignment propagates it;
+reassignment from an untainted value clears it.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from repro.analysis.callgraph import JitRoot, jit_reachable
+from repro.analysis.findings import Finding
+from repro.analysis.modules import FuncNode, ModuleInfo
+
+RULE_NP_CALL = "jax-np-call"
+RULE_TRACED_BRANCH = "jax-traced-branch"
+RULE_HOST_SYNC = "jax-host-sync"
+RULE_MUTABLE_GLOBAL = "jax-mutable-global"
+
+#: attribute accesses on a traced value that yield static Python data
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "at"}
+
+#: builtins whose result is host data (drop taint) without being a sync
+_TAINT_SINKS = {"len", "range", "isinstance", "type", "getattr", "hasattr"}
+
+_HOST_CASTS = {"float", "int", "bool"}
+
+
+def _numpy_aliases(module: ModuleInfo) -> Set[str]:
+    return {
+        alias
+        for alias, dotted in module.import_aliases.items()
+        if dotted == "numpy" or dotted.startswith("numpy.")
+    }
+
+
+class _BodyChecker:
+    def __init__(self, module: ModuleInfo, root: JitRoot, np_aliases: Set[str]):
+        self.module = module
+        self.root = root
+        self.np_aliases = np_aliases
+        self.findings: List[Finding] = []
+        self.tainted: Set[str] = set()
+        args = root.func.node.args
+        for a in list(args.posonlyargs) + list(args.args):
+            if a.arg not in ("self", "cls"):
+                self.tainted.add(a.arg)
+        if root.is_root:
+            # a root's keyword-only params are caller-supplied (traced
+            # unless static_argnames says otherwise); a helper's are
+            # partial-bound statics in this codebase's Pallas idiom
+            for a in args.kwonlyargs:
+                self.tainted.add(a.arg)
+        self.tainted -= set(root.static_argnames)
+
+    # ---- taint -----------------------------------------------------------
+
+    def is_tainted(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                return False
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.BinOp):
+            return self.is_tainted(node.left) or self.is_tainted(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_tainted(node.operand)
+        if isinstance(node, ast.BoolOp):
+            return any(self.is_tainted(v) for v in node.values)
+        if isinstance(node, ast.Compare):
+            return self.is_tainted(node.left) or any(
+                self.is_tainted(c) for c in node.comparators
+            )
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.is_tainted(e) for e in node.elts)
+        if isinstance(node, ast.IfExp):
+            return self.is_tainted(node.body) or self.is_tainted(node.orelse)
+        if isinstance(node, ast.Starred):
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.Call):
+            fn = node.func
+            if isinstance(fn, ast.Name) and fn.id in _TAINT_SINKS | _HOST_CASTS:
+                return False
+            return any(self.is_tainted(a) for a in node.args) or any(
+                self.is_tainted(k.value) for k in node.keywords
+            )
+        return False
+
+    def _assign(self, target: ast.AST, tainted: bool) -> None:
+        if isinstance(target, ast.Name):
+            if tainted:
+                self.tainted.add(target.id)
+            else:
+                self.tainted.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._assign(e, tainted)
+        elif isinstance(target, ast.Starred):
+            self._assign(target.value, tainted)
+
+    # ---- walk ------------------------------------------------------------
+
+    def run(self) -> List[Finding]:
+        node = self.root.func.node
+        body = node.body if isinstance(node.body, list) else [node.body]
+        self._block(body)
+        return self.findings
+
+    def _block(self, stmts) -> None:
+        for stmt in stmts:
+            self._stmt(stmt)
+
+    def _stmt(self, stmt: ast.AST) -> None:
+        if isinstance(stmt, FuncNode + (ast.ClassDef,)):
+            return  # nested defs analyzed via their own reachability
+        if isinstance(stmt, ast.Assign):
+            self._expr(stmt.value)
+            tainted = self.is_tainted(stmt.value)
+            for t in stmt.targets:
+                self._assign(t, tainted)
+            return
+        if isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            self._expr(stmt.value)
+            self._assign(stmt.target, self.is_tainted(stmt.value))
+            return
+        if isinstance(stmt, ast.AugAssign):
+            self._expr(stmt.value)
+            if self.is_tainted(stmt.value):
+                self._assign(stmt.target, True)
+            return
+        if isinstance(stmt, (ast.If, ast.While)):
+            self._expr(stmt.test)
+            if self.is_tainted(stmt.test):
+                kind = "if" if isinstance(stmt, ast.If) else "while"
+                self._report(
+                    RULE_TRACED_BRANCH,
+                    stmt,
+                    f"Python `{kind}` on traced value "
+                    f"`{ast.unparse(stmt.test)}` — use jnp.where / lax.cond",
+                )
+            self._block(stmt.body)
+            self._block(stmt.orelse)
+            return
+        if isinstance(stmt, ast.For):
+            self._expr(stmt.iter)
+            self._assign(stmt.target, self.is_tainted(stmt.iter))
+            self._block(stmt.body)
+            self._block(stmt.orelse)
+            return
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self._expr(item.context_expr)
+            self._block(stmt.body)
+            return
+        if isinstance(stmt, ast.Try):
+            self._block(stmt.body)
+            for h in stmt.handlers:
+                self._block(h.body)
+            self._block(stmt.orelse)
+            self._block(stmt.finalbody)
+            return
+        # everything else: scan contained expressions
+        for node in ast.walk(stmt):
+            if isinstance(node, (ast.Call, ast.Name)):
+                self._expr_node(node)
+
+    def _expr(self, expr: ast.AST) -> None:
+        for node in ast.walk(expr):
+            self._expr_node(node)
+
+    def _expr_node(self, node: ast.AST) -> None:
+        if isinstance(node, ast.Call):
+            self._check_call(node)
+        elif isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+            if node.id in self.module.mutable_globals:
+                self._report(
+                    RULE_MUTABLE_GLOBAL,
+                    node,
+                    f"reads mutable module global `{node.id}` inside a "
+                    "jit-reachable body — the traced value is frozen at "
+                    "compile time",
+                )
+
+    def _check_call(self, call: ast.Call) -> None:
+        fn = call.func
+        # np.* call
+        if isinstance(fn, ast.Attribute):
+            root = fn
+            while isinstance(root.value, ast.Attribute):
+                root = root.value
+            if (
+                isinstance(root.value, ast.Name)
+                and root.value.id in self.np_aliases
+            ):
+                self._report(
+                    RULE_NP_CALL,
+                    call,
+                    f"`{ast.unparse(fn)}(...)` in a jit-reachable body — "
+                    "use jnp / lax equivalents",
+                )
+            if fn.attr == "item" and self.is_tainted(fn.value):
+                self._report(
+                    RULE_HOST_SYNC,
+                    call,
+                    f"`{ast.unparse(fn.value)}.item()` forces a device→host "
+                    "sync under trace",
+                )
+        elif isinstance(fn, ast.Name) and fn.id in _HOST_CASTS and call.args:
+            if self.is_tainted(call.args[0]):
+                self._report(
+                    RULE_HOST_SYNC,
+                    call,
+                    f"`{fn.id}({ast.unparse(call.args[0])})` concretizes a "
+                    "traced value (host sync / TracerConversionError)",
+                )
+
+    def _report(self, rule: str, node: ast.AST, message: str) -> None:
+        self.findings.append(
+            Finding(
+                rule=rule,
+                path=self.module.path,
+                line=getattr(node, "lineno", 0),
+                symbol=self.root.func.qualname,
+                message=message,
+            )
+        )
+
+
+def check_module(module: ModuleInfo) -> List[Finding]:
+    np_aliases = _numpy_aliases(module)
+    findings: List[Finding] = []
+    for root in jit_reachable(module).values():
+        findings.extend(_BodyChecker(module, root, np_aliases).run())
+    return findings

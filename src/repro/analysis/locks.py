@@ -1,0 +1,401 @@
+"""Lock-discipline pass: ``guarded-by:`` annotations + acquisition order.
+
+Annotation convention (DESIGN.md §14): a trailing comment on the line
+that declares a field —
+
+    executor: Optional[object] = None  # guarded-by: _swap_lock
+    self._persist_thread = None  # guarded-by: _persist_spawn_lock
+
+``lock-guard`` flags every read or write of an annotated attribute that
+is not lexically inside ``with <recv>.<lock>:``. Receivers are resolved
+by *type annotation*, the one piece of typing this codebase applies
+consistently: a parameter annotated with the guarded class, a variable
+assigned from a container attribute whose annotation names it, a
+``for``-target iterating such a container's ``.values()`` / ``.items()``,
+or the result of a helper return-annotated with the class. Objects
+assigned straight from the class constructor are exempt — they are
+thread-local until published. ``self.<field>`` accesses are checked when
+the field was annotated on a ``self.`` assignment (outside
+``__init__``, where the object is still under construction).
+
+``lock-order`` derives the canonical order from the order the locks are
+created in (``self.X = threading.Lock()`` source order) and flags any
+``with`` that acquires an *earlier* lock while a later one is held.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.findings import Finding
+from repro.analysis.modules import FuncNode, ModuleInfo
+
+RULE_GUARD = "lock-guard"
+RULE_ORDER = "lock-order"
+
+_GUARDED_RE = re.compile(r"guarded-by:\s*([A-Za-z_]\w*)")
+
+
+def _guard_comment(module: ModuleInfo, stmt: ast.AST) -> Optional[str]:
+    """Lock named by a ``guarded-by:`` comment on any line a (possibly
+    multi-line, formatter-wrapped) declaration statement spans."""
+    end = getattr(stmt, "end_lineno", None) or stmt.lineno
+    for line in range(stmt.lineno, end + 1):
+        m = _GUARDED_RE.search(module.comment_on(line))
+        if m:
+            return m.group(1)
+    return None
+
+
+def collect_guarded(module: ModuleInfo) -> Dict[str, Dict[str, str]]:
+    """{class_name: {field: lock_name}} from annotation comments."""
+    guarded: Dict[str, Dict[str, str]] = {}
+    for cls in ast.walk(module.tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        fields: Dict[str, str] = {}
+        # dataclass-style field declarations in the class body
+        for stmt in cls.body:
+            target = None
+            if isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target, ast.Name):
+                target = stmt.target.id
+            elif (
+                isinstance(stmt, ast.Assign)
+                and len(stmt.targets) == 1
+                and isinstance(stmt.targets[0], ast.Name)
+            ):
+                target = stmt.targets[0].id
+            if target is None:
+                continue
+            lock = _guard_comment(module, stmt)
+            if lock is not None:
+                fields[target] = lock
+        # ``self.x = ...`` annotations anywhere in the class's methods
+        for node in ast.walk(cls):
+            if not isinstance(node, (ast.Assign, ast.AnnAssign)):
+                continue
+            targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+            for t in targets:
+                if (
+                    isinstance(t, ast.Attribute)
+                    and isinstance(t.value, ast.Name)
+                    and t.value.id == "self"
+                ):
+                    lock = _guard_comment(module, node)
+                    if lock is not None:
+                        fields[t.attr] = lock
+        if fields:
+            guarded[cls.name] = fields
+    return guarded
+
+
+def lock_declaration_order(module: ModuleInfo) -> List[str]:
+    """Lock attribute names in creation order (``threading.Lock()`` /
+    ``RLock()`` assigned to ``self.<name>``)."""
+    order: List[str] = []
+    for node in ast.walk(module.tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        if not (
+            isinstance(node.value, ast.Call)
+            and (
+                module.resolves_to(node.value.func, "threading.Lock")
+                or module.resolves_to(node.value.func, "threading.RLock")
+            )
+        ):
+            continue
+        for t in node.targets:
+            if (
+                isinstance(t, ast.Attribute)
+                and isinstance(t.value, ast.Name)
+                and t.value.id == "self"
+                and t.attr not in order
+            ):
+                order.append(t.attr)
+    return order
+
+
+def _annotation_names(node: Optional[ast.AST]) -> str:
+    if node is None:
+        return ""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value  # string annotation
+    try:
+        return ast.unparse(node)
+    except Exception:  # pragma: no cover
+        return ""
+
+
+def _mentions(annotation: str, class_name: str) -> bool:
+    return re.search(rf"\b{re.escape(class_name)}\b", annotation) is not None
+
+
+class _FunctionScan:
+    """Per-function receiver typing + guard checking."""
+
+    def __init__(
+        self,
+        module: ModuleInfo,
+        func: ast.AST,
+        qualname: str,
+        owner_class: Optional[str],
+        guarded: Dict[str, Dict[str, str]],
+        typed_attrs: Dict[str, Set[str]],
+        typed_returns: Dict[str, Set[str]],
+        lock_order: List[str],
+    ):
+        self.module = module
+        self.func = func
+        self.qualname = qualname
+        self.owner_class = owner_class
+        self.guarded = guarded
+        self.typed_attrs = typed_attrs  # attr name -> classes its annotation names
+        self.typed_returns = typed_returns  # func/method name -> classes
+        self.lock_order = lock_order
+        self.findings: List[Finding] = []
+        #: local name -> guarded class it holds an instance of
+        self.typed: Dict[str, str] = {}
+        for a in list(func.args.posonlyargs) + list(func.args.args):
+            classes = {
+                c for c in guarded if _mentions(_annotation_names(a.annotation), c)
+            }
+            if classes:
+                self.typed[a.arg] = sorted(classes)[0]
+
+    # ---- typing ----------------------------------------------------------
+
+    def _classes_of_expr(self, node: ast.AST) -> Optional[str]:
+        """Guarded class an expression evaluates to, when derivable."""
+        if isinstance(node, ast.Name):
+            return self.typed.get(node.id)
+        if isinstance(node, ast.Call):
+            fn = node.func
+            name = fn.id if isinstance(fn, ast.Name) else getattr(fn, "attr", None)
+            if name in self.guarded:
+                return None  # fresh construction: thread-local until published
+            for cls in self.typed_returns.get(name or "", ()):
+                return cls
+            # dict.get / .pop on a typed container attribute
+            if isinstance(fn, ast.Attribute) and fn.attr in ("get", "pop"):
+                return self._container_value_class(fn.value)
+            return None
+        if isinstance(node, ast.Subscript):
+            return self._container_value_class(node.value)
+        return None
+
+    def _container_value_class(self, node: ast.AST) -> Optional[str]:
+        """Guarded class held by a container attribute (``self._graphs``
+        annotated ``OrderedDict[str, _Resident]``)."""
+        if isinstance(node, ast.Attribute):
+            for cls in self.typed_attrs.get(node.attr, ()):
+                return cls
+        return None
+
+    def _type_target(self, target: ast.AST, cls: Optional[str]) -> None:
+        if isinstance(target, ast.Name):
+            if cls is not None:
+                self.typed[target.id] = cls
+            else:
+                self.typed.pop(target.id, None)
+        elif isinstance(target, ast.Tuple) and cls is not None:
+            # ``for gid, rec in ...items()``: the value is the last element
+            if target.elts and isinstance(target.elts[-1], ast.Name):
+                self.typed[target.elts[-1].id] = cls
+
+    # ---- walk ------------------------------------------------------------
+
+    def run(self) -> List[Finding]:
+        self._block(self.func.body, held=())
+        return self.findings
+
+    def _block(self, stmts, held: Tuple[str, ...]) -> None:
+        for stmt in stmts:
+            self._stmt(stmt, held)
+
+    def _stmt(self, stmt: ast.AST, held: Tuple[str, ...]) -> None:
+        if isinstance(stmt, FuncNode + (ast.ClassDef,)):
+            return  # nested scopes scanned separately
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            acquired = []
+            for item in stmt.items:
+                ctx = item.context_expr
+                self._check_expr(ctx, held)
+                lock = self._lock_name(ctx)
+                if lock is not None:
+                    self._check_order(lock, held, stmt)
+                    acquired.append(lock)
+            self._block(stmt.body, held + tuple(acquired))
+            return
+        if isinstance(stmt, ast.Assign):
+            self._check_expr(stmt.value, held)
+            for t in stmt.targets:
+                self._check_store(t, held)
+            cls = self._classes_of_expr(stmt.value)
+            for t in stmt.targets:
+                self._type_target(t, cls)
+            return
+        if isinstance(stmt, ast.For):
+            self._check_expr(stmt.iter, held)
+            self._type_target(stmt.target, self._iter_class(stmt.iter))
+            self._block(stmt.body, held)
+            self._block(stmt.orelse, held)
+            return
+        if isinstance(stmt, ast.If):
+            self._check_expr(stmt.test, held)
+            self._block(stmt.body, held)
+            self._block(stmt.orelse, held)
+            return
+        if isinstance(stmt, ast.While):
+            self._check_expr(stmt.test, held)
+            self._block(stmt.body, held)
+            self._block(stmt.orelse, held)
+            return
+        if isinstance(stmt, ast.Try):
+            self._block(stmt.body, held)
+            for h in stmt.handlers:
+                self._block(h.body, held)
+            self._block(stmt.orelse, held)
+            self._block(stmt.finalbody, held)
+            return
+        # default (Expr/Return/Raise/AugAssign/...): expressions only
+        self._check_expr(stmt, held)
+
+    def _iter_class(self, it: ast.AST) -> Optional[str]:
+        """Class yielded by iterating ``self.<attr>.values()/items()``."""
+        if isinstance(it, ast.Call) and isinstance(it.func, ast.Attribute):
+            if it.func.attr in ("values", "items"):
+                return self._container_value_class(it.func.value)
+        if isinstance(it, ast.Call) and isinstance(it.func, ast.Name):
+            if it.func.id in ("list", "sorted", "tuple") and it.args:
+                return self._iter_class(it.args[0])
+        return None
+
+    # ---- checks ----------------------------------------------------------
+
+    def _lock_name(self, ctx: ast.AST) -> Optional[str]:
+        if isinstance(ctx, ast.Attribute) and ctx.attr in self.lock_order:
+            return ctx.attr
+        return None
+
+    def _check_order(
+        self, lock: str, held: Tuple[str, ...], node: ast.AST
+    ) -> None:
+        idx = self.lock_order.index(lock)
+        for h in held:
+            if h in self.lock_order and self.lock_order.index(h) > idx:
+                self._report(
+                    RULE_ORDER,
+                    node,
+                    f"acquires `{lock}` while holding `{h}` — declared "
+                    f"order is {' -> '.join(self.lock_order)}",
+                )
+
+    _COMPS = (ast.ListComp, ast.SetComp, ast.DictComp, ast.GeneratorExp)
+
+    def _check_expr(self, expr: ast.AST, held: Tuple[str, ...]) -> None:
+        """Recursive expression walk: comprehension targets get typed
+        *before* their element expressions are checked."""
+        if isinstance(expr, self._COMPS):
+            for gen in expr.generators:
+                self._check_expr(gen.iter, held)
+                self._type_target(gen.target, self._iter_class(gen.iter))
+                for cond in gen.ifs:
+                    self._check_expr(cond, held)
+            if isinstance(expr, ast.DictComp):
+                self._check_expr(expr.key, held)
+                self._check_expr(expr.value, held)
+            else:
+                self._check_expr(expr.elt, held)
+            return
+        if isinstance(expr, ast.Attribute):
+            self._check_attribute(expr, held)
+            self._check_expr(expr.value, held)
+            return
+        if isinstance(expr, (ast.Lambda,) + FuncNode + (ast.ClassDef,)):
+            return
+        for child in ast.iter_child_nodes(expr):
+            self._check_expr(child, held)
+
+    def _check_store(self, target: ast.AST, held: Tuple[str, ...]) -> None:
+        self._check_expr(target, held)
+
+    def _check_attribute(self, node: ast.Attribute, held: Tuple[str, ...]) -> None:
+        recv = node.value
+        cls: Optional[str] = None
+        if isinstance(recv, ast.Name):
+            if recv.id == "self" and self.owner_class in self.guarded:
+                if node.attr in self.guarded[self.owner_class]:
+                    cls = self.owner_class
+            elif recv.id in self.typed:
+                cand = self.typed[recv.id]
+                if node.attr in self.guarded.get(cand, {}):
+                    cls = cand
+        if cls is None:
+            return
+        lock = self.guarded[cls][node.attr]
+        if lock in held:
+            return
+        if self.func.name == "__init__":
+            return  # construction: the object is thread-local
+        access = "write" if isinstance(node.ctx, (ast.Store, ast.Del)) else "read"
+        self._report(
+            RULE_GUARD,
+            node,
+            f"{access} of `{ast.unparse(recv)}.{node.attr}` "
+            f"(guarded by `{lock}`) outside `with ...{lock}:`",
+        )
+
+    def _report(self, rule: str, node: ast.AST, message: str) -> None:
+        self.findings.append(
+            Finding(
+                rule=rule,
+                path=self.module.path,
+                line=getattr(node, "lineno", 0),
+                symbol=self.qualname,
+                message=message,
+            )
+        )
+
+
+def check_module(module: ModuleInfo) -> List[Finding]:
+    guarded = collect_guarded(module)
+    lock_order = lock_declaration_order(module)
+    if not guarded and len(lock_order) < 2:
+        return []
+
+    # attribute annotations: self.<attr> -> guarded classes its
+    # annotation string mentions (``self._graphs: "OrderedDict[str,
+    # _Resident]" = ...``)
+    typed_attrs: Dict[str, Set[str]] = {}
+    typed_returns: Dict[str, Set[str]] = {}
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.AnnAssign) and isinstance(node.target, ast.Attribute):
+            ann = _annotation_names(node.annotation)
+            classes = {c for c in guarded if _mentions(ann, c)}
+            if classes:
+                typed_attrs.setdefault(node.target.attr, set()).update(classes)
+        elif isinstance(node, FuncNode):
+            ann = _annotation_names(node.returns)
+            classes = {c for c in guarded if _mentions(ann, c)}
+            if classes:
+                typed_returns.setdefault(node.name, set()).update(classes)
+
+    findings: List[Finding] = []
+    for info in module.functions.values():
+        node = info.node
+        if isinstance(node, ast.Lambda):
+            continue
+        scan = _FunctionScan(
+            module,
+            node,
+            info.qualname,
+            info.class_name,
+            guarded,
+            typed_attrs,
+            typed_returns,
+            lock_order,
+        )
+        findings.extend(scan.run())
+    return findings

@@ -1,0 +1,175 @@
+"""Shared per-module AST model the passes build their checks on.
+
+One ``ModuleInfo`` per analyzed file: the parse tree with parent links,
+per-line comments (``tokenize`` — annotations like ``guarded-by:`` live
+in comments, which ``ast`` drops), the import alias table, an index of
+every function/method by qualified name, and the module-level globals
+classified mutable or not.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import tokenize
+from typing import Dict, List, Optional
+
+#: module-level bindings treated as mutable shared state when read from
+#: jit-reachable code: container literals/comprehensions and calls to
+#: the stdlib container constructors. Class/function aliases and scalar
+#: constants stay out — reading those is not a tracing hazard.
+_CONTAINER_CTORS = {
+    "dict",
+    "list",
+    "set",
+    "OrderedDict",
+    "defaultdict",
+    "deque",
+    "Counter",
+}
+
+FuncNode = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+@dataclasses.dataclass
+class FuncInfo:
+    qualname: str
+    node: ast.AST  # FunctionDef / AsyncFunctionDef / Lambda
+    class_name: Optional[str]  # enclosing class, if a method
+
+
+class ModuleInfo:
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.tree = ast.parse(source, filename=path)
+        self.comments = self._scan_comments(source)
+        self.parents: Dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                self.parents[child] = node
+        self.import_aliases = self._scan_imports()
+        self.functions: Dict[str, FuncInfo] = {}
+        self.methods_by_name: Dict[str, List[FuncInfo]] = {}
+        self._index_functions()
+        self.mutable_globals = self._scan_mutable_globals()
+
+    # ---- construction helpers ------------------------------------------
+
+    @staticmethod
+    def _scan_comments(source: str) -> Dict[int, str]:
+        comments: Dict[int, str] = {}
+        try:
+            tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+            for tok in tokens:
+                if tok.type == tokenize.COMMENT:
+                    comments[tok.start[0]] = tok.string
+        except tokenize.TokenError:  # pragma: no cover - ast.parse catches first
+            pass
+        return comments
+
+    def _scan_imports(self) -> Dict[str, str]:
+        """alias -> dotted module/name it binds (``np`` -> ``numpy``)."""
+        aliases: Dict[str, str] = {}
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    aliases[a.asname or a.name.split(".")[0]] = a.name
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+        return aliases
+
+    def _index_functions(self) -> None:
+        def visit(node: ast.AST, scope: List[str], class_name: Optional[str]):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, FuncNode):
+                    qual = ".".join(scope + [child.name])
+                    if qual in self.functions:  # same-named siblings
+                        qual = f"{qual}@{child.lineno}"
+                    info = FuncInfo(qual, child, class_name)
+                    self.functions[qual] = info
+                    self.methods_by_name.setdefault(child.name, []).append(info)
+                    visit(child, scope + [child.name], class_name)
+                elif isinstance(child, ast.ClassDef):
+                    visit(child, scope + [child.name], child.name)
+                else:
+                    visit(child, scope, class_name)
+
+        visit(self.tree, [], None)
+
+    def _scan_mutable_globals(self) -> set:
+        mutable = set()
+        for node in self.tree.body:
+            if isinstance(node, ast.AnnAssign) and node.value is not None:
+                targets = [node.target]
+                value = node.value
+            elif isinstance(node, ast.Assign):
+                targets = node.targets
+                value = node.value
+            else:
+                continue
+            if not self._is_mutable_value(value):
+                continue
+            for t in targets:
+                if isinstance(t, ast.Name):
+                    mutable.add(t.id)
+        return mutable
+
+    @staticmethod
+    def _is_mutable_value(value: ast.AST) -> bool:
+        if isinstance(
+            value, (ast.Dict, ast.List, ast.Set, ast.DictComp, ast.ListComp, ast.SetComp)
+        ):
+            return True
+        if isinstance(value, ast.Call):
+            fn = value.func
+            name = fn.id if isinstance(fn, ast.Name) else getattr(fn, "attr", None)
+            return name in _CONTAINER_CTORS
+        return False
+
+    # ---- queries --------------------------------------------------------
+
+    def qualname_of(self, node: ast.AST) -> str:
+        """Qualified name of the innermost def/class enclosing ``node``
+        (``<module>`` at top level) — the waiver-matching symbol."""
+        parts: List[str] = []
+        cur: Optional[ast.AST] = node
+        while cur is not None:
+            if isinstance(cur, FuncNode + (ast.ClassDef,)):
+                parts.append(cur.name)
+            cur = self.parents.get(cur)
+        return ".".join(reversed(parts)) or "<module>"
+
+    def enclosing_function(self, node: ast.AST) -> Optional[ast.AST]:
+        cur = self.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, FuncNode):
+                return cur
+            cur = self.parents.get(cur)
+        return None
+
+    def comment_on(self, line: int) -> str:
+        return self.comments.get(line, "")
+
+    def resolves_to(self, node: ast.AST, dotted: str) -> bool:
+        """Does ``node`` (Name/Attribute chain) denote ``dotted`` under
+        this module's import aliases? ``jax.jit`` matches ``jax.jit``
+        itself and any ``from jax import jit`` / ``import jax as j``
+        spelling."""
+        parts: List[str] = []
+        cur = node
+        while isinstance(cur, ast.Attribute):
+            parts.append(cur.attr)
+            cur = cur.value
+        if not isinstance(cur, ast.Name):
+            return False
+        root = self.import_aliases.get(cur.id, cur.id)
+        full = ".".join([root] + list(reversed(parts)))
+        return full == dotted
+
+
+def parse_module(path: str) -> ModuleInfo:
+    with open(path, "r", encoding="utf-8") as fh:
+        return ModuleInfo(path, fh.read())

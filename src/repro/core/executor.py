@@ -38,6 +38,7 @@ Both executors accept ``bf16_accumulate=True`` to run the routing bodies'
 multiplies and accumulations in bfloat16 (a sweep axis — the autotuner
 attaches an f32-vs-bf16 max-error report to the winning ``TunedConfig``).
 """
+
 from __future__ import annotations
 
 from collections import OrderedDict
@@ -89,8 +90,9 @@ def routing_cost_model(k: int, cb: int, r: int, ktile: int = 128) -> dict:
     bound on the VPU) + the same one-hot scatter contraction.
     """
     onehot = k * (cb + r) * ktile / _MXU_MACS_PER_CYCLE
-    gather = (k * ktile * 4 / _GATHER_BYTES_PER_CYCLE
-              + k * r * ktile / _MXU_MACS_PER_CYCLE)
+    gather = (
+        k * ktile * 4 / _GATHER_BYTES_PER_CYCLE + k * r * ktile / _MXU_MACS_PER_CYCLE
+    )
     return {ONEHOT: onehot, GATHER: gather}
 
 
@@ -137,10 +139,18 @@ class FaultInjector:
         self._armed: list = []
         self.fired: list = []
 
-    def arm(self, site: str, *, times: int = 1, exc=None,
-            graph=ANY, device=ANY) -> None:
-        self._armed.append({"site": site, "times": int(times), "exc": exc,
-                            "graph": graph, "device": device})
+    def arm(
+        self, site: str, *, times: int = 1, exc=None, graph=ANY, device=ANY
+    ) -> None:
+        self._armed.append(
+            {
+                "site": site,
+                "times": int(times),
+                "exc": exc,
+                "graph": graph,
+                "device": device,
+            }
+        )
 
     def clear(self) -> None:
         self._armed.clear()
@@ -160,9 +170,14 @@ class FaultInjector:
             if f["times"] <= 0:
                 self._armed.remove(f)
             self.fired.append((site, graph, device))
-            raise (f["exc"] if f["exc"] is not None else InjectedFault(
-                f"injected {site} fault (graph={graph!r}, "
-                f"device={device!r})"))
+            raise (
+                f["exc"]
+                if f["exc"] is not None
+                else InjectedFault(
+                    f"injected {site} fault (graph={graph!r}, "
+                    f"device={device!r})"
+                )
+            )
 
 
 #: process-wide injector instance the seams consult (tests arm/clear it)
@@ -267,8 +282,7 @@ def _gather_slots_steps(sched: Schedule, steps: np.ndarray):
     win = np.repeat(sched.win_id[steps].astype(np.int64), k)
     cblk = np.repeat(sched.col_block[steps].astype(np.int64), k)
     gcol = np.minimum(cblk * cb + sched.local_col[sl], n - 1).astype(np.int32)
-    tgt = np.maximum(sched.row_map[win * r + sched.local_row[sl]],
-                     0).astype(np.int32)
+    tgt = np.maximum(sched.row_map[win * r + sched.local_row[sl]], 0).astype(np.int32)
     return gcol, tgt, sched.val[sl]
 
 
@@ -340,7 +354,8 @@ class _ExecutorBase:
             raise ValueError(
                 f"operand has {b.shape[0]} rows; schedule expects "
                 f"{self.sched.shape[1]} (A is {self.sched.shape}) — XLA "
-                "would silently clamp gather indices otherwise")
+                "would silently clamp gather indices otherwise"
+            )
         return self._spmm(self.commit(b))
 
     __call__ = spmm
@@ -351,7 +366,8 @@ class _ExecutorBase:
         if x.shape[0] != self.sched.shape[1]:
             raise ValueError(
                 f"features have {x.shape[0]} rows; schedule expects "
-                f"{self.sched.shape[1]} (A is {self.sched.shape})")
+                f"{self.sched.shape[1]} (A is {self.sched.shape})"
+            )
         if self.device is not None:
             params = jax.tree.map(self.commit, params)
         return self._forward(params, self.commit(x))
@@ -391,19 +407,27 @@ class ScheduleExecutor(_ExecutorBase):
     call, bit-identical to executing the unpermuted schedule.
     """
 
-    def __init__(self, sched: Schedule, *, ktile: int = 128,
-                 routing: Optional[str] = None,
-                 bf16_accumulate: bool = False,
-                 slot_chunk: int = 1 << 18,
-                 device=None, row_unperm=None):
+    def __init__(
+        self,
+        sched: Schedule,
+        *,
+        ktile: int = 128,
+        routing: Optional[str] = None,
+        bf16_accumulate: bool = False,
+        slot_chunk: int = 1 << 18,
+        device=None,
+        row_unperm=None,
+    ):
         self.sched = sched
         self.ktile = ktile
         self.bf16_accumulate = bf16_accumulate
         self.device = device
-        self.row_unperm = (None if row_unperm is None
-                           else np.asarray(row_unperm, np.int32))
-        self._unperm = (None if self.row_unperm is None
-                        else _placed(self.row_unperm, device))
+        self.row_unperm = (
+            None if row_unperm is None else np.asarray(row_unperm, np.int32)
+        )
+        self._unperm = (
+            None if self.row_unperm is None else _placed(self.row_unperm, device)
+        )
         self._slot_chunk_arg = slot_chunk
         k = sched.nnz_per_step
         r = sched.rows_per_window
@@ -430,31 +454,36 @@ class ScheduleExecutor(_ExecutorBase):
 
             def _chunked(x, fill):
                 return _placed(
-                    np.concatenate([x, np.full(pad, fill, x.dtype)])
-                    .reshape(self._n_chunks, self._slot_chunk), device)
+                    np.concatenate([x, np.full(pad, fill, x.dtype)]).reshape(
+                        self._n_chunks, self._slot_chunk
+                    ),
+                    device,
+                )
 
             self._gcol = _chunked(gcol, 0)
             self._tgt = _chunked(tgt, 0)
             self._val = _chunked(val, 0.0)
-            self.device_bytes = int(self._gcol.nbytes + self._tgt.nbytes
-                                    + self._val.nbytes)
+            self.device_bytes = int(
+                self._gcol.nbytes + self._tgt.nbytes + self._val.nbytes
+            )
         else:
             # step-major arrays (shared with the Pallas kernel wrapper —
             # one upload per (schedule, device) no matter who consumes it)
             self._steps = device_step_arrays(sched, device)
-            self.device_bytes = int(sum(v.nbytes
-                                        for v in self._steps.values()))
+            self.device_bytes = int(sum(v.nbytes for v in self._steps.values()))
         if self._unperm is not None:
             self.device_bytes += int(self._unperm.nbytes)
 
-        self._spmm_impl = (self._gather_impl if self.routing == GATHER
-                           else self._onehot_impl)
+        self._spmm_impl = (
+            self._gather_impl if self.routing == GATHER else self._onehot_impl
+        )
         self._spmm = jax.jit(self._spmm_impl)
         self._forward = jax.jit(self._forward_impl)
 
     @classmethod
-    def _from_repair(cls, old_ex: "ScheduleExecutor", new_sched: Schedule,
-                     repair) -> "ScheduleExecutor":
+    def _from_repair(
+        cls, old_ex: "ScheduleExecutor", new_sched: Schedule, repair
+    ) -> "ScheduleExecutor":
         """Executor for a repaired schedule that reuses the old executor's
         device buffers wherever the repair left steps untouched.
 
@@ -469,14 +498,21 @@ class ScheduleExecutor(_ExecutorBase):
         never mutates ``old_ex``. Device contents are bit-identical to a
         cold ``ScheduleExecutor(new_sched, ...)`` with the same kwargs.
         """
-        if (old_ex.routing != GATHER or repair.fell_back
-                or repair.step_src is None
-                or getattr(old_ex, "_host", None) is None):
-            return cls(new_sched, ktile=old_ex.ktile, routing=old_ex.routing,
-                       bf16_accumulate=old_ex.bf16_accumulate,
-                       slot_chunk=old_ex._slot_chunk_arg,
-                       device=old_ex.device,
-                       row_unperm=old_ex.row_unperm)
+        if (
+            old_ex.routing != GATHER
+            or repair.fell_back
+            or repair.step_src is None
+            or getattr(old_ex, "_host", None) is None
+        ):
+            return cls(
+                new_sched,
+                ktile=old_ex.ktile,
+                routing=old_ex.routing,
+                bf16_accumulate=old_ex.bf16_accumulate,
+                slot_chunk=old_ex._slot_chunk_arg,
+                device=old_ex.device,
+                row_unperm=old_ex.row_unperm,
+            )
         self = cls.__new__(cls)
         self.sched = new_sched
         self.ktile = old_ex.ktile
@@ -488,8 +524,7 @@ class ScheduleExecutor(_ExecutorBase):
         self._unperm = old_ex._unperm
 
         k = new_sched.nnz_per_step
-        gcol, tgt, val, moved = _spliced_host_slots(
-            old_ex._host, new_sched, repair)
+        gcol, tgt, val, moved = _spliced_host_slots(old_ex._host, new_sched, repair)
         self._host = (gcol, tgt, val)
         s_total = gcol.shape[0]
         self._slot_chunk = int(min(self._slot_chunk_arg, max(1, s_total)))
@@ -499,9 +534,11 @@ class ScheduleExecutor(_ExecutorBase):
         # slot count (so the old padding region still pads) and same
         # chunking (so accumulation order, hence bitwise output, matches a
         # cold build)
-        same_grid = (s_total == old_ex._host[0].shape[0]
-                     and self._slot_chunk == old_ex._slot_chunk
-                     and self._n_chunks == old_ex._n_chunks)
+        same_grid = (
+            s_total == old_ex._host[0].shape[0]
+            and self._slot_chunk == old_ex._slot_chunk
+            and self._n_chunks == old_ex._n_chunks
+        )
         n_moved = int(np.count_nonzero(moved)) * k
         if same_grid and n_moved == 0:
             # content and layout identical: the old device arrays ARE the
@@ -509,12 +546,14 @@ class ScheduleExecutor(_ExecutorBase):
             self._gcol, self._tgt = old_ex._gcol, old_ex._tgt
             self._val = old_ex._val
             self.scoped_upload = True
-        elif (same_grid and 2 * n_moved <= s_total
-              and s_total * 12 >= SCOPED_UPLOAD_MIN_BYTES):
+        elif (
+            same_grid
+            and 2 * n_moved <= s_total
+            and s_total * 12 >= SCOPED_UPLOAD_MIN_BYTES
+        ):
             FAULTS.check("upload", device=self.device)
             steps = np.nonzero(moved)[0]
-            idx = (steps[:, None] * k
-                   + np.arange(k, dtype=np.int64)).reshape(-1)
+            idx = (steps[:, None] * k + np.arange(k, dtype=np.int64)).reshape(-1)
             # pad the scatter index to a coarse bucket (repeating the
             # last slot — duplicate .set with an identical value is
             # harmless) so repeated small updates reuse a handful of
@@ -524,7 +563,8 @@ class ScheduleExecutor(_ExecutorBase):
                 bucket *= 4
             if bucket > idx.size:
                 idx = np.concatenate(
-                    [idx, np.full(bucket - idx.size, idx[-1], idx.dtype)])
+                    [idx, np.full(bucket - idx.size, idx[-1], idx.dtype)]
+                )
             jidx = jnp.asarray(idx.astype(np.int32))
 
             def _patch(dev, host):
@@ -536,16 +576,20 @@ class ScheduleExecutor(_ExecutorBase):
             self._val = _patch(old_ex._val, val)
             self.scoped_upload = True
         else:
+
             def _chunked(x, fill):
                 return _placed(
-                    np.concatenate([x, np.full(pad, fill, x.dtype)])
-                    .reshape(self._n_chunks, self._slot_chunk), self.device)
+                    np.concatenate([x, np.full(pad, fill, x.dtype)]).reshape(
+                        self._n_chunks, self._slot_chunk
+                    ),
+                    self.device,
+                )
+
             self._gcol = _chunked(gcol, 0)
             self._tgt = _chunked(tgt, 0)
             self._val = _chunked(val, 0.0)
             self.scoped_upload = False
-        self.device_bytes = int(self._gcol.nbytes + self._tgt.nbytes
-                                + self._val.nbytes)
+        self.device_bytes = int(self._gcol.nbytes + self._tgt.nbytes + self._val.nbytes)
         if self._unperm is not None:
             self.device_bytes += int(self._unperm.nbytes)
         self._spmm_impl = self._gather_impl
@@ -554,9 +598,13 @@ class ScheduleExecutor(_ExecutorBase):
         return self
 
     @classmethod
-    def _value_patched(cls, old_ex: "ScheduleExecutor", new_sched: Schedule,
-                       slots: np.ndarray, vals: np.ndarray
-                       ) -> "ScheduleExecutor":
+    def _value_patched(
+        cls,
+        old_ex: "ScheduleExecutor",
+        new_sched: Schedule,
+        slots: np.ndarray,
+        vals: np.ndarray,
+    ) -> "ScheduleExecutor":
         """Executor for a *value-only* patched schedule: structure (and
         therefore the slot layout, chunk grid, gcol/tgt streams) is
         byte-identical to ``old_ex``; only ``val`` changed, at ``slots``.
@@ -567,11 +615,15 @@ class ScheduleExecutor(_ExecutorBase):
         scatter index is padded to a small fixed bucket so every update of
         a given size class reuses one compiled scatter."""
         if old_ex.routing != GATHER or getattr(old_ex, "_host", None) is None:
-            return cls(new_sched, ktile=old_ex.ktile, routing=old_ex.routing,
-                       bf16_accumulate=old_ex.bf16_accumulate,
-                       slot_chunk=old_ex._slot_chunk_arg,
-                       device=old_ex.device,
-                       row_unperm=old_ex.row_unperm)
+            return cls(
+                new_sched,
+                ktile=old_ex.ktile,
+                routing=old_ex.routing,
+                bf16_accumulate=old_ex.bf16_accumulate,
+                slot_chunk=old_ex._slot_chunk_arg,
+                device=old_ex.device,
+                row_unperm=old_ex.row_unperm,
+            )
         self = cls.__new__(cls)
         self.sched = new_sched
         self.ktile = old_ex.ktile
@@ -599,9 +651,9 @@ class ScheduleExecutor(_ExecutorBase):
                 bucket *= 4
             if bucket > idx.size:
                 idx = np.concatenate(
-                    [idx, np.full(bucket - idx.size, idx[-1], idx.dtype)])
-            self._val = _scatter_set(old_ex._val, idx.astype(np.int32),
-                                     val[idx])
+                    [idx, np.full(bucket - idx.size, idx[-1], idx.dtype)]
+                )
+            self._val = _scatter_set(old_ex._val, idx.astype(np.int32), val[idx])
         self.scoped_upload = True
         self.device_bytes = old_ex.device_bytes
         self._spmm_impl = self._gather_impl
@@ -623,14 +675,17 @@ class ScheduleExecutor(_ExecutorBase):
         out = jnp.zeros((m, kdim), acc)
 
         if self._n_chunks == 1:
-            g = (jnp.take(bf, self._gcol[0], axis=0)
-                 * self._val[0].astype(acc)[:, None])
+            g = jnp.take(bf, self._gcol[0], axis=0) * self._val[0].astype(acc)[:, None]
             out = out.at[self._tgt[0]].add(g)
         else:
+
             def body(i, a_):
-                g = (jnp.take(bf, self._gcol[i], axis=0)
-                     * self._val[i].astype(acc)[:, None])
+                g = (
+                    jnp.take(bf, self._gcol[i], axis=0)
+                    * self._val[i].astype(acc)[:, None]
+                )
                 return a_.at[self._tgt[i]].add(g)
+
             out = jax.lax.fori_loop(0, self._n_chunks, body, out)
         if self._unperm is not None:
             out = jnp.take(out, self._unperm, axis=0)
@@ -652,27 +707,30 @@ class ScheduleExecutor(_ExecutorBase):
 
         def step(out_perm, s):
             win, cblk, val, lrow, lcol = s
-            bb = bp[cblk]                                   # [CB, kdim]
-            gather = (lcol[:, None] == jnp.arange(cb)[None, :]
-                      ).astype(acc)                         # [K, CB]
+            bb = bp[cblk]  # [CB, kdim]
+            gather = (lcol[:, None] == jnp.arange(cb)[None, :]).astype(acc)  # [K, CB]
             contrib = (gather @ bb) * val.astype(acc)[:, None]  # [K, kdim]
-            scatter = (lrow[:, None] == jnp.arange(r)[None, :]
-                       ).astype(acc)                        # [K, R]
+            scatter = (lrow[:, None] == jnp.arange(r)[None, :]).astype(acc)  # [K, R]
             out_perm = out_perm.at[win].add(scatter.T @ contrib)
             return out_perm, None
 
         out_perm = jnp.zeros((self.sched.n_windows, r, kdim), acc)
         out_perm, _ = jax.lax.scan(
-            step, out_perm,
-            (self._steps["win"], self._steps["cblk"], self._steps["val"],
-             self._steps["lrow"], self._steps["lcol"]))
+            step,
+            out_perm,
+            (
+                self._steps["win"],
+                self._steps["cblk"],
+                self._steps["val"],
+                self._steps["lrow"],
+                self._steps["lcol"],
+            ),
+        )
         # scatter epilogue (adder tree): permuted window slots → matrix rows
         rm = self._steps["row_map"]
         valid = rm >= 0
-        contrib = jnp.where(valid[:, None],
-                            out_perm.reshape(-1, kdim), 0.0)
-        out = jnp.zeros((m, kdim), acc).at[
-            jnp.where(valid, rm, 0)].add(contrib)
+        contrib = jnp.where(valid[:, None], out_perm.reshape(-1, kdim), 0.0)
+        out = jnp.zeros((m, kdim), acc).at[jnp.where(valid, rm, 0)].add(contrib)
         if self._unperm is not None:
             out = jnp.take(out, self._unperm, axis=0)
         return out.astype(b.dtype)
@@ -698,11 +756,18 @@ class ShardedScheduleExecutor(_ExecutorBase):
     re-association of the cross-device sum.
     """
 
-    def __init__(self, sched: Schedule, *, n_devices: Optional[int] = None,
-                 mesh: Optional[Mesh] = None, ktile: int = 128,
-                 routing: Optional[str] = None,
-                 bf16_accumulate: bool = False,
-                 slot_chunk: int = 1 << 18, row_unperm=None):
+    def __init__(
+        self,
+        sched: Schedule,
+        *,
+        n_devices: Optional[int] = None,
+        mesh: Optional[Mesh] = None,
+        ktile: int = 128,
+        routing: Optional[str] = None,
+        bf16_accumulate: bool = False,
+        slot_chunk: int = 1 << 18,
+        row_unperm=None,
+    ):
         if mesh is None:
             devs = jax.devices()
             if n_devices is None:
@@ -710,17 +775,20 @@ class ShardedScheduleExecutor(_ExecutorBase):
             if not 1 <= n_devices <= len(devs):
                 raise ValueError(
                     f"n_devices={n_devices} but this host exposes "
-                    f"{len(devs)} device(s)")
+                    f"{len(devs)} device(s)"
+                )
             mesh = Mesh(np.asarray(devs[:n_devices]), ("dev",))
         else:
             if len(mesh.axis_names) != 1:
                 raise ValueError(
                     "ShardedScheduleExecutor shards over one step axis and "
-                    f"needs a 1-D mesh; got axes {mesh.axis_names}")
+                    f"needs a 1-D mesh; got axes {mesh.axis_names}"
+                )
             if n_devices is not None and n_devices != mesh.devices.size:
                 raise ValueError(
                     f"n_devices={n_devices} contradicts the given mesh of "
-                    f"{mesh.devices.size} device(s); pass one or the other")
+                    f"{mesh.devices.size} device(s); pass one or the other"
+                )
             n_devices = int(mesh.devices.size)
         self.mesh = mesh
         self.axis = mesh.axis_names[0]
@@ -729,12 +797,17 @@ class ShardedScheduleExecutor(_ExecutorBase):
         self.ktile = ktile
         self.bf16_accumulate = bf16_accumulate
         self._slot_chunk_arg = slot_chunk
-        self.row_unperm = (None if row_unperm is None
-                           else np.asarray(row_unperm, np.int32))
+        self.row_unperm = (
+            None if row_unperm is None else np.asarray(row_unperm, np.int32)
+        )
         # replicated — the un-permute runs on the psum-merged output
-        self._unperm = (None if self.row_unperm is None
-                        else jax.device_put(jnp.asarray(self.row_unperm),
-                                            NamedSharding(mesh, P())))
+        self._unperm = (
+            None
+            if self.row_unperm is None
+            else jax.device_put(
+                jnp.asarray(self.row_unperm), NamedSharding(mesh, P())
+            )
+        )
         k = sched.nnz_per_step
         r = sched.rows_per_window
         cb = sched.cols_per_block
@@ -748,7 +821,8 @@ class ShardedScheduleExecutor(_ExecutorBase):
 
         def put(x, *tail_spec):
             return jax.device_put(
-                jnp.asarray(x), NamedSharding(mesh, P(self.axis, *tail_spec)))
+                jnp.asarray(x), NamedSharding(mesh, P(self.axis, *tail_spec))
+            )
 
         # ---- one-time host-side split + per-device upload ----------------
         if self.routing == GATHER:
@@ -767,40 +841,45 @@ class ShardedScheduleExecutor(_ExecutorBase):
             def stack(x, fill):
                 out = np.full((n_devices, length + pad), fill, x.dtype)
                 for d, (lo, hi) in enumerate(shards.ranges):
-                    out[d, :(hi - lo) * k] = x[lo * k:hi * k]
-                return put(out.reshape(n_devices, self._n_chunks,
-                                       self._slot_chunk))
+                    out[d, : (hi - lo) * k] = x[lo * k : hi * k]
+                return put(out.reshape(n_devices, self._n_chunks, self._slot_chunk))
 
             self._gcol = stack(gcol, 0)
             self._tgt = stack(tgt, 0)
             self._val = stack(val, 0.0)
-            self.device_bytes = int(self._gcol.nbytes + self._tgt.nbytes
-                                    + self._val.nbytes)
+            self.device_bytes = int(
+                self._gcol.nbytes + self._tgt.nbytes + self._val.nbytes
+            )
             if self._unperm is not None:
                 self.device_bytes += int(self._unperm.nbytes)
         else:
             self._steps = {
-                "val": put(shards.val), "lrow": put(shards.lrow),
-                "lcol": put(shards.lcol), "win": put(shards.win),
+                "val": put(shards.val),
+                "lrow": put(shards.lrow),
+                "lcol": put(shards.lcol),
+                "win": put(shards.win),
                 "cblk": put(shards.cblk),
                 # replicated: the epilogue runs device-local, pre-psum
-                "row_map": jax.device_put(jnp.asarray(sched.row_map),
-                                          NamedSharding(mesh, P())),
+                "row_map": jax.device_put(
+                    jnp.asarray(sched.row_map), NamedSharding(mesh, P())
+                ),
             }
-            self.device_bytes = int(sum(v.nbytes
-                                        for v in self._steps.values()))
+            self.device_bytes = int(sum(v.nbytes for v in self._steps.values()))
             if self._unperm is not None:
                 self.device_bytes += int(self._unperm.nbytes)
 
-        self._spmm_impl = (self._sharded_gather_impl
-                           if self.routing == GATHER
-                           else self._sharded_onehot_impl)
+        self._spmm_impl = (
+            self._sharded_gather_impl
+            if self.routing == GATHER
+            else self._sharded_onehot_impl
+        )
         self._spmm = jax.jit(self._spmm_impl)
         self._forward = jax.jit(self._forward_impl)
 
     @classmethod
-    def _from_repair(cls, old_ex: "ShardedScheduleExecutor",
-                     new_sched: Schedule, repair) -> "ShardedScheduleExecutor":
+    def _from_repair(
+        cls, old_ex: "ShardedScheduleExecutor", new_sched: Schedule, repair
+    ) -> "ShardedScheduleExecutor":
         """Sharded executor for a repaired schedule, re-uploading only the
         device shards whose step range contains a moved/re-emitted step.
 
@@ -811,15 +890,22 @@ class ShardedScheduleExecutor(_ExecutorBase):
         shard buffers via ``make_array_from_single_device_arrays``; the new
         executor is a distinct object with fresh jit closures, and the old
         one keeps serving in-flight batches."""
-        if (old_ex.routing != GATHER or repair.fell_back
-                or repair.step_src is None
-                or getattr(old_ex, "_host", None) is None
-                or new_sched.n_steps != old_ex.sched.n_steps):
-            return cls(new_sched, mesh=old_ex.mesh, ktile=old_ex.ktile,
-                       routing=old_ex.routing,
-                       bf16_accumulate=old_ex.bf16_accumulate,
-                       slot_chunk=old_ex._slot_chunk_arg,
-                       row_unperm=old_ex.row_unperm)
+        if (
+            old_ex.routing != GATHER
+            or repair.fell_back
+            or repair.step_src is None
+            or getattr(old_ex, "_host", None) is None
+            or new_sched.n_steps != old_ex.sched.n_steps
+        ):
+            return cls(
+                new_sched,
+                mesh=old_ex.mesh,
+                ktile=old_ex.ktile,
+                routing=old_ex.routing,
+                bf16_accumulate=old_ex.bf16_accumulate,
+                slot_chunk=old_ex._slot_chunk_arg,
+                row_unperm=old_ex.row_unperm,
+            )
         self = cls.__new__(cls)
         self.mesh = old_ex.mesh
         self.axis = old_ex.axis
@@ -837,13 +923,11 @@ class ShardedScheduleExecutor(_ExecutorBase):
         self._n_chunks = old_ex._n_chunks
 
         k = new_sched.nnz_per_step
-        gcol, tgt, val, moved = _spliced_host_slots(
-            old_ex._host, new_sched, repair)
+        gcol, tgt, val, moved = _spliced_host_slots(old_ex._host, new_sched, repair)
         self._host = (gcol, tgt, val)
         n_devices = self.n_devices
         row_len = self._n_chunks * self._slot_chunk
-        dirty = [bool(np.any(moved[lo:hi]))
-                 for lo, hi in self.step_ranges]
+        dirty = [bool(np.any(moved[lo:hi])) for lo, hi in self.step_ranges]
         devices = list(self.mesh.devices.reshape(-1))
         sharding = NamedSharding(self.mesh, P(self.axis))
         gshape = (n_devices, self._n_chunks, self._slot_chunk)
@@ -858,20 +942,21 @@ class ShardedScheduleExecutor(_ExecutorBase):
                     continue
                 FAULTS.check("upload", device=dev)
                 row = np.full((1, row_len), fill, flat.dtype)
-                row[0, :(hi - lo) * k] = flat[lo * k:hi * k]
-                parts.append(jax.device_put(
-                    jnp.asarray(row.reshape(1, self._n_chunks,
-                                            self._slot_chunk)), dev))
-            return jax.make_array_from_single_device_arrays(
-                gshape, sharding, parts)
+                row[0, : (hi - lo) * k] = flat[lo * k : hi * k]
+                parts.append(
+                    jax.device_put(
+                        jnp.asarray(row.reshape(1, self._n_chunks, self._slot_chunk)),
+                        dev,
+                    )
+                )
+            return jax.make_array_from_single_device_arrays(gshape, sharding, parts)
 
         self._gcol = _restack(old_ex._gcol, gcol, 0)
         self._tgt = _restack(old_ex._tgt, tgt, 0)
         self._val = _restack(old_ex._val, val, 0.0)
         self.scoped_upload = not all(dirty)
         self.dirty_devices = int(sum(dirty))
-        self.device_bytes = int(self._gcol.nbytes + self._tgt.nbytes
-                                + self._val.nbytes)
+        self.device_bytes = int(self._gcol.nbytes + self._tgt.nbytes + self._val.nbytes)
         if self._unperm is not None:
             self.device_bytes += int(self._unperm.nbytes)
         self._spmm_impl = self._sharded_gather_impl
@@ -880,20 +965,28 @@ class ShardedScheduleExecutor(_ExecutorBase):
         return self
 
     @classmethod
-    def _value_patched(cls, old_ex: "ShardedScheduleExecutor",
-                       new_sched: Schedule, slots: np.ndarray,
-                       vals: np.ndarray) -> "ShardedScheduleExecutor":
+    def _value_patched(
+        cls,
+        old_ex: "ShardedScheduleExecutor",
+        new_sched: Schedule,
+        slots: np.ndarray,
+        vals: np.ndarray,
+    ) -> "ShardedScheduleExecutor":
         """Sharded executor for a value-only patched schedule: slot layout
         and step split are identical to ``old_ex``, only ``val`` changed at
         ``slots``. Shares the global ``_gcol``/``_tgt`` arrays and re-uploads
         just the ``_val`` shards of devices whose step range contains a
         changed slot; clean devices keep their existing shard buffers."""
         if old_ex.routing != GATHER or getattr(old_ex, "_host", None) is None:
-            return cls(new_sched, mesh=old_ex.mesh, ktile=old_ex.ktile,
-                       routing=old_ex.routing,
-                       bf16_accumulate=old_ex.bf16_accumulate,
-                       slot_chunk=old_ex._slot_chunk_arg,
-                       row_unperm=old_ex.row_unperm)
+            return cls(
+                new_sched,
+                mesh=old_ex.mesh,
+                ktile=old_ex.ktile,
+                routing=old_ex.routing,
+                bf16_accumulate=old_ex.bf16_accumulate,
+                slot_chunk=old_ex._slot_chunk_arg,
+                row_unperm=old_ex.row_unperm,
+            )
         self = cls.__new__(cls)
         self.mesh = old_ex.mesh
         self.axis = old_ex.axis
@@ -918,8 +1011,10 @@ class ShardedScheduleExecutor(_ExecutorBase):
         k = new_sched.nnz_per_step
         touched_steps = np.unique(np.asarray(slots, np.int64) // k)
         row_len = self._n_chunks * self._slot_chunk
-        dirty = [bool(np.any((touched_steps >= lo) & (touched_steps < hi)))
-                 for lo, hi in self.step_ranges]
+        dirty = [
+            bool(np.any((touched_steps >= lo) & (touched_steps < hi)))
+            for lo, hi in self.step_ranges
+        ]
         devices = list(self.mesh.devices.reshape(-1))
         sharding = NamedSharding(self.mesh, P(self.axis))
         gshape = (self.n_devices, self._n_chunks, self._slot_chunk)
@@ -932,12 +1027,14 @@ class ShardedScheduleExecutor(_ExecutorBase):
                 continue
             FAULTS.check("upload", device=dev)
             row = np.zeros((1, row_len), val.dtype)
-            row[0, :(hi - lo) * k] = val[lo * k:hi * k]
-            parts.append(jax.device_put(
-                jnp.asarray(row.reshape(1, self._n_chunks,
-                                        self._slot_chunk)), dev))
-        self._val = jax.make_array_from_single_device_arrays(
-            gshape, sharding, parts)
+            row[0, : (hi - lo) * k] = val[lo * k : hi * k]
+            parts.append(
+                jax.device_put(
+                    jnp.asarray(row.reshape(1, self._n_chunks, self._slot_chunk)),
+                    dev,
+                )
+            )
+        self._val = jax.make_array_from_single_device_arrays(gshape, sharding, parts)
         self.scoped_upload = True
         self.dirty_devices = int(sum(dirty))
         self.device_bytes = old_ex.device_bytes
@@ -950,8 +1047,9 @@ class ShardedScheduleExecutor(_ExecutorBase):
         # check_rep=False: the bodies end in an explicit psum, which makes
         # the P() output replicated by construction; the static replication
         # checker has no rule for scatter-add on some jax versions.
-        return shard_map(body, mesh=self.mesh, in_specs=in_specs,
-                         out_specs=P(), check_rep=False)
+        return shard_map(
+            body, mesh=self.mesh, in_specs=in_specs, out_specs=P(), check_rep=False
+        )
 
     # ---- jitted bodies -----------------------------------------------------
 
@@ -963,16 +1061,17 @@ class ShardedScheduleExecutor(_ExecutorBase):
         n_chunks = self._n_chunks
 
         def body(gcol, tgt, val, bf):
-            gcol, tgt, val = gcol[0], tgt[0], val[0]   # [n_chunks, chunk]
+            gcol, tgt, val = gcol[0], tgt[0], val[0]  # [n_chunks, chunk]
             out = jnp.zeros((m, bf.shape[1]), acc)
             if n_chunks == 1:
                 g = jnp.take(bf, gcol[0], axis=0) * val[0].astype(acc)[:, None]
                 out = out.at[tgt[0]].add(g)
             else:
+
                 def chunk(i, a_):
-                    g = (jnp.take(bf, gcol[i], axis=0)
-                         * val[i].astype(acc)[:, None])
+                    g = jnp.take(bf, gcol[i], axis=0) * val[i].astype(acc)[:, None]
                     return a_.at[tgt[i]].add(g)
+
                 out = jax.lax.fori_loop(0, n_chunks, chunk, out)
             return jax.lax.psum(out, axis)
 
@@ -994,7 +1093,7 @@ class ShardedScheduleExecutor(_ExecutorBase):
         ncb = -(-n // cb)
 
         def body(win, cblk, val, lrow, lcol, rm, bf):
-            win, cblk = win[0], cblk[0]                # [S] / [S, K]
+            win, cblk = win[0], cblk[0]  # [S] / [S, K]
             val, lrow, lcol = val[0], lrow[0], lcol[0]
             kdim = bf.shape[1]
             bp = jnp.pad(bf, ((0, ncb * cb - n), (0, 0)))
@@ -1002,32 +1101,39 @@ class ShardedScheduleExecutor(_ExecutorBase):
 
             def step(out_perm, s):
                 w, cblk_s, val_s, lrow_s, lcol_s = s
-                bb = bp[cblk_s]                                 # [CB, kdim]
-                gather = (lcol_s[:, None] == jnp.arange(cb)[None, :]
-                          ).astype(acc)                         # [K, CB]
+                bb = bp[cblk_s]  # [CB, kdim]
+                gather = (lcol_s[:, None] == jnp.arange(cb)[None, :]).astype(
+                    acc
+                )  # [K, CB]
                 contrib = (gather @ bb) * val_s.astype(acc)[:, None]
-                scatter = (lrow_s[:, None] == jnp.arange(r)[None, :]
-                           ).astype(acc)                        # [K, R]
+                scatter = (lrow_s[:, None] == jnp.arange(r)[None, :]).astype(
+                    acc
+                )  # [K, R]
                 out_perm = out_perm.at[w].add(scatter.T @ contrib)
                 return out_perm, None
 
             out_perm = jnp.zeros((n_windows, r, kdim), acc)
-            out_perm, _ = jax.lax.scan(step, out_perm,
-                                       (win, cblk, val, lrow, lcol))
+            out_perm, _ = jax.lax.scan(step, out_perm, (win, cblk, val, lrow, lcol))
             # device-local scatter epilogue, then the cross-device adder
             # tree: one psum of [m, kdim] partials
             valid = rm >= 0
-            contrib = jnp.where(valid[:, None],
-                                out_perm.reshape(-1, kdim), 0.0)
-            out = jnp.zeros((m, kdim), acc).at[
-                jnp.where(valid, rm, 0)].add(contrib)
+            contrib = jnp.where(valid[:, None], out_perm.reshape(-1, kdim), 0.0)
+            out = jnp.zeros((m, kdim), acc).at[jnp.where(valid, rm, 0)].add(contrib)
             return jax.lax.psum(out, axis)
 
         fn = self._shard_map(
-            body, (P(axis), P(axis), P(axis), P(axis), P(axis), P(), P()))
+            body, (P(axis), P(axis), P(axis), P(axis), P(axis), P(), P())
+        )
         s = self._steps
-        out = fn(s["win"], s["cblk"], s["val"], s["lrow"], s["lcol"],
-                 s["row_map"], b.astype(acc))
+        out = fn(
+            s["win"],
+            s["cblk"],
+            s["val"],
+            s["lrow"],
+            s["lcol"],
+            s["row_map"],
+            b.astype(acc),
+        )
         if self._unperm is not None:
             out = jnp.take(out, self._unperm, axis=0)
         return out.astype(b.dtype)
@@ -1063,8 +1169,7 @@ def value_patched_executor(old_ex, new_sched: Schedule, slots, vals):
     slots = np.asarray(slots, np.int64)
     vals = np.asarray(vals)
     if isinstance(old_ex, ShardedScheduleExecutor):
-        return ShardedScheduleExecutor._value_patched(
-            old_ex, new_sched, slots, vals)
+        return ShardedScheduleExecutor._value_patched(old_ex, new_sched, slots, vals)
     if isinstance(old_ex, ScheduleExecutor):
         return ScheduleExecutor._value_patched(old_ex, new_sched, slots, vals)
     raise TypeError(f"unsupported executor type: {type(old_ex).__name__}")

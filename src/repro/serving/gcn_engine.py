@@ -259,18 +259,20 @@ class _Part:
 @dataclasses.dataclass
 class _Resident:
     graph_id: str
-    fingerprint: str
+    fingerprint: str  # guarded-by: _swap_lock (persist worker back-fills)
     config: TunedConfig
     sched: Schedule  # host copy — survives eviction
     params_host: dict  # host copy — survives eviction
-    params: Optional[dict] = None  # device-resident weight tree
+    params: Optional[dict] = None  # device weight tree; guarded-by: _swap_lock
     #: ScheduleExecutor or ShardedScheduleExecutor (None while evicted)
-    executor: Optional[object] = None
-    fwd: Optional[callable] = None  # jitted vmapped whole-GCN forward
-    bytes: int = 0  # schedule + weight device bytes
+    executor: Optional[object] = None  # guarded-by: _swap_lock
+    fwd: Optional[callable] = None  # jitted vmapped fwd; guarded-by: _swap_lock
+    bytes: int = 0  # schedule + weight device bytes; guarded-by: _swap_lock
     #: secondary replicas by device index (the primary lives in the
     #: fields above, on the placement's ``device_index``)
-    replicas: Dict[int, _Unit] = dataclasses.field(default_factory=dict)
+    replicas: Dict[int, _Unit] = dataclasses.field(
+        default_factory=dict
+    )  # guarded-by: _swap_lock
     # ---- streaming-update state (DESIGN.md §11) ----
     #: host numpy COO of the graph as currently served (PAD-stripped,
     #: row-major) — the base ``update_graph`` applies edge deltas to
@@ -279,7 +281,7 @@ class _Resident:
     #: ``DeltaReport`` so repair never re-scans the graph
     per_row: Optional[np.ndarray] = None
     kdim: int = 0  # tuning probe width (re-tune fallback reuses it)
-    revision: int = 0  # streaming repair generation (0 = cold build)
+    revision: int = 0  # repair generation, 0 = cold; guarded-by: _swap_lock
     orig_nnz: int = 0  # nnz at the last full (re-)tune
     drift_nnz: int = 0  # cumulative delta entries since then
     #: chained delta fingerprint — the deterministic lineage anchor for
@@ -477,7 +479,9 @@ class GCNServingEngine:
         #: write of a repaired revision run on a worker thread, off the
         #: update hot path (both are O(nnz); the repair itself is O(Δ))
         self._persist_q: "queue_mod.Queue" = queue_mod.Queue()
-        self._persist_thread: Optional[threading.Thread] = None
+        self._persist_thread: Optional[threading.Thread] = (
+            None  # guarded-by: _persist_spawn_lock
+        )
         self._persist_spawn_lock = threading.Lock()
         self._autotune_kwargs = dict(autotune_kwargs or {})
         reserved = {"max_devices", "store"} & set(self._autotune_kwargs)
@@ -550,11 +554,13 @@ class GCNServingEngine:
         p = self.placer.placement_of(gid)
         q = self._pending.get(gid) or []
         has_coo = rec is not None and rec.coo is not None
+        with self._swap_lock:
+            rec_bytes = 0 if rec is None else int(rec.bytes)
         return GraphState(
             graph_id=gid,
             nnz=int(np.asarray(rec.coo.row).shape[0]) if has_coo else 0,
             n_rows=int(rec.coo.shape[0]) if has_coo else 0,
-            bytes=0 if rec is None else int(rec.bytes),
+            bytes=rec_bytes,
             resident=self.placer.is_resident(gid),
             kind=None if p is None else p.kind,
             device_index=None if p is None else p.device_index,
@@ -650,7 +656,7 @@ class GCNServingEngine:
         entry = self.store.load(key)
         warm = entry is not None
         if warm:
-            self.counters["store_hits"] += 1
+            self._count("store_hits")
             cfg, sched, perm = entry
             self._check_route(graph_id, cfg, sharded_route, "stored")
             # the entry's permutation is adopted verbatim — it is the one
@@ -660,7 +666,7 @@ class GCNServingEngine:
             perm, inv = registry.get_reorder(a, cfg.reorder, fingerprint=fp)
             tune_s = 0.0
         else:
-            self.counters["store_misses"] += 1
+            self._count("store_misses")
             cfg = runner.autotune(
                 a,
                 (a.shape[1], kdim),
@@ -744,19 +750,22 @@ class GCNServingEngine:
         if graph_id not in self._graphs:
             raise UnknownGraphError(graph_id, "remove_graph")
         rec = self._graphs.pop(graph_id)
-        for d in list(rec.replicas):
+        with self._swap_lock:
+            replica_devs = list(rec.replicas)
+        for d in replica_devs:
             self._drop_replica(rec, d, shrink=False)
         dropped = self._pending.pop(graph_id, None) or []
         self._ready.pop(graph_id, None)
         self._svc_ewma.pop(graph_id, None)
         self._svc_req_ewma.pop(graph_id, None)
         self._calm_polls.pop(graph_id, None)
-        if rec.executor is not None:
-            self.device_bytes_in_use -= rec.bytes
+        with self._swap_lock:
+            freed = rec.bytes if rec.executor is not None else 0
+        self.device_bytes_in_use -= freed
         self.placer.forget(graph_id)
         release_device_steps(rec.sched)
         if dropped:
-            self.counters["dropped"] += len(dropped)
+            self._count("dropped", len(dropped))
             raise RequestFailure(
                 graph_id,
                 RuntimeError("graph removed while requests were queued"),
@@ -804,18 +813,21 @@ class GCNServingEngine:
         transiently holds old and new copies while in-flight batches keep
         serving on the old closures. Weights are reused in place (an edge
         delta never changes them), so no weight re-upload."""
+        with self._swap_lock:
+            old_ex, params = rec.executor, rec.params
+            old_reps = dict(rec.replicas)
         primary_dev = None if p.kind == SHARDED else p.device_index
-        ex = build(rec.executor, primary_dev)
+        ex = build(old_ex, primary_dev)
         fwd = jax.jit(jax.vmap(ex._forward_impl, in_axes=(None, 0)))
         primary = _Unit(
             primary_dev,
             ex,
             fwd,
-            rec.params,
-            ex.device_bytes + self._weight_bytes(rec.params),
+            params,
+            ex.device_bytes + self._weight_bytes(params),
         )
         reps = {}
-        for d, unit in rec.replicas.items():
+        for d, unit in old_reps.items():
             rex = build(unit.executor, d)
             rfwd = jax.jit(jax.vmap(rex._forward_impl, in_axes=(None, 0)))
             reps[d] = _Unit(
@@ -859,8 +871,8 @@ class GCNServingEngine:
         repair keeps the admission permutation, only the re-tune path
         passes a replacement."""
         old_sched = rec.sched
-        resident = rec.fwd is not None and units is not None
         with self._swap_lock:
+            resident = rec.fwd is not None and units is not None
             rec.coo = coo
             rec.per_row = per_row
             rec.sched = sched
@@ -891,7 +903,7 @@ class GCNServingEngine:
         # they touch no field a dispatch snapshot reads
         release_device_steps(old_sched)
         if resident:
-            self.placer.reaccount(rec.graph_id, rec.bytes)
+            self.placer.reaccount(rec.graph_id, primary.bytes)
             self.device_bytes_in_use += new_total - old_total
             self._evict_over_budget(keep=rec.graph_id)
 
@@ -939,7 +951,7 @@ class GCNServingEngine:
         if report.touched_rows.size:
             per_row = per_row.copy()
             per_row[report.touched_rows] += report.row_nnz_delta
-        self.counters["graph_updates"] += 1
+        self._count("graph_updates")
         rec.drift_nnz += report.n_added + report.n_removed + report.n_updated
         drift = rec.drift_nnz / max(1, rec.orig_nnz)
         lineage = registry.delta_fingerprint(rec.lineage, delta, rec.revision + 1)
@@ -1104,13 +1116,14 @@ class GCNServingEngine:
         later revision swapped in first. The permutation is snapshotted
         here — a later re-tune may replace ``rec.perm`` before the worker
         runs, and the persisted schedule belongs with *this* one."""
-        self._persist_q.put((rec, coo, cfg, sched, rec.perm, rec.revision))
-        if self._persist_thread is None:
-            with self._persist_spawn_lock:
-                if self._persist_thread is None:
-                    t = threading.Thread(target=self._persist_worker, daemon=True)
-                    self._persist_thread = t
-                    t.start()
+        with self._swap_lock:
+            snapshot = (rec, coo, cfg, sched, rec.perm, rec.revision)
+        self._persist_q.put(snapshot)
+        with self._persist_spawn_lock:
+            if self._persist_thread is None:
+                t = threading.Thread(target=self._persist_worker, daemon=True)
+                self._persist_thread = t
+                t.start()
 
     def _persist_worker(self) -> None:
         while True:
@@ -1125,9 +1138,11 @@ class GCNServingEngine:
                 continue
             rec, coo, cfg, sched, perm, revision = task
             try:
-                if rec.revision != revision:
-                    # superseded: a later update already swapped in and
-                    # queued its own persist — skip the stale snapshot
+                with self._swap_lock:
+                    superseded = rec.revision != revision
+                if superseded:
+                    # a later update already swapped in and queued its
+                    # own persist — skip the stale snapshot
                     continue
                 fp2 = registry.graph_fingerprint(coo)
                 self._persist_entry(rec, coo, fp2, cfg, sched, perm)
@@ -1159,7 +1174,7 @@ class GCNServingEngine:
         warm-start when available), published through the same atomic
         swap. Resets the drift accumulator — the new schedule is the new
         baseline."""
-        self.counters["update_retunes"] += 1
+        self._count("update_retunes")
         gid = rec.graph_id
         fp2 = registry.graph_fingerprint(new_coo)
         p = self.placer.placement_of(gid)
@@ -1175,7 +1190,7 @@ class GCNServingEngine:
         )
         entry = self.store.load(key)
         if entry is not None:
-            self.counters["store_hits"] += 1
+            self._count("store_hits")
             cfg, sched, perm2 = entry
             self._check_route(gid, cfg, sharded, "stored")
             registry.adopt_reorder(fp2, cfg.reorder, perm2)
@@ -1183,7 +1198,7 @@ class GCNServingEngine:
                 new_coo, cfg.reorder, fingerprint=fp2
             )
         else:
-            self.counters["store_misses"] += 1
+            self._count("store_misses")
             cfg = runner.autotune(
                 new_coo,
                 (new_coo.shape[1], rec.kdim),
@@ -1271,10 +1286,14 @@ class GCNServingEngine:
     def _admit(self, rec: _Resident) -> None:
         """Ensure ``rec`` is device-resident on its placement (LRU-touch +
         per-device budget sweep + rebalance check)."""
-        if rec.fwd is None:
+        with self._swap_lock:
+            evicted = rec.fwd is None
             first = rec.bytes == 0
+        if evicted:
             cfg = rec.config
             p = self.placer.placement_of(rec.graph_id)
+            # the upload runs outside the swap lock (it is O(bytes) slow);
+            # the four unit fields then publish atomically under it
             if p.kind == SHARDED:
                 ex = ShardedScheduleExecutor(
                     rec.sched,
@@ -1284,19 +1303,21 @@ class GCNServingEngine:
                     bf16_accumulate=cfg.bf16_accumulate,
                     row_unperm=rec.inv,
                 )
-                rec.params = jax.tree.map(jnp.asarray, rec.params_host)
-                rec.executor = ex
-                rec.fwd = jax.jit(jax.vmap(ex._forward_impl, in_axes=(None, 0)))
-                w_bytes = sum(int(x.nbytes) for x in jax.tree.leaves(rec.params))
-                rec.bytes = ex.device_bytes + w_bytes
+                params = jax.tree.map(jnp.asarray, rec.params_host)
+                fwd = jax.jit(jax.vmap(ex._forward_impl, in_axes=(None, 0)))
+                w_bytes = sum(int(x.nbytes) for x in jax.tree.leaves(params))
+                nbytes = ex.device_bytes + w_bytes
             else:
                 unit = self._build_unit(rec, p.device_index)
-                rec.executor, rec.fwd = unit.executor, unit.fwd
-                rec.params, rec.bytes = unit.params, unit.bytes
-            self.placer.account(rec.graph_id, rec.bytes)
-            self.device_bytes_in_use += rec.bytes
+                ex, fwd = unit.executor, unit.fwd
+                params, nbytes = unit.params, unit.bytes
+            with self._swap_lock:
+                rec.executor, rec.fwd = ex, fwd
+                rec.params, rec.bytes = params, nbytes
+            self.placer.account(rec.graph_id, nbytes)
+            self.device_bytes_in_use += nbytes
             if not first:
-                self.counters["readmissions"] += 1
+                self._count("readmissions")
         self._graphs.move_to_end(rec.graph_id)
         self._evict_over_budget(keep=rec.graph_id)
         self._maybe_rebalance(keep=rec.graph_id)
@@ -1311,17 +1332,21 @@ class GCNServingEngine:
         # re-admission restores one clone and replication re-grows on
         # demand). ``pressure=False`` is the rebalance migration: it must
         # not feed the pressure counter it answers.
-        for d in list(rec.replicas):
+        with self._swap_lock:
+            replica_devs = list(rec.replicas)
+        for d in replica_devs:
             self._drop_replica(rec, d, shrink=False)
         if pressure:
             self.placer.note_eviction(rec.graph_id)
-            self.counters["evictions"] += 1
+            self._count("evictions")
         self.placer.unaccount(rec.graph_id)
-        rec.executor = None
-        rec.params = None
-        rec.fwd = None
+        with self._swap_lock:
+            freed = rec.bytes
+            rec.executor = None
+            rec.params = None
+            rec.fwd = None
         release_device_steps(rec.sched)
-        self.device_bytes_in_use -= rec.bytes
+        self.device_bytes_in_use -= freed
         # service EWMAs were measured under this residency (device,
         # replica set, possibly a different route after rebalance); a
         # re-admitted graph must re-measure instead of shedding requests
@@ -1341,18 +1366,21 @@ class GCNServingEngine:
         reuses the converged config and host schedule already in memory
         (same ``TuningStore`` entry), so growth is one upload — no
         sweep, no rebuild."""
-        if rec.fwd is None:
+        with self._swap_lock:
+            resident, nbytes = rec.fwd is not None, rec.bytes
+        if not resident:
             return False
         d = device_index
         if d is None:
-            d = self.placer.replica_candidate(rec.graph_id, rec.bytes)
+            d = self.placer.replica_candidate(rec.graph_id, nbytes)
         if d is None:
             return False
         unit = self._build_unit(rec, d)
         self.placer.add_replica(rec.graph_id, unit.bytes, device_index=d)
-        rec.replicas[d] = unit
+        with self._swap_lock:
+            rec.replicas[d] = unit
         self.device_bytes_in_use += unit.bytes
-        self.counters["replicas_added"] += 1
+        self._count("replicas_added")
         return True
 
     def _drop_replica(
@@ -1361,13 +1389,14 @@ class GCNServingEngine:
         """Release one secondary replica: its executor, weights, jitted
         closure, and — for one-hot executors — exactly its own device's
         memoized step arrays (surviving replicas keep theirs)."""
-        unit = rec.replicas.pop(device_index)
+        with self._swap_lock:
+            unit = rec.replicas.pop(device_index)
         p = self.placer.drop_replica(rec.graph_id, device_index)
         _, handle = self._unit_handle(device_index)
         release_device_steps(rec.sched, device=handle)
         self.device_bytes_in_use -= unit.bytes
         if shrink:
-            self.counters["replicas_dropped"] += 1
+            self._count("replicas_dropped")
         if p.kind == SINGLE:
             # collapsed back to one clone: the EWMAs were measured with
             # batches split across replicas, so they underestimate
@@ -1423,27 +1452,29 @@ class GCNServingEngine:
                 # cheapest first: shed a secondary replica living on this
                 # device (LRU graph first) — its graph's other clones
                 # keep serving, no re-admission cost for anyone
-                rep = next(
-                    (
-                        r
-                        for r in self._graphs.values()
-                        if r.graph_id != keep and d in r.replicas
-                    ),
-                    None,
-                )
+                with self._swap_lock:
+                    rep = next(
+                        (
+                            r
+                            for r in self._graphs.values()
+                            if r.graph_id != keep and d in r.replicas
+                        ),
+                        None,
+                    )
                 if rep is not None:
                     self._drop_replica(rep, d)
                     continue
-                victim = next(
-                    (
-                        r
-                        for r in self._graphs.values()
-                        if r.executor is not None
-                        and r.graph_id != keep
-                        and self.placer.resident_on(r.graph_id, d)
-                    ),
-                    None,
-                )
+                with self._swap_lock:
+                    victim = next(
+                        (
+                            r
+                            for r in self._graphs.values()
+                            if r.executor is not None
+                            and r.graph_id != keep
+                            and self.placer.resident_on(r.graph_id, d)
+                        ),
+                        None,
+                    )
                 if victim is None:
                     break  # only `keep` holds this device; never evicted
                 self._evict(victim)
@@ -1469,14 +1500,17 @@ class GCNServingEngine:
         )
         if victim is None:
             return
-        if victim.executor is not None:
+        with self._swap_lock:
+            resident = victim.executor is not None
+        if resident:
             self._evict(victim, pressure=False)
         self.placer.move(victim.graph_id, cool)
-        self.counters["rebalances"] += 1
+        self._count("rebalances")
 
     @property
     def resident_graphs(self) -> List[str]:
-        return [g for g, r in self._graphs.items() if r.executor is not None]
+        with self._swap_lock:
+            return [g for g, r in self._graphs.items() if r.executor is not None]
 
     @property
     def graphs(self) -> List[str]:
@@ -1598,7 +1632,7 @@ class GCNServingEngine:
             except Exception:
                 if attempt >= self.max_dispatch_retries:
                     raise
-                self.counters["dispatch_retries"] += 1
+                self._count("dispatch_retries")
                 _sleep(delay)
                 delay *= 2
 
@@ -1625,7 +1659,7 @@ class GCNServingEngine:
         units = self._units(rec)
         siblings = [u for u in units if u.executor is not part.unit.executor]
         for unit in sorted(siblings, key=self._outstanding_key):
-            self.counters["chunk_retries"] += 1
+            self._count("chunk_retries")
             retry = _Part(unit.device_index, part.n, part.est)
             self._charge(retry, +1)
             try:
@@ -1733,10 +1767,10 @@ class GCNServingEngine:
         out, part_failures = self._await_batch(graph_id, parts)
         if part_failures:
             n_failed = sum(f.n for f in part_failures)
-            self.counters["request_failures"] += n_failed
+            self._count("request_failures", n_failed)
             raise RequestFailure(graph_id, part_failures[-1].exc, n_failed, partial=out)
-        self.counters["batches"] += 1
-        self.counters["requests"] += sum(p.n for p in parts)
+        self._count("batches")
+        self._count("requests", sum(p.n for p in parts))
         self._note_service(graph_id, time.monotonic() - t0, sum(p.n for p in parts))
         return out
 
@@ -1783,10 +1817,10 @@ class GCNServingEngine:
             )
         if now is None:
             now = time.monotonic()
-        self.counters["submitted"] += 1
+        self._count("submitted")
         depth = len(self._pending.get(graph_id) or ())
         if self.max_queue_depth is not None and depth >= self.max_queue_depth:
-            self.counters["rejected"] += 1
+            self._count("rejected")
             return SubmitTicket(
                 None,
                 REJECTED,
@@ -1799,7 +1833,7 @@ class GCNServingEngine:
                 self._policy_state(now), graph_id, deadline
             )
             if dec.shed:
-                self.counters["shed"] += 1
+                self._count("shed")
                 return SubmitTicket(None, SHED, dec.reason)
         rid = self._next_rid
         self._next_rid += 1
@@ -1963,7 +1997,7 @@ class GCNServingEngine:
                         r.deadline is not None
                         and self.policy.shed_at_dispatch(state, gid, r.deadline).shed
                     ):
-                        self.counters["shed"] += 1
+                        self._count("shed")
                     else:
                         keep.append(r)
                 reqs = keep
@@ -1993,14 +2027,14 @@ class GCNServingEngine:
                 failed = [r for i, r in enumerate(reqs) if i in failed_idx]
                 ok_reqs = [r for i, r in enumerate(reqs) if i not in failed_idx]
                 restore(gid, failed)
-                self.counters["request_failures"] += len(failed)
+                self._count("request_failures", len(failed))
                 failures[gid] = part_failures[-1].exc
             if out is None:
                 continue
             t_done = time.monotonic()
-            self.counters["batches"] += 1
-            self.counters["requests"] += len(ok_reqs)
-            self.counters["queue_served"] += len(ok_reqs)
+            self._count("batches")
+            self._count("requests", len(ok_reqs))
+            self._count("queue_served", len(ok_reqs))
             # service EWMAs fold the *incremental* completion time of this
             # batch: everything was dispatched before anything was
             # awaited, so on shared devices a later batch's await-since-
@@ -2032,9 +2066,19 @@ class GCNServingEngine:
             self._lat_samples.append(lat)
             if r.deadline is not None:
                 key = "deadline_met" if t_done <= r.deadline else "deadline_misses"
-                self.counters[key] += 1
+                self._count(key)
         self._note_service(gid, t_done - t_disp, len(reqs))
 
+    # counter-settlement: *
+    def _count(self, key: str, n: int = 1) -> None:
+        """Single settlement point for ``self.counters`` (the
+        counter-settlement rule of ``repro.analysis`` enforces that every
+        mutation goes through here, a ``finally`` block, or an annotated
+        settlement helper — so a raise mid-path cannot leave the overload
+        accounting identity half-applied)."""
+        self.counters[key] += n
+
+    # counter-settlement: *
     def reset_stats(self) -> None:
         """Zero the counters and latency aggregates (benchmark sections
         and ops dashboards measure deltas; residency state is untouched)."""

@@ -12,6 +12,7 @@ schedules under an LRU byte budget and bypasses these caches). The
 identity-keyed per-schedule cache is a bounded LRU — workloads that build
 throwaway schedules per call must not retain every one forever.
 """
+
 from __future__ import annotations
 
 import hashlib
@@ -24,8 +25,12 @@ from repro.core import csc as fmt
 from repro.core import executor as _exe
 from repro.core import reorder as _reorder
 from repro.core import schedule as _schedule
-from repro.core.executor import (ScheduleExecutor, ShardedScheduleExecutor,
-                                 _ExecutorBase, select_routing)
+from repro.core.executor import (
+    ScheduleExecutor,
+    ShardedScheduleExecutor,
+    _ExecutorBase,
+    select_routing,
+)
 from repro.core.schedule import Schedule
 
 
@@ -87,14 +92,19 @@ def mesh_fingerprint(mesh=None, n_devices: Optional[int] = None):
         if n_devices is not None and n_devices != mesh.devices.size:
             raise ValueError(
                 f"n_devices={n_devices} contradicts the given mesh of "
-                f"{mesh.devices.size} device(s); pass one or the other")
-        return (tuple(mesh.axis_names), tuple(mesh.devices.shape),
-                tuple(int(d.id) for d in mesh.devices.flat))
+                f"{mesh.devices.size} device(s); pass one or the other"
+            )
+        return (
+            tuple(mesh.axis_names),
+            tuple(mesh.devices.shape),
+            tuple(int(d.id) for d in mesh.devices.flat),
+        )
     devs = jax.devices()
     if not 1 <= n_devices <= len(devs):
         raise ValueError(
             f"n_devices={n_devices} but this host exposes "
-            f"{len(devs)} device(s)")
+            f"{len(devs)} device(s)"
+        )
     devs = devs[:n_devices]
     return (("dev",), (len(devs),), tuple(int(d.id) for d in devs))
 
@@ -132,14 +142,27 @@ def clear_caches() -> None:
     runner._AUTOTUNE_CACHE.clear()
 
 
-def _sched_key(fp: str, nnz_per_step, rows_per_window, cols_per_block,
-               window_nnz, balanced, reorder="none"):
-    return (fp, nnz_per_step, rows_per_window, str(cols_per_block),
-            window_nnz, balanced, reorder)
+def _sched_key(
+    fp: str,
+    nnz_per_step,
+    rows_per_window,
+    cols_per_block,
+    window_nnz,
+    balanced,
+    reorder="none",
+):
+    return (
+        fp,
+        nnz_per_step,
+        rows_per_window,
+        str(cols_per_block),
+        window_nnz,
+        balanced,
+        reorder,
+    )
 
 
-def get_reorder(a: fmt.COO, strategy: str,
-                fingerprint: Optional[str] = None):
+def get_reorder(a: fmt.COO, strategy: str, fingerprint: Optional[str] = None):
     """Fingerprint-cached ``(perm, inv)`` for one reorder strategy
     (``core.reorder``) — the permutation is a pure function of graph
     content, so every schedule/executor variant of a graph shares one
@@ -155,8 +178,7 @@ def get_reorder(a: fmt.COO, strategy: str,
     return pair
 
 
-def adopt_reorder(fingerprint: str, strategy: str,
-                  perm: np.ndarray) -> None:
+def adopt_reorder(fingerprint: str, strategy: str, perm: np.ndarray) -> None:
     """Seed the reorder cache with a store entry's persisted permutation,
     so the adopted schedule and the executor's un-permute stay consistent
     even when a fresh recompute would order ties differently (a repaired
@@ -166,7 +188,8 @@ def adopt_reorder(fingerprint: str, strategy: str,
         return
     inv = _reorder.invert_permutation(perm)
     _REORDER_CACHE.setdefault(
-        (fingerprint, strategy), (np.asarray(perm, np.int32), inv))
+        (fingerprint, strategy), (np.asarray(perm, np.int32), inv)
+    )
 
 
 def release_graph(fingerprint: str) -> None:
@@ -188,11 +211,17 @@ def release_graph(fingerprint: str) -> None:
         del _REORDER_CACHE[key]
 
 
-def get_schedule(a: fmt.COO, *, nnz_per_step: int = 256,
-                 rows_per_window: int = 64,
-                 cols_per_block=None, window_nnz: Optional[int] = None,
-                 balanced: bool = True, reorder: str = "none",
-                 fingerprint: Optional[str] = None) -> Schedule:
+def get_schedule(
+    a: fmt.COO,
+    *,
+    nnz_per_step: int = 256,
+    rows_per_window: int = 64,
+    cols_per_block=None,
+    window_nnz: Optional[int] = None,
+    balanced: bool = True,
+    reorder: str = "none",
+    fingerprint: Optional[str] = None,
+) -> Schedule:
     """Fingerprint-cached schedule build — the 'reuse the converged
     configuration' entry point.
 
@@ -201,8 +230,9 @@ def get_schedule(a: fmt.COO, *, nnz_per_step: int = 256,
     (``get_executor`` with the same ``reorder``) un-permutes outputs so
     callers see original row order."""
     fp = fingerprint or graph_fingerprint(a)
-    key = _sched_key(fp, nnz_per_step, rows_per_window, cols_per_block,
-                     window_nnz, balanced, reorder)
+    key = _sched_key(
+        fp, nnz_per_step, rows_per_window, cols_per_block, window_nnz, balanced, reorder
+    )
     sched = _SCHEDULE_CACHE.get(key)
     if sched is None:
         if reorder != _reorder.REORDER_NONE:
@@ -210,12 +240,16 @@ def get_schedule(a: fmt.COO, *, nnz_per_step: int = 256,
             a = fmt.permute_coo(a, perm)
         if balanced:
             sched = _schedule.build_balanced_schedule(
-                a, nnz_per_step, rows_per_window,
-                cols_per_block=cols_per_block, window_nnz=window_nnz)
+                a,
+                nnz_per_step,
+                rows_per_window,
+                cols_per_block=cols_per_block,
+                window_nnz=window_nnz,
+            )
         else:
             sched = _schedule.build_naive_schedule(
-                a, nnz_per_step, rows_per_window,
-                cols_per_block=cols_per_block)
+                a, nnz_per_step, rows_per_window, cols_per_block=cols_per_block
+            )
         _SCHEDULE_CACHE[key] = sched
     return sched
 
@@ -225,25 +259,41 @@ def adopt_schedule(fingerprint: str, cfg, sched: Schedule) -> None:
     subsequent ``get_executor(a, **cfg.as_executor_kwargs())`` is a pure
     cache hit — **zero** ``build_balanced_schedule`` calls on the
     warm-start path."""
-    key = _sched_key(fingerprint, cfg.nnz_per_step, cfg.rows_per_window,
-                     cfg.cols_per_block, cfg.window_nnz, True,
-                     getattr(cfg, "reorder", "none"))
+    key = _sched_key(
+        fingerprint,
+        cfg.nnz_per_step,
+        cfg.rows_per_window,
+        cfg.cols_per_block,
+        cfg.window_nnz,
+        True,
+        getattr(cfg, "reorder", "none"),
+    )
     _SCHEDULE_CACHE.setdefault(key, sched)
 
 
-def get_spmm_schedules(a: fmt.COO, *, nnz_per_step: int = 256,
-                       rows_per_window: int = 64,
-                       cols_per_block=None) -> Tuple[Schedule, Schedule]:
+def get_spmm_schedules(
+    a: fmt.COO,
+    *,
+    nnz_per_step: int = 256,
+    rows_per_window: int = 64,
+    cols_per_block=None,
+) -> Tuple[Schedule, Schedule]:
     """(schedule for A, schedule for Aᵀ), both fingerprint-cached — what a
     differentiable SpMM needs (d(A@B)/dB = Aᵀ @ dC). Call sites stop
     rebuilding both schedules per invocation."""
-    fwd = get_schedule(a, nnz_per_step=nnz_per_step,
-                       rows_per_window=rows_per_window,
-                       cols_per_block=cols_per_block)
+    fwd = get_schedule(
+        a,
+        nnz_per_step=nnz_per_step,
+        rows_per_window=rows_per_window,
+        cols_per_block=cols_per_block,
+    )
     a_t = fmt.transpose_coo(a)
-    bwd = get_schedule(a_t, nnz_per_step=nnz_per_step,
-                       rows_per_window=rows_per_window,
-                       cols_per_block=cols_per_block)
+    bwd = get_schedule(
+        a_t,
+        nnz_per_step=nnz_per_step,
+        rows_per_window=rows_per_window,
+        cols_per_block=cols_per_block,
+    )
     return fwd, bwd
 
 
@@ -253,19 +303,27 @@ def _placement_key(mesh, n_devices, device):
     if device is not None and (mesh is not None or n_devices is not None):
         raise ValueError(
             "device= pins a single-device executor to one placement; it "
-            "cannot be combined with n_devices/mesh")
+            "cannot be combined with n_devices/mesh"
+        )
     return mesh_fingerprint(mesh, n_devices), device_fingerprint(device)
 
 
-def get_executor(a: fmt.COO, *, nnz_per_step: int = 256,
-                 rows_per_window: int = 64, cols_per_block=None,
-                 window_nnz: Optional[int] = None, ktile: int = 128,
-                 routing: Optional[str] = None,
-                 balanced: bool = True,
-                 bf16_accumulate: bool = False,
-                 n_devices: Optional[int] = None,
-                 mesh=None, device=None,
-                 reorder: str = "none") -> _ExecutorBase:
+def get_executor(
+    a: fmt.COO,
+    *,
+    nnz_per_step: int = 256,
+    rows_per_window: int = 64,
+    cols_per_block=None,
+    window_nnz: Optional[int] = None,
+    ktile: int = 128,
+    routing: Optional[str] = None,
+    balanced: bool = True,
+    bf16_accumulate: bool = False,
+    n_devices: Optional[int] = None,
+    mesh=None,
+    device=None,
+    reorder: str = "none",
+) -> _ExecutorBase:
     """Fingerprint-cached executor: the first call converges (builds the
     schedule, uploads it); every later call with the same graph + config is
     a pure cache hit — no rebuild, no host→device transfer.
@@ -278,44 +336,76 @@ def get_executor(a: fmt.COO, *, nnz_per_step: int = 256,
     """
     fp = graph_fingerprint(a)
     mkey, dkey = _placement_key(mesh, n_devices, device)
-    key = (_sched_key(fp, nnz_per_step, rows_per_window, cols_per_block,
-                      window_nnz, balanced, reorder),
-           ktile, routing, bf16_accumulate, mkey, dkey)
+    key = (
+        _sched_key(
+            fp,
+            nnz_per_step,
+            rows_per_window,
+            cols_per_block,
+            window_nnz,
+            balanced,
+            reorder,
+        ),
+        ktile,
+        routing,
+        bf16_accumulate,
+        mkey,
+        dkey,
+    )
     ex = _EXECUTOR_CACHE.get(key)
     if ex is None:
-        sched = get_schedule(a, nnz_per_step=nnz_per_step,
-                             rows_per_window=rows_per_window,
-                             cols_per_block=cols_per_block,
-                             window_nnz=window_nnz, balanced=balanced,
-                             reorder=reorder, fingerprint=fp)
+        sched = get_schedule(
+            a,
+            nnz_per_step=nnz_per_step,
+            rows_per_window=rows_per_window,
+            cols_per_block=cols_per_block,
+            window_nnz=window_nnz,
+            balanced=balanced,
+            reorder=reorder,
+            fingerprint=fp,
+        )
         _, inv = get_reorder(a, reorder, fingerprint=fp)
         if mkey is None:
-            ex = ScheduleExecutor(sched, ktile=ktile, routing=routing,
-                                  bf16_accumulate=bf16_accumulate,
-                                  device=device, row_unperm=inv)
+            ex = ScheduleExecutor(
+                sched,
+                ktile=ktile,
+                routing=routing,
+                bf16_accumulate=bf16_accumulate,
+                device=device,
+                row_unperm=inv,
+            )
         else:
-            ex = ShardedScheduleExecutor(sched, n_devices=n_devices,
-                                         mesh=mesh, ktile=ktile,
-                                         routing=routing,
-                                         bf16_accumulate=bf16_accumulate,
-                                         row_unperm=inv)
+            ex = ShardedScheduleExecutor(
+                sched,
+                n_devices=n_devices,
+                mesh=mesh,
+                ktile=ktile,
+                routing=routing,
+                bf16_accumulate=bf16_accumulate,
+                row_unperm=inv,
+            )
         _EXECUTOR_CACHE[key] = ex
     return ex
 
 
-def executor_for_schedule(sched: Schedule, *, ktile: int = 128,
-                          routing: Optional[str] = None,
-                          bf16_accumulate: bool = False,
-                          n_devices: Optional[int] = None,
-                          mesh=None, device=None) -> _ExecutorBase:
+def executor_for_schedule(
+    sched: Schedule,
+    *,
+    ktile: int = 128,
+    routing: Optional[str] = None,
+    bf16_accumulate: bool = False,
+    n_devices: Optional[int] = None,
+    mesh=None,
+    device=None,
+) -> _ExecutorBase:
     """Executor for a caller-built schedule, memoized per (schedule
     instance, ktile, routing, mesh, device) — identity-keyed, so
     rebuilding a schedule re-uploads while reusing one doesn't, and
     asking for a different routing/ktile/mesh/device never returns a
     mismatched cached executor."""
     routing = routing or select_routing(
-        sched.nnz_per_step, sched.cols_per_block, sched.rows_per_window,
-        ktile)
+        sched.nnz_per_step, sched.cols_per_block, sched.rows_per_window, ktile
+    )
     mkey, dkey = _placement_key(mesh, n_devices, device)
     key = (id(sched), ktile, routing, bf16_accumulate, mkey, dkey)
     ex = _EXEC_BY_SCHEDULE.get(key)
@@ -323,12 +413,22 @@ def executor_for_schedule(sched: Schedule, *, ktile: int = 128,
         _EXEC_BY_SCHEDULE.move_to_end(key)
         return ex
     if mkey is None:
-        ex = ScheduleExecutor(sched, ktile=ktile, routing=routing,
-                              bf16_accumulate=bf16_accumulate, device=device)
+        ex = ScheduleExecutor(
+            sched,
+            ktile=ktile,
+            routing=routing,
+            bf16_accumulate=bf16_accumulate,
+            device=device,
+        )
     else:
-        ex = ShardedScheduleExecutor(sched, n_devices=n_devices, mesh=mesh,
-                                     ktile=ktile, routing=routing,
-                                     bf16_accumulate=bf16_accumulate)
+        ex = ShardedScheduleExecutor(
+            sched,
+            n_devices=n_devices,
+            mesh=mesh,
+            ktile=ktile,
+            routing=routing,
+            bf16_accumulate=bf16_accumulate,
+        )
     _EXEC_BY_SCHEDULE[key] = ex
     if len(_EXEC_BY_SCHEDULE) > _EXEC_BY_SCHEDULE_CAP:
         _EXEC_BY_SCHEDULE.popitem(last=False)

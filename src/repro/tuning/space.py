@@ -12,6 +12,7 @@ variants (the kernel's k-tile width), and **bf16-accumulate** twins of the
 strongest gather geometries (ROADMAP "Autotune breadth"). ``sharded_sweep``
 adds multi-device gather candidates at power-of-two device counts.
 """
+
 from __future__ import annotations
 
 import dataclasses
@@ -47,6 +48,7 @@ class TunedConfig:
     strategy the sweep accepted (``"none" | "degree" | "island"``,
     ``core.reorder``); the executor un-permutes outputs so any accepted
     value is numerically invisible to callers."""
+
     nnz_per_step: int
     rows_per_window: int
     cols_per_block: Union[int, str, None]
@@ -62,41 +64,47 @@ class TunedConfig:
     reorder: str = "none"
 
     def as_executor_kwargs(self) -> dict:
-        return dict(nnz_per_step=self.nnz_per_step,
-                    rows_per_window=self.rows_per_window,
-                    cols_per_block=self.cols_per_block,
-                    window_nnz=self.window_nnz, ktile=self.ktile,
-                    routing=self.routing, n_devices=self.n_devices,
-                    bf16_accumulate=self.bf16_accumulate,
-                    reorder=self.reorder)
+        return dict(
+            nnz_per_step=self.nnz_per_step,
+            rows_per_window=self.rows_per_window,
+            cols_per_block=self.cols_per_block,
+            window_nnz=self.window_nnz,
+            ktile=self.ktile,
+            routing=self.routing,
+            n_devices=self.n_devices,
+            bf16_accumulate=self.bf16_accumulate,
+            reorder=self.reorder,
+        )
 
     def as_schedule_kwargs(self) -> dict:
         """The schedule-geometry subset — what ``get_schedule`` needs to
         reproduce (or cache-seed) the winning schedule."""
-        return dict(nnz_per_step=self.nnz_per_step,
-                    rows_per_window=self.rows_per_window,
-                    cols_per_block=self.cols_per_block,
-                    window_nnz=self.window_nnz,
-                    reorder=self.reorder)
+        return dict(
+            nnz_per_step=self.nnz_per_step,
+            rows_per_window=self.rows_per_window,
+            cols_per_block=self.cols_per_block,
+            window_nnz=self.window_nnz,
+            reorder=self.reorder,
+        )
 
 
-def candidate_executor_kwargs(cand: dict,
-                              default_ktile: int = DEFAULT_KTILE) -> dict:
+def candidate_executor_kwargs(cand: dict, default_ktile: int = DEFAULT_KTILE) -> dict:
     """Normalize a sweep candidate into ``get_executor`` keyword arguments
     (optional axes fall back to their defaults)."""
-    return dict(nnz_per_step=cand["nnz_per_step"],
-                rows_per_window=cand["rows_per_window"],
-                cols_per_block=cand["cols_per_block"],
-                window_nnz=cand["window_nnz"],
-                routing=cand["routing"],
-                ktile=cand.get("ktile", default_ktile),
-                bf16_accumulate=cand.get("bf16_accumulate", False),
-                n_devices=cand.get("n_devices"),
-                reorder=cand.get("reorder", "none"))
+    return dict(
+        nnz_per_step=cand["nnz_per_step"],
+        rows_per_window=cand["rows_per_window"],
+        cols_per_block=cand["cols_per_block"],
+        window_nnz=cand["window_nnz"],
+        routing=cand["routing"],
+        ktile=cand.get("ktile", default_ktile),
+        bf16_accumulate=cand.get("bf16_accumulate", False),
+        n_devices=cand.get("n_devices"),
+        reorder=cand.get("reorder", "none"),
+    )
 
 
-def density_matched_k(a: fmt.COO, rows_per_window: int,
-                      cols_per_block: int) -> int:
+def density_matched_k(a: fmt.COO, rows_per_window: int, cols_per_block: int) -> int:
     """nnz_per_step for a capped one-hot schedule: the expected non-zero
     count of one (rows_per_window × cols_per_block) tile, rounded to a
     power of two ≥ 8 — each (window, block) step then carries ~K real
@@ -107,9 +115,12 @@ def density_matched_k(a: fmt.COO, rows_per_window: int,
     return max(8, int(2 ** np.round(np.log2(expect))))
 
 
-def default_sweep(a: fmt.COO, rows_per_window=(32, 64),
-                  ktiles=KTILE_CANDIDATES,
-                  include_bf16: bool = True) -> list:
+def default_sweep(
+    a: fmt.COO,
+    rows_per_window=(32, 64),
+    ktiles=KTILE_CANDIDATES,
+    include_bf16: bool = True,
+) -> list:
     """Single-device candidate points.
 
     Gather-path geometries at a few step granularities × the ktile axis,
@@ -124,26 +135,52 @@ def default_sweep(a: fmt.COO, rows_per_window=(32, 64),
     for k in (128, 256):
         for r in rows_per_window:
             for kt in ktiles:
-                cand.append(dict(nnz_per_step=k, rows_per_window=r,
-                                 cols_per_block=None, window_nnz=None,
-                                 routing=GATHER, ktile=kt))
+                cand.append(
+                    dict(
+                        nnz_per_step=k,
+                        rows_per_window=r,
+                        cols_per_block=None,
+                        window_nnz=None,
+                        routing=GATHER,
+                        ktile=kt,
+                    )
+                )
             if include_bf16:
-                cand.append(dict(nnz_per_step=k, rows_per_window=r,
-                                 cols_per_block=None, window_nnz=None,
-                                 routing=GATHER, ktile=max(ktiles),
-                                 bf16_accumulate=True))
+                cand.append(
+                    dict(
+                        nnz_per_step=k,
+                        rows_per_window=r,
+                        cols_per_block=None,
+                        window_nnz=None,
+                        routing=GATHER,
+                        ktile=max(ktiles),
+                        bf16_accumulate=True,
+                    )
+                )
             for strat in ("degree", "island"):
-                cand.append(dict(nnz_per_step=k, rows_per_window=r,
-                                 cols_per_block=None, window_nnz=None,
-                                 routing=GATHER, ktile=max(ktiles),
-                                 reorder=strat))
+                cand.append(
+                    dict(
+                        nnz_per_step=k,
+                        rows_per_window=r,
+                        cols_per_block=None,
+                        window_nnz=None,
+                        routing=GATHER,
+                        ktile=max(ktiles),
+                        reorder=strat,
+                    )
+                )
     cb = auto_cols_per_block(n)
     if cb < n:
         for r in rows_per_window:
-            cand.append(dict(nnz_per_step=density_matched_k(a, r, cb),
-                             rows_per_window=r,
-                             cols_per_block="auto", window_nnz=None,
-                             routing=ONEHOT))
+            cand.append(
+                dict(
+                    nnz_per_step=density_matched_k(a, r, cb),
+                    rows_per_window=r,
+                    cols_per_block="auto",
+                    window_nnz=None,
+                    routing=ONEHOT,
+                )
+            )
     return cand
 
 
@@ -156,8 +193,7 @@ MIN_SHARDED_NNZ = 200_000
 MIN_SHARDED_STEPS_PER_DEVICE = 64
 
 
-def sharded_worth_it(a: fmt.COO, n_devices: int,
-                     nnz_per_step: int = 256) -> bool:
+def sharded_worth_it(a: fmt.COO, n_devices: int, nnz_per_step: int = 256) -> bool:
     """Whether a sharded candidate at ``n_devices`` clears the minimum-work
     thresholds for this graph: enough total nnz that the cross-device psum
     can pay for itself, and enough schedule steps that every device gets a
@@ -188,8 +224,9 @@ def sharded_device_counts(max_devices: Optional[int] = None) -> Tuple[int, ...]:
     return tuple(counts)
 
 
-def sharded_sweep(a: fmt.COO, device_counts: tuple,
-                  rows_per_window=(32, 64), *, force: bool = False) -> list:
+def sharded_sweep(
+    a: fmt.COO, device_counts: tuple, rows_per_window=(32, 64), *, force: bool = False
+) -> list:
     """Sharded-executor candidates: the gather path at each device count
     (one-hot shards identically but is never competitive off-TPU, and on
     TPU the kernel sweep covers it).
@@ -203,7 +240,14 @@ def sharded_sweep(a: fmt.COO, device_counts: tuple,
         if not force and not sharded_worth_it(a, d):
             continue
         for r in rows_per_window:
-            cand.append(dict(nnz_per_step=256, rows_per_window=r,
-                             cols_per_block=None, window_nnz=None,
-                             routing=GATHER, n_devices=d))
+            cand.append(
+                dict(
+                    nnz_per_step=256,
+                    rows_per_window=r,
+                    cols_per_block=None,
+                    window_nnz=None,
+                    routing=GATHER,
+                    n_devices=d,
+                )
+            )
     return cand

@@ -1,0 +1,8 @@
+# expect: counter-settlement
+# An ad-hoc counter bump outside a settlement helper or finally block.
+class Engine:
+    def __init__(self):
+        self.counters = {"served": 0}
+
+    def serve(self):
+        self.counters["served"] += 1

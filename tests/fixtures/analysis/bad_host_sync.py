@@ -1,0 +1,10 @@
+# expect: jax-host-sync
+# .item() on a value derived from a traced argument forces a
+# device-to-host sync (taint must propagate through the assignment).
+import jax
+
+
+@jax.jit
+def entry(x):
+    y = x + 1
+    return y.item()

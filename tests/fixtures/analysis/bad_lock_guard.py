@@ -1,0 +1,12 @@
+# expect: lock-guard
+# A guarded-by:-annotated field touched outside its lock.
+import threading
+
+
+class Engine:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._state = 0  # guarded-by: _lock
+
+    def bump(self):
+        self._state += 1

@@ -1,0 +1,15 @@
+# expect: lock-order
+# Acquiring an earlier-declared lock while holding a later one inverts
+# the canonical (declaration) order — the deadlock recipe.
+import threading
+
+
+class Engine:
+    def __init__(self):
+        self._first = threading.Lock()
+        self._second = threading.Lock()
+
+    def inverted(self):
+        with self._second:
+            with self._first:
+                return 1

@@ -1,0 +1,11 @@
+# expect: jax-mutable-global
+# Reading a module-level mutable container inside a jit body bakes its
+# trace-time contents into the compiled function.
+import jax
+
+_CACHE = {"scale": 2.0}
+
+
+@jax.jit
+def entry(x):
+    return x * _CACHE["scale"]

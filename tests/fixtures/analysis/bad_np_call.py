@@ -1,0 +1,14 @@
+# expect: jax-np-call
+# A numpy call inside a body reached *transitively* from a jit site:
+# the call-graph walk must pull `helper` into the checked set.
+import jax
+import numpy as np
+
+
+@jax.jit
+def entry(x):
+    return helper(x)
+
+
+def helper(x):
+    return np.tanh(x)

@@ -1,0 +1,10 @@
+# expect: jax-traced-branch
+# Python control flow on a traced argument raises at trace time.
+import jax
+
+
+@jax.jit
+def entry(x, flag):
+    if flag:
+        return x
+    return -x

@@ -1,0 +1,15 @@
+# expect: none
+# Counters may move inside an annotated settlement helper or a finally.
+class Engine:
+    def __init__(self):
+        self.counters = {"served": 0, "failed": 0}
+
+    # counter-settlement: served
+    def _settle(self, n=1):
+        self.counters["served"] += n
+
+    def serve_risky(self):
+        try:
+            return 1
+        finally:
+            self.counters["failed"] += 1

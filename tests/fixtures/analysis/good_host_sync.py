@@ -1,0 +1,9 @@
+# expect: none
+# float()/len() on static metadata is host data, not a tracer sync.
+import jax
+
+
+@jax.jit
+def entry(x):
+    scale = float(len(x.shape))
+    return x * scale

@@ -1,0 +1,22 @@
+# expect: none
+# The same field, accessed under its lock — including through a typed
+# container lookup on another instance.
+import threading
+
+
+class Record:
+    value: int = 0  # guarded-by: _lock
+
+
+class Engine:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._state = 0  # guarded-by: _lock
+        self._records: "dict[str, Record]" = {}
+
+    def bump(self, key):
+        with self._lock:
+            self._state += 1
+            rec = self._records.get(key)
+            if rec is not None:
+                rec.value += 1

@@ -1,0 +1,14 @@
+# expect: none
+# Nested acquisition in declaration order is legal.
+import threading
+
+
+class Engine:
+    def __init__(self):
+        self._first = threading.Lock()
+        self._second = threading.Lock()
+
+    def ordered(self):
+        with self._first:
+            with self._second:
+                return 1

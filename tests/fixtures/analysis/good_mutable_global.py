@@ -1,0 +1,10 @@
+# expect: none
+# Immutable module constants are fine to close over.
+import jax
+
+SCALE = 2.0
+
+
+@jax.jit
+def entry(x):
+    return x * SCALE

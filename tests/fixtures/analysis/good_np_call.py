@@ -1,0 +1,13 @@
+# expect: none
+# numpy in host-side code a jit site never reaches stays legal.
+import jax
+import numpy as np
+
+
+def host_prep(x):
+    return np.asarray(x, dtype=np.float32)
+
+
+@jax.jit
+def entry(x):
+    return x * 2.0

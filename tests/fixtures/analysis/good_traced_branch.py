@@ -1,0 +1,15 @@
+# expect: none
+# Branching on static_argnames-bound params and on static metadata
+# (.ndim) is legal — the values are Python data at trace time.
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def entry(x, causal):
+    if causal:
+        return x
+    if x.ndim == 2:
+        return -x
+    return x

@@ -1,0 +1,383 @@
+"""The `repro.analysis` static-analysis subsystem (DESIGN.md §14):
+fixture-proven rule coverage (every rule fires on its bad fixture and
+stays silent on its good twin), the jit-site call-graph walk, waiver
+matching + staleness, the CLI contract, and the repo-tree invariant the
+CI lint job gates on (zero unwaived findings with the committed
+waivers). Pure stdlib — no jax required."""
+import ast
+import re
+import textwrap
+
+import pytest
+
+from repro.analysis import __main__ as cli
+from repro.analysis import callgraph, counters, driver, jax_hazards, locks
+from repro.analysis.findings import Finding, load_waivers, split_findings
+from repro.analysis.modules import ModuleInfo
+
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = REPO / "tests" / "fixtures" / "analysis"
+WAIVERS = REPO / "src" / "repro" / "analysis" / "waivers.toml"
+
+_EXPECT_RE = re.compile(r"#\s*expect:\s*(.*)")
+
+
+def _module(source, path="<test>.py"):
+    return ModuleInfo(path, textwrap.dedent(source))
+
+
+def _expected_rules(path):
+    for line in path.read_text().splitlines()[:5]:
+        m = _EXPECT_RE.search(line)
+        if m:
+            names = m.group(1).strip()
+            if names.lower() == "none":
+                return set()
+            return {n.strip() for n in names.split(",") if n.strip()}
+    raise AssertionError(f"{path} has no # expect: header")
+
+
+# ---- fixtures: every rule fires on bad, stays silent on good ------------
+
+
+@pytest.mark.parametrize(
+    "fixture", sorted(FIXTURES.glob("*.py")), ids=lambda p: p.stem
+)
+def test_fixture_triggers_exactly_its_rules(fixture):
+    expected = _expected_rules(fixture)
+    fired = {f.rule for f in driver.analyze_file(fixture)}
+    assert fired == expected
+
+
+def test_every_rule_has_a_bad_fixture():
+    covered = set()
+    for fixture in FIXTURES.glob("bad_*.py"):
+        covered |= _expected_rules(fixture)
+    assert covered == set(driver.ALL_RULES)
+
+
+def test_self_check_passes_on_committed_fixtures():
+    assert driver.self_check(FIXTURES) == []
+
+
+def test_self_check_fails_on_empty_dir(tmp_path):
+    assert driver.self_check(tmp_path)  # "no fixtures found"
+
+
+def test_self_check_requires_expect_header(tmp_path):
+    (tmp_path / "f.py").write_text("x = 1\n")
+    problems = driver.self_check(tmp_path)
+    assert any("missing `# expect:`" in p for p in problems)
+
+
+def test_self_check_rejects_unknown_rule(tmp_path):
+    (tmp_path / "f.py").write_text("# expect: no-such-rule\n")
+    problems = driver.self_check(tmp_path)
+    assert any("unknown rules" in p for p in problems)
+
+
+# ---- call-graph walk -----------------------------------------------------
+
+
+def test_jit_roots_decorator_partial_and_wrapping_call():
+    mod = _module(
+        """
+        import functools
+        import jax
+
+        @jax.jit
+        def a(x):
+            return x
+
+        @functools.partial(jax.jit, static_argnames=("k",))
+        def b(x, k):
+            return x
+
+        def c(x):
+            return x
+
+        cc = jax.jit(c)
+        """
+    )
+    roots = {r.func.qualname: r for r in callgraph.find_jit_roots(mod)}
+    assert set(roots) == {"a", "b", "c"}
+    assert roots["b"].static_argnames == frozenset({"k"})
+
+
+def test_reachability_follows_references_and_method_aliases():
+    mod = _module(
+        """
+        import jax
+
+        def helper(x):
+            return x
+
+        class Ex:
+            def __init__(self, gather):
+                self._impl = self._gather if gather else self._onehot
+                self._fn = jax.jit(self._impl)
+
+            def _gather(self, x):
+                return helper(x)
+
+            def _onehot(self, x):
+                return x
+        """
+    )
+    reach = callgraph.jit_reachable(mod)
+    assert {"Ex._gather", "Ex._onehot", "helper"} <= set(reach)
+    assert not reach["helper"].is_root
+
+
+def test_nested_function_root_resolves_by_bare_name():
+    mod = _module(
+        """
+        import jax
+
+        def make():
+            def step(x):
+                return x
+            return jax.jit(step)
+        """
+    )
+    assert "make.step" in callgraph.jit_reachable(mod)
+
+
+# ---- hazard pass ---------------------------------------------------------
+
+
+def test_static_argnames_suppress_traced_branch():
+    mod = _module(
+        """
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("flag",))
+        def f(x, flag):
+            if flag:
+                return x
+            if x:
+                return -x
+            return x
+        """
+    )
+    found = [f for f in jax_hazards.check_module(mod)]
+    assert len(found) == 1 and found[0].rule == "jax-traced-branch"
+    assert "if" in found[0].message and found[0].line == 9
+
+
+def test_taint_cleared_by_static_metadata():
+    mod = _module(
+        """
+        import jax
+
+        @jax.jit
+        def f(x):
+            n = x.shape[0]
+            if n > 4:
+                return x
+            return float(n)
+        """
+    )
+    assert jax_hazards.check_module(mod) == []
+
+
+def test_helper_kwonly_params_are_static_but_root_kwonly_are_traced():
+    mod = _module(
+        """
+        import jax
+
+        @jax.jit
+        def root(x, *, mode):
+            if mode:
+                return helper(x, flip=True)
+            return x
+
+        def helper(x, *, flip):
+            if flip:
+                return -x
+            return x
+        """
+    )
+    found = jax_hazards.check_module(mod)
+    assert [f.symbol for f in found] == ["root"]
+
+
+# ---- lock pass -----------------------------------------------------------
+
+
+def test_guard_comment_on_multiline_declaration():
+    mod = _module(
+        """
+        import threading
+
+        class E:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._slow: object = (
+                    None  # guarded-by: _lock
+                )
+
+            def poke(self):
+                return self._slow
+        """
+    )
+    assert locks.collect_guarded(mod) == {"E": {"_slow": "_lock"}}
+    found = locks.check_module(mod)
+    assert [f.rule for f in found] == ["lock-guard"]
+
+
+def test_lock_order_from_declaration_order():
+    mod = _module(
+        """
+        import threading
+
+        class E:
+            def __init__(self):
+                self._a = threading.Lock()
+                self._b = threading.Lock()
+        """
+    )
+    assert locks.lock_declaration_order(mod) == ["_a", "_b"]
+
+
+def test_constructor_fresh_objects_exempt():
+    mod = _module(
+        """
+        import threading
+
+        class Rec:
+            value: int = 0  # guarded-by: _lock
+
+        class E:
+            def __init__(self):
+                self._lock = threading.Lock()
+
+            def fresh(self):
+                rec = Rec()
+                rec.value = 3
+                return rec
+        """
+    )
+    assert locks.check_module(mod) == []
+
+
+# ---- counter pass --------------------------------------------------------
+
+
+def test_named_settlement_list_only_covers_named_counters():
+    mod = _module(
+        """
+        class E:
+            def __init__(self):
+                self.counters = {"a": 0, "b": 0}
+
+            # counter-settlement: a
+            def settle(self):
+                self.counters["a"] += 1
+                self.counters["b"] += 1
+        """
+    )
+    found = counters.check_module(mod)
+    assert len(found) == 1 and "counters['b']" in found[0].message
+
+
+def test_dict_swap_through_name_is_not_a_mutation():
+    mod = _module(
+        """
+        class E:
+            def grab(self):
+                fresh = {}
+                out, self.counters = self.counters, fresh
+                return out
+        """
+    )
+    # tuple-target reassignment from a Name: a swap, not a settlement
+    assert counters.check_module(mod) == []
+
+
+# ---- waivers -------------------------------------------------------------
+
+
+def _finding(rule="lock-guard", path="src/x.py", symbol="E.m", line=3):
+    return Finding(rule=rule, path=path, line=line, symbol=symbol, message="m")
+
+
+def test_waiver_matches_by_suffix_and_reports_stale(tmp_path):
+    toml = tmp_path / "w.toml"
+    toml.write_text(
+        '[[waiver]]\nrule = "lock-guard"\npath = "x.py"\n'
+        'symbol = "E.m"\nreason = "by design"\n'
+        '[[waiver]]\nrule = "lock-order"\npath = "gone.py"\n'
+        'symbol = "E.n"\nreason = "stale entry"\n'
+    )
+    waivers = load_waivers(toml)
+    unwaived, waived, stale = split_findings([_finding()], waivers)
+    assert not unwaived and len(waived) == 1
+    assert [w.path for w in stale] == ["gone.py"]
+
+
+def test_waiver_requires_reason(tmp_path):
+    toml = tmp_path / "w.toml"
+    toml.write_text('[[waiver]]\nrule = "lock-guard"\npath = "x.py"\nsymbol = "s"\n')
+    with pytest.raises(ValueError):
+        load_waivers(toml)
+
+
+# ---- CLI + repo-tree invariant ------------------------------------------
+
+
+def test_cli_list_rules(capsys):
+    assert cli.main(["--list-rules"]) == 0
+    out = capsys.readouterr().out.split()
+    assert set(out) == set(driver.ALL_RULES)
+
+
+def test_cli_exit_one_on_findings(capsys):
+    rc = cli.main([str(FIXTURES / "bad_counter.py"), "--no-waivers"])
+    assert rc == 1
+    assert "counter-settlement" in capsys.readouterr().out
+
+
+def test_cli_json_output(capsys):
+    import json
+
+    rc = cli.main([str(FIXTURES / "bad_np_call.py"), "--no-waivers", "--json"])
+    assert rc == 1
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["unwaived"][0]["rule"] == "jax-np-call"
+
+
+def test_repo_tree_has_no_unwaived_findings():
+    report = driver.run_analysis(
+        [str(REPO / "src"), str(REPO / "benchmarks")], WAIVERS
+    )
+    assert report.errors == []
+    assert [f.render() for f in report.unwaived] == []
+    assert report.stale_waivers == []
+    # the engine waivers are real (still matching) — not dead weight
+    assert report.waived, "expected the documented by-design waivers to match"
+
+
+def test_engine_annotations_are_registered():
+    """The gcn_engine annotations parse into the guarded-field map the
+    dynamic mode shares (single source of truth)."""
+    path = REPO / "src" / "repro" / "serving" / "gcn_engine.py"
+    mod = ModuleInfo(str(path), path.read_text())
+    guarded = locks.collect_guarded(mod)
+    assert guarded["_Resident"] == {
+        "fingerprint": "_swap_lock",
+        "params": "_swap_lock",
+        "executor": "_swap_lock",
+        "fwd": "_swap_lock",
+        "bytes": "_swap_lock",
+        "replicas": "_swap_lock",
+        "revision": "_swap_lock",
+    }
+    assert guarded["GCNServingEngine"] == {"_persist_thread": "_persist_spawn_lock"}
+    assert locks.lock_declaration_order(mod) == [
+        "_swap_lock",
+        "_persist_spawn_lock",
+    ]

@@ -1,0 +1,201 @@
+"""Runtime race-assertion mode (`repro.analysis.dynamic`, DESIGN.md
+§14): the guarded() wrapper swaps the engine's locks for owner-tracking
+ones and patches the annotated record classes so an unguarded write to
+a swap-protected field is caught *as it happens*. The thread-fuzz here
+drives concurrent update_graph + infer + submit/poll traffic and must
+stay violation-free (the lock-discipline regression test for the
+dispatch-vs-swap paths); the seeded twin proves the harness actually
+catches a deliberately unguarded write."""
+import threading
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.analysis.dynamic import (OwnedLock, RaceViolation,  # noqa: E402
+                                    guarded)
+from repro.core import csc, executor as exe, gcn  # noqa: E402
+from repro.graphs import synth  # noqa: E402
+from repro.serving.gcn_engine import GCNServingEngine  # noqa: E402
+from repro.tuning import registry  # noqa: E402
+
+N_NODES = 120
+N_FEATS = 12
+N_CLASSES = 4
+
+FAST_KW = dict(
+    iters=1,
+    warmup=1,
+    sweep=[
+        dict(nnz_per_step=64, rows_per_window=32, cols_per_block=None,
+             window_nnz=None, routing=exe.GATHER),
+    ],
+    bf16_report=False,
+)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    registry.clear_caches()
+    yield
+    registry.clear_caches()
+
+
+def _engine_with_graph(root, gid="g"):
+    a = synth.power_law_adjacency(N_NODES, 0.04, 0.9, seed=7)
+    cfg = gcn.GCNConfig(N_FEATS, 8, N_CLASSES)
+    params = gcn.init_params(cfg, jax.random.PRNGKey(7))
+    eng = GCNServingEngine(store_root=root, autotune_kwargs=FAST_KW)
+    eng.add_graph(gid, a, params)
+    x = np.random.default_rng(7).random((N_NODES, N_FEATS)).astype(np.float32)
+    return eng, a, x
+
+
+def _value_delta(coo, k, rng):
+    row = np.asarray(coo.row)
+    col = np.asarray(coo.col)
+    idx = rng.choice(row.shape[0], size=min(k, row.shape[0]), replace=False)
+    vals = (rng.random(idx.shape[0]) + 0.5).astype(np.float32)
+    return csc.EdgeDelta(row[idx], col[idx], vals)
+
+
+def _run_threads(workers):
+    errors = []
+
+    def wrap(fn):
+        def run():
+            try:
+                fn()
+            except Exception as e:  # pragma: no cover - surfaced via assert
+                errors.append(e)
+
+        return run
+
+    threads = [threading.Thread(target=wrap(fn), name=name)
+               for name, fn in workers]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120.0)
+    assert not any(t.is_alive() for t in threads), "fuzz worker hung"
+    return errors
+
+
+def test_owned_lock_tracks_holder():
+    lock = OwnedLock()
+    assert not lock.held_by_me() and not lock.locked()
+    with lock:
+        assert lock.held_by_me() and lock.locked()
+        seen = []
+        t = threading.Thread(target=lambda: seen.append(lock.held_by_me()))
+        t.start()
+        t.join()
+        assert seen == [False]
+    assert not lock.held_by_me() and not lock.locked()
+
+
+def test_thread_fuzz_clean(tmp_path):
+    """Concurrent updates + sync serves + queued traffic under the race
+    assertions: the engine's own lock discipline must produce zero
+    violations. This is the regression test for the dispatch/poll
+    executor-read paths racing update_graph's swap."""
+    eng, a, x = _engine_with_graph(tmp_path)
+    rounds = 12
+
+    def updater():
+        rng = np.random.default_rng(1)
+        for _ in range(rounds):
+            eng.update_graph("g", _value_delta(a, 6, rng))
+
+    def server():
+        for _ in range(rounds):
+            out = eng.infer("g", x)
+            assert np.asarray(out).shape == (N_NODES, N_CLASSES)
+
+    def poller():
+        for _ in range(rounds):
+            eng.submit("g", x)
+            eng.poll()
+        eng.flush()
+
+    with guarded(eng) as g:
+        errors = _run_threads(
+            [("updater", updater), ("server", server), ("poller", poller)]
+        )
+        eng.drain_persists()
+    assert errors == []
+    assert [v.render() for v in g.violations] == []
+
+
+def test_thread_fuzz_catches_seeded_unguarded_write(tmp_path):
+    """The same fuzz plus a rogue thread writing a guarded field without
+    the lock — the harness must catch it (proves the assertions are
+    armed, not vacuously green)."""
+    eng, a, x = _engine_with_graph(tmp_path)
+    rec = eng._graphs["g"]
+
+    def rogue():
+        rec.bytes = rec.bytes + 0  # unguarded write to a published record
+
+    def server():
+        for _ in range(4):
+            eng.infer("g", x)
+
+    with guarded(eng) as g:
+        errors = _run_threads([("rogue", rogue), ("server", server)])
+    assert errors == []
+    assert any(
+        v.cls == "_Resident" and v.field == "bytes" and v.lock == "_swap_lock"
+        for v in g.violations
+    ), [v.render() for v in g.violations]
+
+
+def test_strict_mode_raises_at_the_faulting_write(tmp_path):
+    eng, _a, _x = _engine_with_graph(tmp_path)
+    rec = eng._graphs["g"]
+    with guarded(eng, strict=True):
+        with pytest.raises(RaceViolation, match="_swap_lock"):
+            rec.fwd = rec.fwd
+    # after exit the patch is gone: the same write is silent again
+    rec.fwd = rec.fwd
+
+
+def test_guarded_scope_restores_engine_state(tmp_path):
+    eng, a, x = _engine_with_graph(tmp_path)
+    plain_swap = eng._swap_lock
+    with guarded(eng):
+        assert isinstance(eng._swap_lock, OwnedLock)
+        out = eng.infer("g", x)  # engine fully functional while armed
+        assert np.asarray(out).shape == (N_NODES, N_CLASSES)
+    assert eng._swap_lock is plain_swap
+    assert "__setattr__" not in type(eng._graphs["g"]).__dict__
+
+
+def test_concurrent_update_and_infer_outputs_stay_valid(tmp_path):
+    """Functional face of the same regression: every serve during a
+    storm of swaps returns a well-formed, finite output (no torn
+    executor set, no missing executor)."""
+    eng, a, x = _engine_with_graph(tmp_path)
+    stop = threading.Event()
+
+    def updater():
+        rng = np.random.default_rng(2)
+        while not stop.is_set():
+            eng.update_graph("g", _value_delta(a, 4, rng))
+
+    outs = []
+
+    def server():
+        try:
+            for _ in range(20):
+                outs.append(np.asarray(eng.infer("g", x)))
+        finally:
+            stop.set()
+
+    errors = _run_threads([("updater", updater), ("server", server)])
+    eng.drain_persists()
+    assert errors == []
+    assert len(outs) == 20
+    for out in outs:
+        assert out.shape == (N_NODES, N_CLASSES) and np.isfinite(out).all()

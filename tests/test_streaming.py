@@ -724,6 +724,47 @@ def test_gate_learned_head_to_head():
     assert any("MISSING" in p and "steady_learned" in p for p in problems)
 
 
+def test_gate_pred_err_ceiling_scaled_by_reference():
+    # when 3x the reference exceeds the 150% absolute floor the scaled
+    # ceiling governs: reference at 60% -> ceiling 180%
+    ref = _gate_payload(smoke=False, **{
+        "openloop/steady_learned/pred_err": dict(us_per_call=60.0)})
+    at = _gate_payload(**{"openloop/steady_learned/pred_err": dict(
+        us_per_call=180.0)})
+    assert gate.check(at, ref, tolerance=3.0) == []
+    above = _gate_payload(**{"openloop/steady_learned/pred_err": dict(
+        us_per_call=180.1)})
+    problems = gate.check(above, ref, tolerance=3.0)
+    assert any("REGRESSION" in p and "3x reference 60%" in p
+               for p in problems)
+
+
+def test_gate_pred_err_absolute_ceiling_without_reference_row():
+    # a reference trajectory that predates the learned policy carries no
+    # pred_err row: the 150% absolute ceiling applies, exactly-at passes
+    ref = dict(smoke=False,
+               rows=[r for r in _gate_rows()
+                     if r["name"] != "openloop/steady_learned/pred_err"])
+    at = _gate_payload(**{"openloop/steady_learned/pred_err": dict(
+        us_per_call=150.0)})
+    assert gate.check(at, ref, tolerance=3.0) == []
+    above = _gate_payload(**{"openloop/steady_learned/pred_err": dict(
+        us_per_call=150.1)})
+    problems = gate.check(above, ref, tolerance=3.0)
+    assert any("REGRESSION" in p and "absolute ceiling" in p
+               for p in problems)
+
+
+def test_gate_pred_err_missing_scored_count_is_degenerate():
+    # a derived string with no n_scored= at all vouches for nothing,
+    # same verdict as n_scored=0 -- and never a parse crash
+    blank = _gate_payload(**{"openloop/steady_learned/pred_err": dict(
+        derived="fitted=1")})
+    problems = gate.check(blank, _gate_payload(smoke=False), tolerance=3.0)
+    assert any(p.startswith("DEGENERATE") and "pred_err" in p
+               for p in problems)
+
+
 def test_gate_accounting_identity():
     ref = _gate_payload(smoke=False)
     bad = _gate_payload(**{"openloop/steady/goodput": dict(
